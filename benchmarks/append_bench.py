@@ -1,0 +1,58 @@
+"""Concurrent relative appends (§2.5): commuting appends must not abort
+each other; throughput scales with appenders instead of serializing."""
+from __future__ import annotations
+
+import threading
+import time
+
+from .common import Scale, save_result, wtf_cluster
+
+
+def run(scale: Scale) -> dict:
+    n_appenders = scale.n_clients
+    n_appends = 64
+    payload = b"a" * (64 << 10)
+    rows = []
+    for n in (1, n_appenders):
+        with wtf_cluster(scale) as cluster:
+            clients = [cluster.client() for _ in range(n)]
+            fs0 = clients[0]
+            fd0 = fs0.open("/log", "w")
+            fs0.close(fd0)
+
+            def work(i):
+                c = clients[i]
+                fd = c.open("/log", "a")       # append mode: no truncate
+                for _ in range(n_appends):
+                    c.append(fd, payload)
+                c.close(fd)
+
+            threads = [threading.Thread(target=work, args=(i,))
+                       for i in range(n)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            secs = time.perf_counter() - t0
+            size = clients[0].file_length("/log")
+            expect = n * n_appends * len(payload)
+            assert size == expect, (size, expect)
+            kv = cluster.kv.stats.snapshot()
+            rows.append({"appenders": n,
+                         "appends_per_s": n * n_appends / secs,
+                         "throughput_mbs": expect / secs / 1e6,
+                         "kv_conflicts": kv.get("conflicts", 0)})
+            print(f"[append] {n} appenders: "
+                  f"{rows[-1]['appends_per_s']:.0f} appends/s, "
+                  f"{rows[-1]['throughput_mbs']:.0f} MB/s, "
+                  f"kv_conflicts={rows[-1]['kv_conflicts']}")
+    out = {"rows": rows,
+           "parallel_speedup": rows[-1]["appends_per_s"]
+           / max(rows[0]["appends_per_s"], 1e-9)}
+    save_result("append_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

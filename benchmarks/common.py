@@ -1,0 +1,125 @@
+"""Shared benchmark scaffolding: clusters, timing, I/O accounting, result
+persistence.
+
+The paper's 15-node/100 GB experiments scale to the container via
+`--scale`: bytes moved is the primary metric (hardware-independent, exactly
+Table 2's accounting), wall-clock is secondary.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import statistics
+import tempfile
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+from repro.baselines import HdfsLikeCluster
+from repro.core import Cluster
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+
+
+@dataclass
+class Scale:
+    """quick: CI-sized; full: a few GB (still minutes, not hours)."""
+    name: str = "quick"
+    total_bytes: int = 64 << 20
+    record_bytes: int = 64 << 10
+    key_bytes: int = 10
+    n_servers: int = 4
+    n_clients: int = 4
+    region_size: int = 4 << 20
+    block_size: int = 4 << 20          # HDFS-like block (paper: 64 MB)
+
+    @staticmethod
+    def of(name: str) -> "Scale":
+        if name == "full":
+            return Scale("full", total_bytes=1 << 30,
+                         record_bytes=512 << 10, n_servers=8, n_clients=8,
+                         region_size=16 << 20, block_size=16 << 20)
+        return Scale()
+
+
+class Timer:
+    def __init__(self):
+        self.laps: Dict[str, float] = {}
+
+    @contextmanager
+    def lap(self, name: str):
+        t0 = time.perf_counter()
+        yield
+        self.laps[name] = self.laps.get(name, 0.0) \
+            + time.perf_counter() - t0
+
+    @property
+    def total(self) -> float:
+        return sum(self.laps.values())
+
+
+@contextmanager
+def wtf_cluster(scale: Scale, replication: int = 1):
+    d = tempfile.mkdtemp(prefix="wtf_bench_")
+    c = Cluster(n_servers=scale.n_servers, data_dir=d,
+                replication=replication, region_size=scale.region_size)
+    try:
+        yield c
+    finally:
+        c.close()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+@contextmanager
+def hdfs_cluster(scale: Scale, replication: int = 1):
+    d = tempfile.mkdtemp(prefix="hdfs_bench_")
+    c = HdfsLikeCluster(n_servers=scale.n_servers, data_dir=d,
+                        replication=replication,
+                        block_size=scale.block_size)
+    try:
+        yield c
+    finally:
+        c.close()
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def wtf_io(cluster: Cluster) -> Dict[str, int]:
+    s = cluster.total_stats()
+    return {"bytes_read": s["data_bytes_read"],
+            "bytes_written": s["data_bytes_written"]}
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(p / 100 * len(xs)))
+    return xs[i]
+
+
+def lat_summary(lat_s: List[float]) -> dict:
+    return {
+        "median_ms": percentile(lat_s, 50) * 1e3,
+        "p5_ms": percentile(lat_s, 5) * 1e3,
+        "p95_ms": percentile(lat_s, 95) * 1e3,
+        "p99_ms": percentile(lat_s, 99) * 1e3,
+        "mean_ms": (statistics.mean(lat_s) * 1e3) if lat_s else 0.0,
+        "n": len(lat_s),
+    }
+
+
+def save_result(name: str, payload: dict) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"

@@ -1,0 +1,97 @@
+"""Beyond-paper: the WTF substrate under the training stack.
+
+  * zero-copy global shuffle of a token dataset (epoch files) vs a naive
+    read-everything/rewrite shuffle;
+  * incremental checkpointing (slice sharing) and zero-copy RESHARD
+    (256→512-host style re-partition) vs full rewrite.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.records import RecordFile, write_token_shard
+from repro.data.shuffle import shuffle_epoch
+
+from .common import Scale, fmt_bytes, save_result, wtf_cluster, wtf_io
+
+
+def run(scale: Scale) -> dict:
+    out = {}
+    block_tokens = 512
+    n_tokens = min(scale.total_bytes // 8, 2 << 20)
+    with wtf_cluster(scale) as cluster:
+        fs = cluster.client()
+        fs.mkdir("/data")
+        rng = np.random.RandomState(0)
+        spec = write_token_shard(fs, "/data/shard0",
+                                 iter(rng.randint(0, 50000, n_tokens)),
+                                 block_tokens)
+        cluster.reset_io_stats()
+
+        t0 = time.perf_counter()
+        n_shuffled = shuffle_epoch(fs, ["/data/shard0"], "/data/epoch0",
+                                   block_tokens * 4, seed=1)
+        secs = time.perf_counter() - t0
+        assert n_shuffled == spec.count
+        io = wtf_io(cluster)
+        out["shuffle"] = {
+            "records": spec.count, "wall_s": secs,
+            "data_bytes_moved": io["bytes_read"] + io["bytes_written"],
+            "naive_bytes": 2 * spec.count * spec.record_bytes,
+        }
+        print(f"[pipeline] zero-copy shuffle of {spec.count} records: "
+              f"{fmt_bytes(out['shuffle']['data_bytes_moved'])} moved "
+              f"(naive: {fmt_bytes(out['shuffle']['naive_bytes'])}), "
+              f"{secs:.2f}s")
+
+        # ---- checkpoint: save, incremental save, reshard.  All four
+        # "hosts" write their shards; host 0 commits last (the barrier).
+        mgr = CheckpointManager(fs, "/ckpt")
+        tree = {"w": np.random.RandomState(1).rand(256, 1024),
+                "b": np.random.RandomState(2).rand(1024),
+                "frozen": np.random.RandomState(3).rand(512, 512)}
+
+        def save_all_hosts(step, t, prev=None):
+            stats = None
+            for h in (1, 2, 3, 0):
+                s = mgr.save(step, t, host_id=h, num_hosts=4,
+                             prev_step=prev)
+                if h == 0:
+                    stats = s
+                else:
+                    stats = s if stats is None else {
+                        k: stats.get(k, 0) + v for k, v in s.items()}
+            return stats
+
+        s1 = save_all_hosts(100, tree)
+        tree2 = dict(tree)
+        tree2["w"] = tree["w"] + 1.0          # only w changed
+        s2 = save_all_hosts(200, tree2, prev=100)
+        cluster.reset_io_stats()
+        t0 = time.perf_counter()
+        mgr.reshard(200, new_shards=8, dst_step=300)
+        rs = time.perf_counter() - t0
+        io = wtf_io(cluster)
+        restored = mgr.restore(tree2, step=300)
+        assert np.allclose(restored["w"], tree2["w"])
+        out["checkpoint"] = {
+            "full_save_bytes": s1["bytes_written"],
+            "incremental_save_bytes": s2["bytes_written"],
+            "incremental_shared_bytes": s2["bytes_shared"],
+            "reshard_data_bytes": io["bytes_read"] + io["bytes_written"],
+            "reshard_wall_s": rs,
+        }
+        print(f"[pipeline] ckpt full={fmt_bytes(s1['bytes_written'])} "
+              f"incr={fmt_bytes(s2['bytes_written'])} "
+              f"(shared {fmt_bytes(s2['bytes_shared'])}); 4→8-host "
+              f"reshard moved {fmt_bytes(out['checkpoint']['reshard_data_bytes'])} "
+              f"in {rs:.2f}s")
+    save_result("pipeline_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

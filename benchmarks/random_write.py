@@ -1,0 +1,72 @@
+"""Random-offset writes (Figs 9-10).  HDFS cannot express this workload at
+all (the paper's point) — WTF's sequential write is the baseline."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from .common import (Scale, fmt_bytes, lat_summary, save_result,
+                     wtf_cluster, wtf_io)
+
+WRITE_SIZES = [256 << 10, 1 << 20, 4 << 20]
+
+
+def run(scale: Scale) -> dict:
+    out = {"write_sizes": [], "scale": scale.name}
+    file_bytes = scale.total_bytes // scale.n_clients
+    for ws in WRITE_SIZES:
+        row = {"write_size": ws}
+        for mode in ("seq", "random"):
+            with wtf_cluster(scale) as cluster:
+                clients = [cluster.client()
+                           for _ in range(scale.n_clients)]
+                # preallocate files so random offsets land inside
+                for i, c in enumerate(clients):
+                    fd = c.open(f"/f{i}", "w")
+                    c.write(fd, b"\0" * file_bytes)
+                    c.close(fd)
+                cluster.reset_io_stats()
+                lats: List[List[float]] = [[] for _ in clients]
+
+                def work(i):
+                    c = clients[i]
+                    fd = c.open(f"/f{i}", "r+")   # overwrite, no truncate
+                    rng = np.random.RandomState(i)
+                    buf = b"r" * ws
+                    n = file_bytes // ws
+                    for j in range(n):
+                        off = (j * ws if mode == "seq" else
+                               int(rng.randint(0, max(1, file_bytes - ws))))
+                        t0 = time.perf_counter()
+                        c.pwrite(fd, buf, off)
+                        lats[i].append(time.perf_counter() - t0)
+                    c.close(fd)
+
+                threads = [threading.Thread(target=work, args=(i,))
+                           for i in range(len(clients))]
+                t0 = time.perf_counter()
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                secs = time.perf_counter() - t0
+                io = wtf_io(cluster)
+                row[mode] = {
+                    "throughput_mbs": io["bytes_written"] / secs / 1e6,
+                    **lat_summary([x for l in lats for x in l])}
+        row["random_vs_seq"] = (row["random"]["throughput_mbs"]
+                                / max(row["seq"]["throughput_mbs"], 1e-9))
+        out["write_sizes"].append(row)
+        print(f"[random_write] {fmt_bytes(ws)}: seq "
+              f"{row['seq']['throughput_mbs']:.0f} MB/s | random "
+              f"{row['random']['throughput_mbs']:.0f} MB/s | ratio "
+              f"{row['random_vs_seq']:.2f} (paper: ≥0.5)")
+    save_result("random_write", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

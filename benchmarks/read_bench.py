@@ -1,0 +1,104 @@
+"""Sequential and random read throughput (Figs 11-12), WTF vs HDFS-like."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from .common import (Scale, fmt_bytes, hdfs_cluster, lat_summary,
+                     save_result, wtf_cluster, wtf_io)
+
+READ_SIZES = [256 << 10, 1 << 20, 4 << 20]
+
+
+def _drive(n_clients, file_bytes, read_size, mode, mk_reader):
+    lats: List[List[float]] = [[] for _ in range(n_clients)]
+
+    def work(i):
+        read = mk_reader(i)
+        rng = np.random.RandomState(i)
+        n = file_bytes // read_size
+        for j in range(n):
+            off = (j * read_size if mode == "seq" else
+                   int(rng.randint(0, max(1, file_bytes - read_size))))
+            t0 = time.perf_counter()
+            read(off, read_size)
+            lats[i].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, [x for l in lats for x in l]
+
+
+def run(scale: Scale) -> dict:
+    out = {"modes": {}, "scale": scale.name}
+    file_bytes = scale.total_bytes // scale.n_clients
+    for mode in ("seq", "random"):
+        rows = []
+        for rs in READ_SIZES:
+            row = {"read_size": rs}
+            with wtf_cluster(scale) as cluster:
+                clients = [cluster.client()
+                           for _ in range(scale.n_clients)]
+                for i, c in enumerate(clients):
+                    fd = c.open(f"/f{i}", "w")
+                    c.write(fd, np.random.RandomState(i)
+                            .bytes(file_bytes))
+                    c.close(fd)
+                cluster.reset_io_stats()
+                fds = [c.open(f"/f{i}", "r")
+                       for i, c in enumerate(clients)]
+
+                def wtf_reader(i):
+                    return lambda off, n: clients[i].pread(fds[i], n, off)
+
+                secs, lats = _drive(scale.n_clients, file_bytes, rs, mode,
+                                    wtf_reader)
+                io = wtf_io(cluster)
+                row["wtf"] = {
+                    "throughput_mbs": io["bytes_read"] / secs / 1e6,
+                    **lat_summary(lats)}
+            with hdfs_cluster(scale) as cluster:
+                fs = cluster.client()
+                for i in range(scale.n_clients):
+                    fs.write_all(f"/f{i}", np.random.RandomState(i)
+                                 .bytes(file_bytes))
+                base = cluster.io_stats()
+
+                def hdfs_reader(i):
+                    r = fs.open(f"/f{i}")
+
+                    def read(off, n):
+                        r.seek(off)
+                        return r.read(n)
+                    return read
+
+                secs, lats = _drive(scale.n_clients, file_bytes, rs, mode,
+                                    hdfs_reader)
+                io = cluster.io_stats()
+                row["hdfs"] = {
+                    "throughput_mbs": (io["bytes_read"] - base["bytes_read"])
+                    / secs / 1e6, **lat_summary(lats)}
+            row["wtf_vs_hdfs"] = (row["wtf"]["throughput_mbs"]
+                                  / max(row["hdfs"]["throughput_mbs"],
+                                        1e-9))
+            rows.append(row)
+            print(f"[read/{mode}] {fmt_bytes(rs)}: WTF "
+                  f"{row['wtf']['throughput_mbs']:.0f} MB/s | HDFS "
+                  f"{row['hdfs']['throughput_mbs']:.0f} MB/s | ratio "
+                  f"{row['wtf_vs_hdfs']:.2f} "
+                  f"(paper: ≥0.8 seq, ≥1 random-small)")
+        out["modes"][mode] = rows
+    save_result("read_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

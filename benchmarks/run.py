@@ -1,0 +1,67 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  python -m benchmarks.run [--scale quick|full] [--only sort,gc,...]
+
+Writes benchmarks/results/<name>.json per benchmark and prints a summary
+validating each reproduction claim against the paper.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import Scale
+
+BENCHES = {
+    "sort": ("Table 2 + Figs 4-5 (map-reduce sort, file slicing)",
+             "benchmarks.sort_mapreduce"),
+    "single_server": ("Fig 6 (one-node baseline vs local FS)",
+                      "benchmarks.single_server"),
+    "seq_write": ("Figs 7-8 (sequential write throughput/latency)",
+                  "benchmarks.seq_write"),
+    "random_write": ("Figs 9-10 (random-offset writes)",
+                     "benchmarks.random_write"),
+    "read": ("Figs 11-12 (sequential/random reads)",
+             "benchmarks.read_bench"),
+    "scaling": ("Figs 13-14 (client scaling)", "benchmarks.scaling"),
+    "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
+    "append": ("§2.5 (concurrent relative appends)",
+               "benchmarks.append_bench"),
+    "pipeline": ("beyond-paper (shuffle/checkpoint/reshard zero-copy)",
+                 "benchmarks.pipeline_bench"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick", choices=["quick", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                    + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    scale = Scale.of(args.scale)
+    names = (args.only.split(",") if args.only else list(BENCHES))
+
+    t0 = time.time()
+    failures = []
+    for name in names:
+        desc, mod_name = BENCHES[name]
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        try:
+            import importlib
+            mod = importlib.import_module(mod_name)
+            mod.run(scale)
+        except Exception as e:                    # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n[benchmarks] done in {time.time() - t0:.0f}s; "
+          f"{len(names) - len(failures)}/{len(names)} passed")
+    for name, err in failures:
+        print(f"[benchmarks] FAILED {name}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Throughput/latency as the number of writers grows (Figs 13-14)."""
+from __future__ import annotations
+
+from .common import Scale, lat_summary, save_result, wtf_cluster, wtf_io
+from .seq_write import _drive_writers
+
+WRITE_SIZE = 4 << 20
+
+
+def run(scale: Scale) -> dict:
+    rows = []
+    for n in (1, 2, scale.n_clients, scale.n_clients * 2):
+        with wtf_cluster(scale) as cluster:
+            clients = [cluster.client() for _ in range(n)]
+            fds = [c.open(f"/s{i}", "w") for i, c in enumerate(clients)]
+
+            def writer(i):
+                return lambda buf: clients[i].write(fds[i], buf)
+
+            secs, lats = _drive_writers(n, scale.total_bytes, WRITE_SIZE,
+                                        writer)
+            io = wtf_io(cluster)
+            rows.append({"clients": n,
+                         "throughput_mbs": io["bytes_written"] / secs / 1e6,
+                         **lat_summary(lats)})
+            print(f"[scaling] {n} clients: "
+                  f"{rows[-1]['throughput_mbs']:.0f} MB/s, median "
+                  f"{rows[-1]['median_ms']:.1f}ms")
+    out = {"rows": rows, "scale": scale.name,
+           "saturates": rows[-1]["throughput_mbs"]
+           < 1.5 * rows[-2]["throughput_mbs"]}
+    save_result("scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

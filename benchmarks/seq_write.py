@@ -1,0 +1,85 @@
+"""Sequential write throughput/latency vs write size (Figs 7-8)."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+from .common import (Scale, fmt_bytes, hdfs_cluster, lat_summary,
+                     save_result, wtf_cluster, wtf_io)
+
+WRITE_SIZES = [256 << 10, 1 << 20, 4 << 20]
+
+
+def _drive_writers(n_clients, total_bytes, write_size, mk_writer):
+    """Concurrent fixed-size sequential writers; returns (s, latencies)."""
+    per_client = total_bytes // n_clients
+    lats: List[List[float]] = [[] for _ in range(n_clients)]
+
+    def work(i):
+        write = mk_writer(i)
+        done = 0
+        buf = b"w" * write_size
+        while done < per_client:
+            t0 = time.perf_counter()
+            write(buf)
+            lats[i].append(time.perf_counter() - t0)
+            done += write_size
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, [x for l in lats for x in l]
+
+
+def run(scale: Scale) -> dict:
+    out = {"write_sizes": [], "scale": scale.name}
+    for ws in WRITE_SIZES:
+        row = {"write_size": ws}
+        with wtf_cluster(scale) as cluster:
+            clients = [cluster.client() for _ in range(scale.n_clients)]
+            fds = [c.open(f"/w{i}", "w") for i, c in enumerate(clients)]
+
+            def wtf_writer(i):
+                return lambda buf: clients[i].write(fds[i], buf)
+
+            secs, lats = _drive_writers(scale.n_clients, scale.total_bytes,
+                                        ws, wtf_writer)
+            io = wtf_io(cluster)
+            row["wtf"] = {"throughput_mbs": io["bytes_written"] / secs / 1e6,
+                          "wall_s": secs, **lat_summary(lats)}
+        with hdfs_cluster(scale) as cluster:
+            fs = cluster.client()
+            writers = [fs.create(f"/w{i}")
+                       for i in range(scale.n_clients)]
+
+            def hdfs_writer(i):
+                def w(buf):
+                    writers[i].write(buf)
+                    writers[i].hflush()     # paper's parity setting
+                return w
+
+            secs, lats = _drive_writers(scale.n_clients, scale.total_bytes,
+                                        ws, hdfs_writer)
+            io = cluster.io_stats()
+            row["hdfs"] = {"throughput_mbs": io["bytes_written"] / secs / 1e6,
+                           "wall_s": secs, **lat_summary(lats)}
+        row["wtf_vs_hdfs"] = (row["wtf"]["throughput_mbs"]
+                              / max(row["hdfs"]["throughput_mbs"], 1e-9))
+        out["write_sizes"].append(row)
+        print(f"[seq_write] {fmt_bytes(ws)}: WTF "
+              f"{row['wtf']['throughput_mbs']:.0f} MB/s "
+              f"(med {row['wtf']['median_ms']:.1f}ms) | HDFS "
+              f"{row['hdfs']['throughput_mbs']:.0f} MB/s "
+              f"(med {row['hdfs']['median_ms']:.1f}ms) | ratio "
+              f"{row['wtf_vs_hdfs']:.2f} (paper: ≥0.84)")
+    save_result("seq_write", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

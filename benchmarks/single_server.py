@@ -1,0 +1,91 @@
+"""Single-server baseline vs the raw local filesystem (Fig 6): the local
+FS bounds what any distributed FS on one node can do; the gap is the
+system's overhead."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from .common import (Scale, fmt_bytes, hdfs_cluster, save_result,
+                     wtf_cluster, wtf_io)
+
+CHUNK = 1 << 20
+
+
+def _local_fs(total: int) -> dict:
+    d = tempfile.mkdtemp(prefix="ext4_base_")
+    path = os.path.join(d, "f")
+    buf = b"l" * CHUNK
+    t0 = time.perf_counter()
+    with open(path, "wb", buffering=0) as f:
+        for _ in range(total // CHUNK):
+            f.write(buf)
+    w = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    with open(path, "rb", buffering=0) as f:
+        while f.read(CHUNK):
+            pass
+    r = time.perf_counter() - t0
+    os.unlink(path)
+    return {"write_mbs": total / w / 1e6, "read_mbs": total / r / 1e6}
+
+
+def run(scale: Scale) -> dict:
+    total = scale.total_bytes
+    one = Scale(**{**scale.__dict__, "n_servers": 1, "n_clients": 1})
+    out = {"local": _local_fs(total)}
+
+    with wtf_cluster(one) as cluster:
+        fs = cluster.client()
+        fd = fs.open("/f", "w")
+        buf = b"w" * CHUNK
+        t0 = time.perf_counter()
+        for _ in range(total // CHUNK):
+            fs.write(fd, buf)
+        w = time.perf_counter() - t0
+        fs.close(fd)
+        fd = fs.open("/f", "r")
+        t0 = time.perf_counter()
+        off = 0
+        while off < total:
+            fs.pread(fd, CHUNK, off)
+            off += CHUNK
+        r = time.perf_counter() - t0
+        out["wtf"] = {"write_mbs": total / w / 1e6,
+                      "read_mbs": total / r / 1e6}
+
+    with hdfs_cluster(one) as cluster:
+        fs = cluster.client()
+        wtr = fs.create("/f")
+        t0 = time.perf_counter()
+        for _ in range(total // CHUNK):
+            wtr.write(buf)
+            wtr.hflush()
+        w = time.perf_counter() - t0
+        wtr.close()
+        rdr = fs.open("/f")
+        t0 = time.perf_counter()
+        off = 0
+        while off < total:
+            rdr.seek(off)
+            rdr.read(CHUNK)
+            off += CHUNK
+        r = time.perf_counter() - t0
+        out["hdfs"] = {"write_mbs": total / w / 1e6,
+                       "read_mbs": total / r / 1e6}
+
+    for k in ("local", "wtf", "hdfs"):
+        print(f"[single_server] {k:6s}: write "
+              f"{out[k]['write_mbs']:.0f} MB/s, read "
+              f"{out[k]['read_mbs']:.0f} MB/s")
+    out["wtf_frac_of_local_write"] = (out["wtf"]["write_mbs"]
+                                      / out["local"]["write_mbs"])
+    save_result("single_server", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of("quick"))

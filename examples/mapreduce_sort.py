@@ -1,0 +1,25 @@
+"""The paper's flagship application (§4.1): map-reduce sort via file
+slicing vs the conventional read-rewrite pipeline.
+
+  PYTHONPATH=src python examples/mapreduce_sort.py [--mb 64]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from benchmarks.common import Scale
+from benchmarks.sort_mapreduce import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mb", type=int, default=64)
+    args = ap.parse_args()
+    scale = Scale(total_bytes=args.mb << 20)
+    run(scale)
+
+
+if __name__ == "__main__":
+    main()

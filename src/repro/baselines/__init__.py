@@ -1,0 +1,3 @@
+from .hdfs_like import HdfsLikeClient, HdfsLikeCluster
+
+__all__ = ["HdfsLikeClient", "HdfsLikeCluster"]

@@ -1,0 +1,225 @@
+"""HDFS-semantics baseline filesystem — the paper's comparison system.
+
+Reproduces the *interface restrictions* that drive Table 2's I/O
+accounting, on top of the same StorageServer data nodes as WTF (so
+`bytes_read`/`bytes_written` are directly comparable):
+
+  * block-based files (fixed block size, default 64 MB — §4's setting);
+  * append-only: no random writes, no punch/yank/paste/concat — any file
+    transformation must move data through the client;
+  * single writer per file; `hflush` makes data visible to readers
+    (the paper's feature-parity configuration);
+  * a central "name node" (in-process dict) maps file → block list —
+    the centralized-metadata design WTF's HyperDex replaces.
+
+Not reproduced: Java, RPC stacks, rack awareness — irrelevant to the I/O
+accounting this baseline exists for.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.errors import NotFound, AlreadyExists, WtfError
+from repro.core.placement import HashRing
+from repro.core.slicing import SlicePointer
+from repro.core.storage import StorageServer
+
+DEFAULT_BLOCK_SIZE = 64 << 20
+
+
+@dataclass
+class _BlockMeta:
+    ptrs: List[SlicePointer]        # replicas
+    length: int
+
+
+@dataclass
+class _FileMeta:
+    blocks: List[_BlockMeta] = field(default_factory=list)
+    length: int = 0
+    closed: bool = True
+
+
+class HdfsLikeCluster:
+    """Name node + data nodes.  Data nodes are WTF storage servers —
+    blocks are stored as slices, which is exactly how HDFS blocks map to
+    local files on a data node."""
+
+    def __init__(self, n_servers: int = 4, data_dir: str = "/tmp/hdfs",
+                 replication: int = 1,
+                 block_size: int = DEFAULT_BLOCK_SIZE):
+        import os
+        self.block_size = block_size
+        self.replication = replication
+        self.servers: Dict[int, StorageServer] = {}
+        for sid in range(n_servers):
+            root = os.path.join(data_dir, f"dn_{sid:03d}")
+            self.servers[sid] = StorageServer(sid, root)
+        self._ring = HashRing(list(self.servers))
+        self._files: Dict[str, _FileMeta] = {}
+        self._lock = threading.Lock()
+
+    def client(self) -> "HdfsLikeClient":
+        return HdfsLikeClient(self)
+
+    def io_stats(self) -> dict:
+        out = {"bytes_read": 0, "bytes_written": 0}
+        for s in self.servers.values():
+            st = s.stats.snapshot()
+            out["bytes_read"] += st["bytes_read"]
+            out["bytes_written"] += st["bytes_written"]
+        return out
+
+    def close(self) -> None:
+        for s in self.servers.values():
+            s.close()
+
+
+class HdfsLikeClient:
+    def __init__(self, cluster: HdfsLikeCluster):
+        self.c = cluster
+
+    # --------------------------------------------------------------- write
+    def create(self, path: str) -> "_Writer":
+        with self.c._lock:
+            if path in self.c._files:
+                raise AlreadyExists(path)
+            self.c._files[path] = _FileMeta(closed=False)
+        return _Writer(self, path)
+
+    def append_open(self, path: str) -> "_Writer":
+        with self.c._lock:
+            meta = self.c._files.get(path)
+            if meta is None:
+                raise NotFound(path)
+            if not meta.closed:
+                raise WtfError(f"{path}: already open for write "
+                               "(single-writer semantics)")
+            meta.closed = False
+        w = _Writer(self, path)
+        # reopen the last partial block by re-reading it (HDFS re-writes
+        # the open block on append — the behavior behind the append bug
+        # the paper works around)
+        meta = self.c._files[path]
+        if meta.blocks and meta.blocks[-1].length < self.c.block_size:
+            last = meta.blocks.pop()
+            meta.length -= last.length
+            w._buf = bytearray(self._read_block(last))
+        return w
+
+    # ---------------------------------------------------------------- read
+    def open(self, path: str) -> "_Reader":
+        meta = self.c._files.get(path)
+        if meta is None:
+            raise NotFound(path)
+        return _Reader(self, path)
+
+    def _read_block(self, blk: _BlockMeta) -> bytes:
+        for ptr in blk.ptrs:
+            srv = self.c.servers.get(ptr.server_id)
+            if srv is not None and srv.alive:
+                return srv.retrieve_slice(ptr)
+        raise WtfError("no live replica")
+
+    def length(self, path: str) -> int:
+        meta = self.c._files.get(path)
+        if meta is None:
+            raise NotFound(path)
+        return meta.length
+
+    def exists(self, path: str) -> bool:
+        return path in self.c._files
+
+    def listdir(self, prefix: str) -> List[str]:
+        prefix = prefix.rstrip("/") + "/"
+        return sorted(p for p in self.c._files if p.startswith(prefix))
+
+    def delete(self, path: str) -> None:
+        with self.c._lock:
+            self.c._files.pop(path, None)
+
+    # ------------------------------------------------------------- helpers
+    def read_all(self, path: str) -> bytes:
+        r = self.open(path)
+        return r.read(self.length(path))
+
+    def write_all(self, path: str, data: bytes) -> None:
+        w = self.create(path)
+        w.write(data)
+        w.close()
+
+    def concat(self, sources: List[str], dest: str) -> None:
+        """HDFS-style concat: data moves through the client."""
+        w = self.create(dest)
+        for s in sources:
+            w.write(self.read_all(s))
+        w.close()
+
+
+class _Writer:
+    def __init__(self, client: HdfsLikeClient, path: str):
+        self.client = client
+        self.path = path
+        self._buf = bytearray()
+
+    def write(self, data: bytes) -> int:
+        self._buf.extend(data)
+        while len(self._buf) >= self.client.c.block_size:
+            self._flush_block(self.client.c.block_size)
+        return len(data)
+
+    def hflush(self) -> None:
+        """Make buffered data visible (paper's parity setting): seals the
+        current partial block."""
+        if self._buf:
+            self._flush_block(len(self._buf))
+
+    def _flush_block(self, n: int) -> None:
+        c = self.client.c
+        data = bytes(self._buf[:n])
+        del self._buf[:n]
+        blk_idx = len(c._files[self.path].blocks)
+        ptrs = []
+        servers = c._ring.owners(f"{self.path}#{blk_idx}", c.replication)
+        for sid in servers:
+            ptrs.append(c.servers[sid].create_slice(data))
+        with c._lock:
+            meta = c._files[self.path]
+            meta.blocks.append(_BlockMeta(ptrs=ptrs, length=len(data)))
+            meta.length += len(data)
+
+    def close(self) -> None:
+        self.hflush()
+        self.client.c._files[self.path].closed = True
+
+
+class _Reader:
+    def __init__(self, client: HdfsLikeClient, path: str):
+        self.client = client
+        self.path = path
+        self.pos = 0
+
+    def seek(self, pos: int) -> None:
+        self.pos = pos
+
+    def read(self, size: int) -> bytes:
+        c = self.client.c
+        meta = c._files[self.path]
+        out = bytearray()
+        while size > 0 and self.pos < meta.length:
+            # locate block
+            off = 0
+            for blk in meta.blocks:
+                if self.pos < off + blk.length:
+                    data = self.client._read_block(blk)
+                    take = min(size, off + blk.length - self.pos)
+                    out.extend(data[self.pos - off:self.pos - off + take])
+                    self.pos += take
+                    size -= take
+                    break
+                off += blk.length
+            else:
+                break
+        return bytes(out)

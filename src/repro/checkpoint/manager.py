@@ -1,0 +1,267 @@
+"""Transactional distributed checkpointing on WTF.
+
+Why a transactional filesystem is the right substrate for checkpoints at
+scale:
+
+* **Atomic multi-host commit.** Each host writes its shard files; the final
+  ``commit`` transaction writes the manifest and flips ``latest`` in one
+  atomic action.  A reader (restarting job, evaluator) either sees a
+  complete checkpoint or the previous one — never a torn one.  Slices are
+  durable *before* the metadata commit (§2.1), so the commit is pure
+  metadata regardless of checkpoint size.
+* **Incremental checkpoints for free.** Unchanged leaves (content digest
+  match vs. the previous step) are ``copy``'d — slice sharing, zero data
+  I/O (frozen embeddings, optimizer ints, EMA shadows...).
+* **Zero-copy resharding.** Changing the device topology (elastic scaling)
+  re-partitions each leaf's flat byte range with ``yank``/``paste``
+  arithmetic — no data rewrite of multi-TB checkpoints.
+* **Retention = unlink.** Dropped checkpoints become storage-server garbage
+  that the paper's tier-3 GC reclaims sparsely.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import NotFound, WtfClient
+from .serialize import (bytes_to_leaf, decode_manifest, encode_manifest,
+                        flatten_tree, leaf_to_bytes, unflatten_tree)
+
+
+class CheckpointManager:
+    def __init__(self, client: WtfClient, root: str = "/ckpt",
+                 keep: Optional[int] = None):
+        self.client = client
+        self.root = root
+        self.keep = keep
+        if not client.exists(root):
+            client.mkdir(root)
+
+    # ------------------------------------------------------------- paths
+    def _step_dir(self, step: int) -> str:
+        return f"{self.root}/step-{step:010d}"
+
+    def _leaf_path(self, step: int, name: str, shard: int,
+                   num_shards: int) -> str:
+        safe = name.replace("/", ".")
+        return f"{self._step_dir(step)}/{safe}.{shard:04d}-of-{num_shards:04d}"
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, *, host_id: int = 0,
+             num_hosts: int = 1, extra: Optional[dict] = None,
+             prev_step: Optional[int] = None) -> dict:
+        """Write this host's shards, then (host 0) atomically commit.
+
+        Leaves are sharded across hosts on their leading axis when possible;
+        small leaves are written by host 0 alone.  With ``prev_step`` given,
+        unchanged leaves are shared with the previous checkpoint via
+        ``copy`` instead of rewritten (incremental checkpointing).
+        """
+        flat = flatten_tree(tree)
+        step_dir = self._step_dir(step)
+        if not self.client.exists(step_dir):
+            try:
+                self.client.mkdir(step_dir)
+            except Exception:
+                pass                       # another host won the race
+
+        prev_manifest = None
+        if prev_step is not None:
+            try:
+                prev_manifest = self.read_manifest(prev_step)
+            except NotFound:
+                prev_manifest = None
+
+        entries: Dict[str, dict] = {}
+        stats = {"bytes_written": 0, "bytes_shared": 0, "leaves_shared": 0}
+        for name, leaf in flat.items():
+            data, meta = leaf_to_bytes(leaf)
+            shards = self._shards_for(meta, num_hosts)
+            meta["shards"] = shards
+            entries[name] = meta
+            prev = (prev_manifest or {}).get("leaves", {}).get(name)
+            if (prev is not None and prev["digest"] == meta["digest"]
+                    and prev["shards"] == shards):
+                # Incremental: identical content — share the old slices.
+                if host_id == 0:
+                    for s in range(shards):
+                        src = self._leaf_path(prev_step, name, s, shards)
+                        dst = self._leaf_path(step, name, s, shards)
+                        self.client.copy(src, dst)
+                    stats["bytes_shared"] += meta["nbytes"]
+                    stats["leaves_shared"] += 1
+                continue
+            for s in range(shards):
+                if s % num_hosts != host_id:
+                    continue               # not this host's shard
+                lo, hi = self._shard_range(meta["nbytes"], shards, s)
+                path = self._leaf_path(step, name, s, shards)
+                fd = self.client.open(path, "w")
+                self.client.write(fd, data[lo:hi])
+                self.client.close(fd)
+                stats["bytes_written"] += hi - lo
+
+        if host_id == 0:
+            self._commit(step, entries, extra or {})
+            if self.keep is not None:
+                self.retain(self.keep)
+        return stats
+
+    def _commit(self, step: int, entries: Dict[str, dict],
+                extra: dict) -> None:
+        """The atomic rendezvous: manifest + ``latest`` flip in one txn."""
+        c = self.client
+        with c.transaction():
+            fd = c.open(f"{self._step_dir(step)}/manifest", "w")
+            c.write(fd, encode_manifest(entries, {"step": step, **extra}))
+            c.close(fd)
+            latest = f"{self.root}/latest"
+            if c.exists(latest):
+                c.unlink(latest)
+            c.link(f"{self._step_dir(step)}/manifest", latest)
+
+    @staticmethod
+    def _shards_for(meta: dict, num_hosts: int) -> int:
+        # shard big leaves across hosts; keep small ones whole
+        if num_hosts > 1 and meta["nbytes"] >= 1 << 16:
+            return num_hosts
+        return 1
+
+    @staticmethod
+    def _shard_range(nbytes: int, shards: int, s: int) -> Tuple[int, int]:
+        per = -(-nbytes // shards)
+        return s * per, min(nbytes, (s + 1) * per)
+
+    # -------------------------------------------------------------- restore
+    def read_manifest(self, step: Optional[int] = None) -> dict:
+        c = self.client
+        path = (f"{self.root}/latest" if step is None
+                else f"{self._step_dir(step)}/manifest")
+        fd = c.open(path, "r")
+        raw = c.read(fd)
+        c.close(fd)
+        return decode_manifest(raw)
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            return self.read_manifest()["step"]
+        except NotFound:
+            return None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        """Rebuild the pytree (all leaves, any host)."""
+        man = self.read_manifest(step)
+        step = man["step"]
+        flat: Dict[str, Any] = {}
+        for name, meta in man["leaves"].items():
+            parts = []
+            for s in range(meta["shards"]):
+                path = self._leaf_path(step, name, s, meta["shards"])
+                fd = self.client.open(path, "r")
+                parts.append(self.client.read(fd))
+                self.client.close(fd)
+            flat[name] = bytes_to_leaf(b"".join(parts), meta)
+        return unflatten_tree(flat, template)
+
+    # ------------------------------------------------------------ reshard
+    def reshard(self, step: int, new_shards: int, dst_step: int) -> None:
+        """Re-partition every leaf for a new host count — zero data I/O.
+
+        Each new shard file is a ``concat`` of yanked byte ranges of the old
+        shard files; multi-TB checkpoints reshard in metadata time.
+        """
+        man = self.read_manifest(step)
+        c = self.client
+        if not c.exists(self._step_dir(dst_step)):
+            c.mkdir(self._step_dir(dst_step))
+        new_entries: Dict[str, dict] = {}
+        for name, meta in man["leaves"].items():
+            old_n = meta["shards"]
+            n = new_shards if meta["nbytes"] >= 1 << 16 else 1
+            with c.transaction():
+                # yank each old shard fully, building the flat extent list
+                flat_extents = []
+                for s in range(old_n):
+                    fd = c.open(self._leaf_path(step, name, s, old_n), "r")
+                    size = c.stat(self._leaf_path(step, name, s, old_n))["size"]
+                    flat_extents.extend(c.yank(fd, size))
+                    c.close(fd)
+                # paste computed byte ranges into the new shard files
+                for s in range(n):
+                    lo, hi = self._shard_range(meta["nbytes"], n, s)
+                    fd = c.open(self._leaf_path(dst_step, name, s, n), "w")
+                    c.paste(fd, _carve(flat_extents, lo, hi - lo))
+                    c.close(fd)
+            new_entries[name] = {**meta, "shards": n}
+        self._commit(dst_step, new_entries,
+                     {"resharded_from": step, "step": dst_step})
+
+    # ------------------------------------------------------------ retention
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in self.client.listdir(self.root):
+            if name.startswith("step-"):
+                out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def retain(self, keep: int) -> List[int]:
+        """Unlink all but the newest ``keep`` checkpoints; slices become
+        tier-3 garbage reclaimed by the storage GC."""
+        steps = self.list_steps()
+        victims = steps[:-keep] if keep > 0 else []
+        for step in victims:
+            d = self._step_dir(step)
+            for name in self.client.listdir(d):
+                self.client.unlink(f"{d}/{name}")
+            self.client.rmdir(d)
+        return victims
+
+
+def _carve(extents: Sequence[Any], start: int, length: int) -> list:
+    """Sub-range [start, start+length) of a concatenated extent list."""
+    out = []
+    cursor = 0
+    for e in extents:
+        lo = max(start, cursor)
+        hi = min(start + length, cursor + e.length)
+        if lo < hi:
+            out.append(e.sub(lo - cursor, hi - lo))
+        cursor += e.length
+        if cursor >= start + length:
+            break
+    return out
+
+
+class AsyncCheckpointer:
+    """Off-critical-path checkpointing: data writes happen in a background
+    thread; the trainer only blocks if a previous save is still in flight
+    (one outstanding save, preserving step order)."""
+
+    def __init__(self, manager: CheckpointManager):
+        self.manager = manager
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, **kw) -> None:
+        self.wait()
+        # Snapshot leaves NOW (cheap on host) so the trainer may mutate.
+        snap = {k: np.array(v) for k, v in flatten_tree(tree).items()}
+
+        def run():
+            try:
+                self.manager.save(step, snap, **kw)
+            except BaseException as e:      # noqa: BLE001 - surfaced on wait
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

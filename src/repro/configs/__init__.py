@@ -1,0 +1,61 @@
+"""Config registry: ``--arch <id>`` → ModelConfig.
+
+Every assigned architecture has its own module exporting CONFIG (the exact
+public-literature configuration) and smoke() (a reduced same-family config
+for CPU tests).
+"""
+from typing import Dict, List
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+
+from . import (command_r_35b, granite_moe_3b_a800m, llava_next_34b,
+               mistral_large_123b, olmoe_1b_7b, qwen2_7b, smollm_360m,
+               whisper_medium, xlstm_1p3b, zamba2_1p2b)
+
+_MODULES = {
+    "mistral-large-123b": mistral_large_123b,
+    "command-r-35b": command_r_35b,
+    "qwen2-7b": qwen2_7b,
+    "smollm-360m": smollm_360m,
+    "llava-next-34b": llava_next_34b,
+    "zamba2-1.2b": zamba2_1p2b,
+    "xlstm-1.3b": xlstm_1p3b,
+    "whisper-medium": whisper_medium,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return _MODULES[name].CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _MODULES[name].smoke()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with skip rationale for the
+    impossible ones (documented in DESIGN.md §Arch-applicability)."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            skip = None
+            if sname == "long_500k" and not cfg.subquadratic:
+                skip = ("full-attention architecture: 500k decode needs "
+                        "sub-quadratic attention (see DESIGN.md)")
+            out.append((arch, sname, skip))
+    return out
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_config",
+           "get_smoke_config", "get_shape", "cells"]

@@ -1,0 +1,37 @@
+"""WTF core — the paper's contribution (Escriva & Sirer, 2015).
+
+Architecture (paper Figure 1): metadata storage (`metadata.WarpKV`), storage
+servers (`storage.StorageServer`), a replicated coordinator
+(`coordinator.ReplicatedCoordinator`), and the client library
+(`client.WtfClient`) which combines them into a transactional filesystem with
+the file-slicing API (`yank`/`paste`/`punch`/`append`/`concat`/`copy`).
+"""
+from .client import (SEEK_CUR, SEEK_END, SEEK_SET, Cluster, WtfClient,
+                     WtfTransaction, normalize_path)
+from .coordinator import ReplicatedCoordinator
+from .errors import (AlreadyExists, BadFileDescriptor, IsADirectory,
+                     KVConflict, NoQuorum, NotADirectory, NotFound,
+                     PreconditionFailed, StorageError, TransactionAborted,
+                     WtfError)
+from .gc import GarbageCollector
+from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
+from .metadata import CommutingOp, ListAppend, Transaction, WarpKV
+from .placement import HashRing, stable_hash
+from .slicing import (Extent, SlicePointer, compact, decode_extents,
+                      encode_extents, merge_adjacent, overlay, slice_range,
+                      split_by_regions)
+from .storage import StorageServer
+
+__all__ = [
+    "Cluster", "WtfClient", "WtfTransaction", "WarpKV", "StorageServer",
+    "ReplicatedCoordinator", "GarbageCollector", "HashRing",
+    "Extent", "SlicePointer", "Inode", "RegionData",
+    "compact", "overlay", "slice_range", "merge_adjacent",
+    "encode_extents", "decode_extents", "split_by_regions",
+    "stable_hash", "normalize_path",
+    "SEEK_SET", "SEEK_CUR", "SEEK_END", "DEFAULT_REGION_SIZE",
+    "WtfError", "TransactionAborted", "KVConflict", "PreconditionFailed",
+    "NotFound", "AlreadyExists", "NotADirectory", "IsADirectory",
+    "BadFileDescriptor", "StorageError", "NoQuorum",
+    "CommutingOp", "ListAppend", "Transaction",
+]

@@ -1,0 +1,55 @@
+"""Exception hierarchy for the WTF reproduction."""
+from __future__ import annotations
+
+
+class WtfError(Exception):
+    """Base class for all WTF errors."""
+
+
+class TransactionAborted(WtfError):
+    """Raised to the application when a transaction hit an unresolvable,
+    application-visible conflict (paper §2.6)."""
+
+
+class KVConflict(WtfError):
+    """Internal: optimistic validation failed inside the metadata store.
+
+    This is the HyperDex-level abort. It is *not* surfaced to applications;
+    the retry layer catches it and replays the op log (§2.6)."""
+
+
+class PreconditionFailed(WtfError):
+    """Internal: a commutative operation's precondition failed at commit time
+    (e.g. a bounded append no longer fits in its region, §2.5)."""
+
+
+class NotFound(WtfError):
+    """Pathname or object does not exist."""
+
+
+class AlreadyExists(WtfError):
+    """Pathname already exists."""
+
+
+class NotADirectory(WtfError):
+    """Path component is not a directory."""
+
+
+class IsADirectory(WtfError):
+    """File operation attempted on a directory."""
+
+
+class DirectoryNotEmpty(WtfError):
+    """rmdir on a non-empty directory."""
+
+
+class BadFileDescriptor(WtfError):
+    """Operation on a closed or invalid fd."""
+
+
+class StorageError(WtfError):
+    """A storage server failed to create or retrieve a slice."""
+
+
+class NoQuorum(WtfError):
+    """The replicated coordinator lost its quorum."""

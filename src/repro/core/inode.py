@@ -1,0 +1,156 @@
+"""Inodes, regions, and their commit-time commutative operations.
+
+File metadata layout in WarpKV (paper §2.1, §2.3, §2.4):
+
+  space "paths"   : normalized pathname -> inode id      (one-lookup open)
+  space "inodes"  : inode id -> Inode                    (standard inode info)
+  space "regions" : (inode id, region index) -> RegionData
+
+A file is partitioned into fixed-size regions, each holding its own ordered
+extent list plus ``end`` — the highest offset written in the region, which is
+what makes the paper's *relative append* possible: an append is a commit-time
+commutative operation whose precondition is "still fits in this region", so
+concurrent appenders never conflict (§2.5).
+
+All values are immutable dataclasses: WarpKV hands out references, so nothing
+may be mutated in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from .metadata import CommutingOp
+from .slicing import Extent, visible_length
+
+DEFAULT_REGION_SIZE = 64 * 1024 * 1024   # 64 MB, matching the evaluation §4
+
+
+@dataclass(frozen=True, slots=True)
+class Inode:
+    inode_id: int
+    kind: str                   # "file" | "dir"
+    links: int = 1
+    mtime: int = 0
+    mode: int = 0o644
+    owner: str = "root"
+    group: str = "root"
+    region_size: int = DEFAULT_REGION_SIZE
+    # Reference to the highest-offset region written (§2.4) — lets clients
+    # find end-of-file with a single extra region lookup.  -1 == empty file.
+    max_region: int = -1
+
+    def replace(self, **kw) -> "Inode":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True, slots=True)
+class RegionData:
+    """One region's metadata list.
+
+    ``indirect`` is the tier-2 GC state (§2.8): when a compacted list is
+    still too fragmented, it is serialized into a slice and the region keeps
+    only a pointer to it; ``entries`` then holds extents appended since.
+    """
+
+    entries: Tuple[Extent, ...] = ()
+    end: int = 0                      # region-relative high-water mark
+    indirect: Optional[Extent] = None
+
+
+class AppendExtents(CommutingOp):
+    """Atomic append of extents to a region list — the HyperDex list-append
+    WTF's correctness rests on (§2.1).
+
+    ``relative=True`` implements the paper's relative append: extent offsets
+    are ignored and resolved against the region's current ``end`` *at commit
+    time*, with the precondition that the result still fits below ``bound``.
+    Appends therefore commute: they never carry a read dependency and never
+    abort each other.
+    """
+
+    def __init__(self, extents, relative: bool = False,
+                 bound: Optional[int] = None):
+        self.extents = tuple(extents)
+        self.relative = relative
+        self.bound = bound
+        self.total = sum(e.length for e in self.extents)
+
+    def precondition(self, value) -> bool:
+        if self.bound is None:
+            return True
+        end = value.end if value is not None else 0
+        return end + self.total <= self.bound
+
+    def apply(self, value):
+        rd = value if value is not None else RegionData()
+        if self.relative:
+            cursor = rd.end
+            resolved = []
+            for e in self.extents:
+                resolved.append(e.at(cursor))
+                cursor += e.length
+            resolved = tuple(resolved)
+        else:
+            resolved = self.extents
+        new_end = max([rd.end] + [e.end for e in resolved])
+        return (RegionData(rd.entries + resolved, new_end, rd.indirect),
+                resolved)
+
+    def coalesce(self, nxt: "AppendExtents") -> Optional["AppendExtents"]:
+        """Append-of-append composes exactly: [A]+[B] == [A,B] (relative
+        cursors chain; a combined bound check is equivalent because a
+        failing prefix fails the whole transaction either way).  Bulk
+        paste/concat queue thousands of appends on a handful of regions —
+        coalescing keeps transaction views and commits O(keys)."""
+        if (self.relative != nxt.relative or self.bound != nxt.bound):
+            return None
+        return AppendExtents(self.extents + nxt.extents,
+                             relative=self.relative, bound=self.bound)
+
+
+class BumpInode(CommutingOp):
+    """Monotone inode update: ``max_region``/``mtime`` merge by max.
+
+    Because WarpKV skips the version bump when a commutative op leaves the
+    value unchanged, appends that stay within the current last region do not
+    invalidate concurrent readers of the inode — this is what keeps parallel
+    appends conflict-free end to end.
+    """
+
+    def __init__(self, max_region: Optional[int] = None,
+                 mtime: Optional[int] = None,
+                 link_delta: int = 0):
+        self.max_region = max_region
+        self.mtime = mtime
+        self.link_delta = link_delta
+
+    def precondition(self, value) -> bool:
+        return value is not None        # file must still exist
+
+    def apply(self, value: Inode):
+        ino = value
+        kw = {}
+        if self.max_region is not None and self.max_region > ino.max_region:
+            kw["max_region"] = self.max_region
+        if self.mtime is not None and self.mtime > ino.mtime:
+            kw["mtime"] = self.mtime
+        if self.link_delta:
+            kw["links"] = ino.links + self.link_delta
+        return (ino.replace(**kw) if kw else ino), None
+
+    def coalesce(self, nxt: "BumpInode") -> "BumpInode":
+        def mx(a, b):
+            if a is None:
+                return b
+            if b is None:
+                return a
+            return max(a, b)
+        return BumpInode(max_region=mx(self.max_region, nxt.max_region),
+                         mtime=mx(self.mtime, nxt.mtime),
+                         link_delta=self.link_delta + nxt.link_delta)
+
+
+def region_key(inode_id: int, region_idx: int) -> tuple:
+    return (inode_id, region_idx)

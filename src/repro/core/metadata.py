@@ -1,0 +1,342 @@
+"""WarpKV — the transactional metadata store (HyperDex/Warp stand-in).
+
+The paper stores all filesystem metadata in HyperDex and relies on three
+properties of its transactions [15]:
+
+  1. linearizable multi-key transactions across independent schemas ("spaces"),
+  2. optimistic concurrency: a transaction aborts iff a value it *read*
+     changed before commit,
+  3. atomic list append that does not create a read dependency — this is what
+     lets concurrent writers append slice pointers to the same region without
+     conflicting (§2.1, §2.5).
+
+WarpKV reproduces exactly that contract in-process:
+
+  * every key is versioned; ``get`` inside a transaction records the version,
+  * ``put``/``delete`` are buffered and applied atomically at commit,
+  * *commutative operations* (``CommutingOp``) are evaluated at commit time
+    under the commit locks, with a precondition check instead of a read
+    dependency.  They model HyperDex's atomic append and the paper's bounded
+    relative append (§2.5).  A commutative op that leaves the value unchanged
+    does not bump the version, so e.g. parallel appends into the same region
+    do not invalidate each other's inode reads.
+
+Commit protocol: stripe locks are acquired in canonical order (no deadlock),
+read versions validated, preconditions checked, writes applied, versions
+bumped.  This yields strict serializability for the in-process setting.
+A write-ahead log of committed mutations supports the replication veneer in
+``replication.py``.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Optional
+
+from .errors import KVConflict, PreconditionFailed
+
+_TOMBSTONE = object()
+
+
+@dataclass
+class _Versioned:
+    version: int
+    value: Any
+
+
+class CommutingOp:
+    """A read-free, commit-time read-modify-write (HyperDex atomic append).
+
+    ``apply(value)`` returns ``(new_value, result)``; it runs under the commit
+    locks against the *latest* committed value.  ``precondition(value)`` may
+    veto at commit time (→ ``PreconditionFailed``, the transaction as a whole
+    aborts and the WTF retry layer takes over).  Ops must be pure so commit
+    retries/replays are safe.
+    """
+
+    def precondition(self, value: Any) -> bool:  # pragma: no cover - default
+        return True
+
+    def apply(self, value: Any):  # -> tuple[Any, Any]
+        raise NotImplementedError
+
+
+class ListAppend(CommutingOp):
+    """Generic atomic list append (the HyperDex primitive WTF relies on)."""
+
+    def __init__(self, items: Iterable[Any]):
+        self.items = list(items)
+
+    def apply(self, value):
+        cur = list(value) if value is not None else []
+        cur.extend(self.items)
+        return cur, len(cur)
+
+
+class Transaction:
+    """One optimistic multi-key transaction."""
+
+    def __init__(self, kv: "WarpKV"):
+        self._kv = kv
+        self._reads: dict[tuple[str, Any], int] = {}
+        self._writes: dict[tuple[str, Any], Any] = {}
+        self._commutes: list[tuple[str, Any, CommutingOp, list]] = []
+        # per-key index so read-your-writes views don't scan the whole
+        # queue (bulk paste/concat transactions queue thousands of ops)
+        self._commutes_by_key: dict[tuple[str, Any], list] = {}
+        self.committed = False
+
+    # -- read set -----------------------------------------------------------
+    def get(self, space: str, key: Any, default: Any = None) -> Any:
+        sk = (space, key)
+        if sk in self._writes:
+            v = self._writes[sk]
+            return default if v is _TOMBSTONE else v
+        ver, val = self._kv._read_versioned(space, key)
+        # Record the *first* observed version; seeing a different version on
+        # a later read of the same key inside one txn is itself a conflict.
+        prev = self._reads.setdefault(sk, ver)
+        if prev != ver:
+            raise KVConflict(f"non-repeatable read of {space}:{key!r}")
+        return default if val is None else val
+
+    # -- write set ----------------------------------------------------------
+    def put(self, space: str, key: Any, value: Any) -> None:
+        self._writes[(space, key)] = value
+
+    def delete(self, space: str, key: Any) -> None:
+        self._writes[(space, key)] = _TOMBSTONE
+
+    # -- commutative ops ----------------------------------------------------
+    def commute(self, space: str, key: Any, op: CommutingOp) -> "_Deferred":
+        """Queue a commit-time op; returns a cell filled in at commit."""
+        sk = (space, key)
+        per_key = self._commutes_by_key.setdefault(sk, [])
+        # coalesce with the previous queued op on the same key when the op
+        # type supports it (append-of-append, bump-of-bump): a bulk paste
+        # queues thousands of ops on a handful of keys, and both the
+        # read-your-writes view and commit apply then stay O(keys)
+        if per_key and type(per_key[-1][2]) is type(op) \
+                and hasattr(op, "coalesce"):
+            entry = per_key[-1]
+            merged = entry[2].coalesce(op)
+            if merged is not None:
+                entry[2] = merged
+                return _Deferred(entry[3])
+        entry = [space, key, op, []]
+        self._commutes.append(entry)
+        per_key.append(entry)
+        return _Deferred(entry[3])
+
+    def get_view(self, space: str, key: Any, default: Any = None) -> Any:
+        """Read-your-writes view: the committed value (read dependency is
+        recorded) with this transaction's queued commutative ops applied.
+
+        If a concurrent transaction changes the key between this read and
+        our commit, the read-version validation aborts us and the WTF retry
+        layer replays — so the view the application saw is always consistent
+        with what commits.
+        """
+        val = self.get(space, key, None)
+        return self._apply_queued(space, key, val, default)
+
+    def peek(self, space: str, key: Any, default: Any = None) -> Any:
+        """Unvalidated snapshot read: like ``get_view`` but records NO read
+        dependency.  Used where staleness is guarded by a commit-time
+        precondition instead — e.g. the bounded relative append's fit check
+        (§2.5), which must not make concurrent appends conflict."""
+        sk = (space, key)
+        if sk in self._writes:
+            v = self._writes[sk]
+            val = None if v is _TOMBSTONE else v
+        else:
+            _, val = self._kv._read_versioned(space, key)
+        return self._apply_queued(space, key, val, default)
+
+    def _apply_queued(self, space: str, key: Any, val: Any,
+                      default: Any) -> Any:
+        for entry in self._commutes_by_key.get((space, key), ()):
+            val, _ = entry[2].apply(val)
+        return default if val is None else val
+
+    # -- commit -------------------------------------------------------------
+    def commit(self) -> None:
+        self._kv._commit(self)
+        self.committed = True
+
+    def abort(self) -> None:
+        self._reads.clear()
+        self._writes.clear()
+        self._commutes.clear()
+        self._commutes_by_key.clear()
+
+
+class _Deferred:
+    """Result of a commutative op, available after commit."""
+
+    def __init__(self, cell: list):
+        self._cell = cell
+
+    @property
+    def value(self) -> Any:
+        if not self._cell:
+            raise RuntimeError("deferred result read before commit")
+        return self._cell[0]
+
+
+@dataclass
+class KVStats:
+    commits: int = 0
+    aborts: int = 0
+    gets: int = 0
+    puts: int = 0
+    commutes: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class WarpKV:
+    """Striped, versioned, optimistically-concurrent in-process KV store."""
+
+    N_STRIPES = 64
+
+    def __init__(self):
+        self._spaces: dict[str, dict[Any, _Versioned]] = {}
+        self._space_lock = threading.Lock()
+        self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
+        self.stats = KVStats()
+        # Write-ahead log of committed mutations for chain replication.
+        self._wal: list[tuple[str, Any, Any, int]] = []
+        self._wal_lock = threading.Lock()
+        self._wal_listeners: list[Callable[[str, Any, Any, int], None]] = []
+        self._fail_next_commits = 0   # test hook: forced HyperDex-level abort
+
+    # -- plumbing -----------------------------------------------------------
+    def _space(self, name: str) -> dict[Any, _Versioned]:
+        sp = self._spaces.get(name)
+        if sp is None:
+            with self._space_lock:
+                sp = self._spaces.setdefault(name, {})
+        return sp
+
+    def _stripe_of(self, space: str, key: Any) -> int:
+        return hash((space, key)) % self.N_STRIPES
+
+    def _read_versioned(self, space: str, key: Any) -> tuple[int, Any]:
+        self.stats.gets += 1
+        sp = self._space(space)
+        with self._stripes[self._stripe_of(space, key)]:
+            ent = sp.get(key)
+            if ent is None:
+                return 0, None
+            return ent.version, ent.value
+
+    # -- non-transactional convenience (single-key linearizable ops) --------
+    def get(self, space: str, key: Any, default: Any = None) -> Any:
+        _, val = self._read_versioned(space, key)
+        return default if val is None else val
+
+    def put(self, space: str, key: Any, value: Any) -> None:
+        txn = self.begin()
+        txn.put(space, key, value)
+        txn.commit()
+
+    def keys(self, space: str) -> list:
+        sp = self._space(space)
+        # Snapshot under all stripe locks is unnecessary for iteration used
+        # by the GC scanner; dict views are safe to copy in CPython.
+        return [k for k, v in list(sp.items()) if v.value is not None]
+
+    # -- transactions -------------------------------------------------------
+    def begin(self) -> Transaction:
+        return Transaction(self)
+
+    def _commit(self, txn: Transaction) -> None:
+        touched = set(txn._reads) | set(txn._writes) | {
+            (s, k) for s, k, _, _ in txn._commutes
+        }
+        stripe_ids = sorted({self._stripe_of(s, k) for s, k in touched})
+        for sid in stripe_ids:
+            self._stripes[sid].acquire()
+        try:
+            if self._fail_next_commits > 0:
+                self._fail_next_commits -= 1
+                self.stats.aborts += 1
+                raise KVConflict("injected abort")
+            # 1. validate read versions (optimistic concurrency control)
+            for (space, key), seen in txn._reads.items():
+                ent = self._space(space).get(key)
+                cur = ent.version if ent is not None else 0
+                if cur != seen:
+                    self.stats.aborts += 1
+                    raise KVConflict(
+                        f"version conflict on {space}:{key!r} "
+                        f"(saw {seen}, now {cur})")
+            # 2. check commutative preconditions + compute results against
+            # the post-write view (this txn's buffered writes included, and
+            # earlier commutes on the same key chained in queue order)
+            view: dict[tuple[str, Any], Any] = {}
+            for (space, key), value in txn._writes.items():
+                view[(space, key)] = None if value is _TOMBSTONE else value
+            staged: list[tuple[str, Any, Any, Any, list]] = []
+            for space, key, op, cell in txn._commutes:
+                sk = (space, key)
+                if sk in view:
+                    cur = view[sk]
+                else:
+                    ent = self._space(space).get(key)
+                    cur = ent.value if ent is not None else None
+                if not op.precondition(cur):
+                    self.stats.aborts += 1
+                    raise PreconditionFailed(
+                        f"precondition failed on {space}:{key!r}")
+                new, result = op.apply(cur)
+                view[sk] = new
+                staged.append((space, key, new, result, cell))
+            # 3. apply buffered writes.  Deletes keep a versioned tombstone
+            # (value None) so a delete+recreate can never satisfy a stale
+            # reader's version check (no ABA).
+            for (space, key), value in txn._writes.items():
+                sp = self._space(space)
+                ent = sp.get(key)
+                ver = (ent.version if ent is not None else 0) + 1
+                stored = None if value is _TOMBSTONE else value
+                sp[key] = _Versioned(ver, stored)
+                self._log(space, key, stored, ver)
+                self.stats.puts += 1
+            # 4. apply commutative results; bump version only on real change
+            for space, key, new, result, cell in staged:
+                sp = self._space(space)
+                ent = sp.get(key)
+                if ent is not None and ent.value == new:
+                    pass                      # no-op merge: no invalidation
+                else:
+                    ver = (ent.version if ent is not None else 0) + 1
+                    sp[key] = _Versioned(ver, new)
+                    self._log(space, key, new, ver)
+                cell.append(result)
+                self.stats.commutes += 1
+            self.stats.commits += 1
+        finally:
+            for sid in reversed(stripe_ids):
+                self._stripes[sid].release()
+
+    # -- replication hooks ---------------------------------------------------
+    def _log(self, space: str, key: Any, value: Any, version: int) -> None:
+        with self._wal_lock:
+            self._wal.append((space, key, value, version))
+            for fn in self._wal_listeners:
+                fn(space, key, value, version)
+
+    def subscribe(self, fn: Callable[[str, Any, Any, int], None]) -> None:
+        with self._wal_lock:
+            for space, key, value, version in self._wal:
+                fn(space, key, value, version)
+            self._wal_listeners.append(fn)
+
+    # -- test hooks -----------------------------------------------------------
+    def inject_aborts(self, n: int = 1) -> None:
+        """Force the next ``n`` commits to abort at the KV level (for
+        exercising the §2.6 retry layer)."""
+        self._fail_next_commits = n

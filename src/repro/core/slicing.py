@@ -1,0 +1,300 @@
+"""The file-slicing algebra (paper §2.1, Figure 2).
+
+A *slice* is an immutable, byte-addressable, arbitrarily sized sequence of
+bytes living on a storage server.  A *slice pointer* is the self-contained
+tuple (server id, backing file, offset, length) that locates it; sub-ranges of
+slices are derived with plain arithmetic and never touch the data.
+
+A file region's metadata is an ordered list of *extents*: each extent overlays
+a slice (or zeros, for ``punch``) at a region-relative offset, and later
+entries take precedence over earlier ones.  ``compact`` reduces such a list to
+the minimal non-overlapping form, merging extents that are adjacent both in
+the file and on disk (the payoff of locality-aware placement, §2.7).
+
+Everything in this module is pure data manipulation: no I/O, no locking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True, slots=True)
+class SlicePointer:
+    """Self-contained locator for an immutable slice (paper §2.1).
+
+    Everything needed to retrieve the bytes is here; no other bookkeeping
+    exists anywhere in the system.
+    """
+
+    server_id: int
+    backing_file: str
+    offset: int          # byte offset of the slice within the backing file
+    length: int          # number of bytes
+
+    def sub(self, start: int, length: int) -> "SlicePointer":
+        """Derive a pointer to ``[start, start+length)`` of this slice.
+
+        This is the 'simple arithmetic' the paper relies on to build new
+        slice pointers that reference subsequences of existing slices.
+        """
+        if start < 0 or length < 0 or start + length > self.length:
+            raise ValueError(
+                f"sub-slice [{start},{start + length}) out of bounds "
+                f"for slice of length {self.length}"
+            )
+        return SlicePointer(self.server_id, self.backing_file,
+                            self.offset + start, length)
+
+    def is_adjacent(self, other: "SlicePointer") -> bool:
+        """True if ``other`` begins exactly where this slice ends on disk."""
+        return (self.server_id == other.server_id
+                and self.backing_file == other.backing_file
+                and self.offset + self.length == other.offset)
+
+
+@dataclass(frozen=True, slots=True)
+class Extent:
+    """One overlay entry in a region's metadata list.
+
+    ``offset`` is region-relative.  ``ptrs`` holds one slice pointer per
+    replica (paper §2.9: each metadata entry references multiple replica
+    pointers; readers may use any).  A *zero extent* (``ptrs == ()``) reads
+    back as zeros — produced by ``punch`` — and obscures extents below it.
+    """
+
+    offset: int
+    length: int
+    ptrs: Tuple[SlicePointer, ...] = ()
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.length
+
+    @property
+    def is_zero(self) -> bool:
+        return not self.ptrs
+
+    def sub(self, start: int, length: int) -> "Extent":
+        """Extent covering ``[offset+start, offset+start+length)``."""
+        if start < 0 or length < 0 or start + length > self.length:
+            raise ValueError("sub-extent out of bounds")
+        return Extent(
+            offset=self.offset + start,
+            length=length,
+            ptrs=tuple(p.sub(start, length) for p in self.ptrs),
+        )
+
+    def at(self, new_offset: int) -> "Extent":
+        """Same bytes, overlaid at a different offset (used by paste)."""
+        return dataclasses.replace(self, offset=new_offset)
+
+    def can_merge(self, nxt: "Extent") -> bool:
+        """True if ``nxt`` continues this extent both in the file and on disk
+        for every replica (so the pair collapses into one pointer, §2.7)."""
+        if self.end != nxt.offset:
+            return False
+        if self.is_zero and nxt.is_zero:
+            return True
+        if len(self.ptrs) != len(nxt.ptrs) or self.is_zero != nxt.is_zero:
+            return False
+        return all(a.is_adjacent(b) for a, b in zip(self.ptrs, nxt.ptrs))
+
+    def merge(self, nxt: "Extent") -> "Extent":
+        if not self.can_merge(nxt):
+            raise ValueError("extents are not mergeable")
+        if self.is_zero:
+            return Extent(self.offset, self.length + nxt.length, ())
+        return Extent(
+            self.offset,
+            self.length + nxt.length,
+            tuple(SlicePointer(a.server_id, a.backing_file, a.offset,
+                               a.length + b.length)
+                  for a, b in zip(self.ptrs, nxt.ptrs)),
+        )
+
+
+def overlay(entries: Sequence[Extent]) -> list[Extent]:
+    """Resolve an ordered overlay list into non-overlapping extents.
+
+    Later entries take precedence (Figure 2: slice C obscures A and B; E
+    obscures D and part of C).  Returns extents sorted by offset.  Holes
+    (never-written gaps) are simply absent from the output.
+
+    Reverse sweep with a sorted coverage map: each entry contributes only
+    its not-yet-covered sub-ranges, so the common append-only list resolves
+    in O(n log n) (the first implementation rebuilt and re-sorted the
+    resolved list per entry — O(n²) — which made bulk yank/paste quadratic;
+    see EXPERIMENTS.md §Perf, WTF-side iteration 1).
+    """
+    import bisect
+
+    frags: list[Extent] = []
+    # sorted, disjoint covered intervals as a flat boundary list
+    # [s0, e0, s1, e1, ...]
+    bounds: list[int] = []
+    for entry in reversed(entries):
+        if entry.length == 0:
+            continue
+        lo, hi = entry.offset, entry.end
+        # find uncovered gaps of [lo, hi) against the coverage map
+        i = bisect.bisect_right(bounds, lo)
+        pos = lo
+        gaps: list[tuple[int, int]] = []
+        if i % 2 == 1:                    # lo lands inside a covered run
+            pos = bounds[i] if i < len(bounds) else hi
+            i += 1
+        while pos < hi:
+            nxt_start = bounds[i] if i < len(bounds) else hi
+            g_end = min(nxt_start, hi)
+            if pos < g_end:
+                gaps.append((pos, g_end))
+            if i + 1 < len(bounds):
+                pos = bounds[i + 1]
+            else:
+                pos = hi
+            i += 2
+        for g_lo, g_hi in gaps:
+            frags.append(entry.sub(g_lo - entry.offset, g_hi - g_lo))
+        # insert [lo, hi) into the coverage map (merge touching runs)
+        li = bisect.bisect_left(bounds, lo)
+        ri = bisect.bisect_right(bounds, hi)
+        new: list[int] = []
+        if li % 2 == 0:                   # lo starts outside coverage
+            new.append(lo)
+        if ri % 2 == 0:                   # hi ends outside coverage
+            new.append(hi)
+        bounds[li:ri] = new
+    frags.sort(key=lambda e: e.offset)
+    return frags
+
+
+def _overlay_cached_impl(entries: Tuple[Extent, ...]) -> tuple:
+    return tuple(overlay(entries))
+
+
+try:
+    from functools import lru_cache
+    _overlay_cached_impl = lru_cache(maxsize=512)(_overlay_cached_impl)
+except Exception:                                   # pragma: no cover
+    pass
+
+
+def overlay_cached(entries: Sequence[Extent]) -> list[Extent]:
+    """`overlay` memoized on the (immutable) entries tuple — region lists
+    are read far more often than they change (every read/yank plans against
+    the same committed RegionData), so repeated resolution is pure waste."""
+    if not isinstance(entries, tuple):
+        return overlay(entries)
+    return list(_overlay_cached_impl(entries))
+
+
+def merge_adjacent(extents: Sequence[Extent]) -> list[Extent]:
+    """Collapse runs that are contiguous in the file *and* on disk into
+    single pointers — the compaction payoff of locality-aware placement."""
+    merged: list[Extent] = []
+    for ext in extents:
+        if merged and merged[-1].can_merge(ext):
+            merged[-1] = merged[-1].merge(ext)
+        else:
+            merged.append(ext)
+    return merged
+
+
+def compact(entries: Sequence[Extent]) -> list[Extent]:
+    """Minimal metadata list equivalent to ``entries`` (Figure 2 'Compacted').
+
+    Overlay resolution + adjacent-slice merging.  The result reconstructs the
+    identical bytes while never referencing data obscured by later writes.
+    """
+    return merge_adjacent(overlay(entries))
+
+
+def visible_length(entries: Sequence[Extent]) -> int:
+    """Highest written offset in the overlay list (region-relative end)."""
+    return max((e.end for e in entries), default=0)
+
+
+def slice_range(
+    entries: Sequence[Extent], start: int, length: int
+) -> list[Extent]:
+    """Extents covering ``[start, start+length)`` of the resolved overlay.
+
+    Gaps (holes) are returned as zero extents so that the output tiles the
+    requested range exactly.  This is the read/yank planner: each returned
+    extent is either a zero run or a sub-sliced pointer to fetch.
+    """
+    if length <= 0:
+        return []
+    end = start + length
+    out: list[Extent] = []
+    cursor = start
+    for ext in overlay_cached(entries):
+        if ext.end <= start or ext.offset >= end:
+            continue
+        lo = max(ext.offset, start)
+        hi = min(ext.end, end)
+        if lo > cursor:                      # hole before this extent
+            out.append(Extent(cursor, lo - cursor, ()))
+        out.append(ext.sub(lo - ext.offset, hi - lo))
+        cursor = hi
+    if cursor < end:                         # trailing hole
+        out.append(Extent(cursor, end - cursor, ()))
+    return out
+
+
+def shift(entries: Iterable[Extent], delta: int) -> list[Extent]:
+    """Translate extents by ``delta`` bytes (region <-> file coordinates)."""
+    return [dataclasses.replace(e, offset=e.offset + delta) for e in entries]
+
+
+def split_by_regions(
+    offset: int, length: int, region_size: int
+) -> Iterator[Tuple[int, int, int, int]]:
+    """Split a file-absolute byte range into per-region pieces.
+
+    Yields (region_index, region_relative_offset, piece_offset_in_range,
+    piece_length) — used by writes/pastes that cross region boundaries
+    (Figure 3: write C is atomically applied to both region lists).
+    """
+    pos = offset
+    end = offset + length
+    while pos < end:
+        region = pos // region_size
+        rel = pos - region * region_size
+        take = min(end - pos, region_size - rel)
+        yield region, rel, pos - offset, take
+        pos += take
+
+
+# ---------------------------------------------------------------------------
+# Serialization — extents must round-trip through slices themselves for the
+# tier-2 GC (metadata spilled into a slice, §2.8) and for directory files.
+# ---------------------------------------------------------------------------
+
+def encode_extents(extents: Sequence[Extent]) -> bytes:
+    import orjson
+
+    return orjson.dumps([
+        {
+            "o": e.offset,
+            "l": e.length,
+            "p": [[p.server_id, p.backing_file, p.offset, p.length]
+                  for p in e.ptrs],
+        }
+        for e in extents
+    ])
+
+
+def decode_extents(data: bytes) -> list[Extent]:
+    import orjson
+
+    return [
+        Extent(
+            offset=d["o"],
+            length=d["l"],
+            ptrs=tuple(SlicePointer(*p) for p in d["p"]),
+        )
+        for d in orjson.loads(data)
+    ]

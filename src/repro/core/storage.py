@@ -1,0 +1,292 @@
+"""Storage servers (paper §2.2, §2.7, §2.8).
+
+A storage server deals *exclusively* with slices and is oblivious to files,
+offsets, or concurrent writers.  Its complete API is two calls:
+
+    create_slice(data, locality_hint) -> SlicePointer
+    retrieve_slice(ptr)               -> bytes
+
+The server keeps a directory of sequentially-written backing files.  Multiple
+backing files (a) avoid writer contention, (b) can spread across filesystems,
+and (c) let locality hints group writes for the same metadata region into the
+same backing file so that sequential file writes land sequentially on disk
+(§2.7) — which is what makes compaction collapse them into single pointers.
+
+GC (§2.8 tier 3): the server rewrites a backing file, seeking past garbage
+extents, which yields a sparse file occupying space proportional to live
+bytes.  Offsets are preserved, so outstanding slice pointers stay valid.
+Files with the *most* garbage are collected first — they cost the least I/O
+and reclaim the most space.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .errors import StorageError
+from .placement import stable_hash
+from .slicing import SlicePointer
+
+
+@dataclass
+class StorageStats:
+    """I/O accounting — the primary hardware-independent metric (Table 2)."""
+
+    bytes_written: int = 0
+    bytes_read: int = 0
+    slices_created: int = 0
+    slices_read: int = 0
+    gc_bytes_reclaimed: int = 0
+    gc_bytes_rewritten: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+def _merge_intervals(intervals: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Merge (offset, length) pairs into sorted disjoint (start, end)."""
+    out: List[Tuple[int, int]] = []
+    for off, ln in sorted(intervals):
+        if out and off <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], off + ln))
+        else:
+            out.append((off, off + ln))
+    return out
+
+
+def _intersect_intervals(a: List[Tuple[int, int]],
+                         b: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Intersection of two sorted disjoint (start, end) lists."""
+    out: List[Tuple[int, int]] = []
+    i = j = 0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if lo < hi:
+            out.append((lo, hi))
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return out
+
+
+class _BackingFile:
+    """One sequentially-appended slice container."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.lock = threading.Lock()
+        self.size = 0
+        self._fh = open(path, "wb+", buffering=0)
+
+    def append(self, data: bytes) -> int:
+        with self.lock:
+            off = self.size
+            self._fh.seek(off)
+            self._fh.write(data)
+            self.size += len(data)
+            return off
+
+    def read(self, offset: int, length: int) -> bytes:
+        # Positional read: no shared file-offset state between readers.
+        return os.pread(self._fh.fileno(), length, offset)
+
+    def close(self) -> None:
+        with self.lock:
+            self._fh.close()
+
+
+class StorageServer:
+    """One data node.  Thread-safe; writes are real file I/O."""
+
+    def __init__(self, server_id: int, root_dir: str,
+                 num_backing_files: int = 8,
+                 fail_injected: bool = False):
+        self.server_id = server_id
+        self.root_dir = root_dir
+        self.num_backing_files = num_backing_files
+        self.stats = StorageStats()
+        self.alive = True
+        self._fail_injected = fail_injected
+        os.makedirs(root_dir, exist_ok=True)
+        self._files: Dict[str, _BackingFile] = {}
+        self._files_lock = threading.Lock()
+        self._rr = 0
+        # Two-scan GC safety rule (§2.8): a garbage byte range is only
+        # collected once it has been unreferenced in two *consecutive*
+        # filesystem scans (per-file garbage interval lists, intersected
+        # pass over pass).
+        self._gc_prev_garbage: Dict[str, List[Tuple[int, int]]] = {}
+
+    # ------------------------------------------------------------------ API
+    def create_slice(self, data: bytes,
+                     locality_hint: Optional[int] = None) -> SlicePointer:
+        """Write ``data`` to disk; return its self-contained pointer.
+
+        The pointer is handed to the caller only *after* the bytes are
+        durable in the backing file, which is what lets WTF serialize any
+        observer of the pointer after the writing transaction (§2.1).
+        """
+        if not self.alive:
+            raise StorageError(f"server {self.server_id} is down")
+        bf = self._pick_backing_file(locality_hint)
+        off = bf.append(data)
+        self.stats.bytes_written += len(data)
+        self.stats.slices_created += 1
+        name = os.path.basename(bf.path)
+        return SlicePointer(self.server_id, name, off, len(data))
+
+    def retrieve_slice(self, ptr: SlicePointer) -> bytes:
+        """Follow a pointer: open the named file, read, return (§2.2)."""
+        if not self.alive:
+            raise StorageError(f"server {self.server_id} is down")
+        if ptr.server_id != self.server_id:
+            raise StorageError(
+                f"pointer for server {ptr.server_id} sent to {self.server_id}")
+        bf = self._get_backing_file(ptr.backing_file)
+        data = bf.read(ptr.offset, ptr.length)
+        if len(data) != ptr.length:
+            raise StorageError(
+                f"short read: wanted {ptr.length} got {len(data)} "
+                f"from {ptr.backing_file}@{ptr.offset}")
+        self.stats.bytes_read += len(data)
+        self.stats.slices_read += 1
+        return data
+
+    # ----------------------------------------------------------- placement
+    def _pick_backing_file(self, hint: Optional[int]) -> _BackingFile:
+        """Server-local hashing, salted differently from the cross-server
+        ring (§2.7), so same-region writes share a backing file but regions
+        that collide on a server spread across its files."""
+        if hint is not None:
+            idx = stable_hash(hint, salt="backing") % self.num_backing_files
+        else:
+            self._rr += 1
+            idx = self._rr % self.num_backing_files
+        name = f"backing_{idx:04d}.dat"
+        return self._get_backing_file(name, create=True)
+
+    def _get_backing_file(self, name: str, create: bool = False) -> _BackingFile:
+        bf = self._files.get(name)
+        if bf is None:
+            with self._files_lock:
+                bf = self._files.get(name)
+                if bf is None:
+                    path = os.path.join(self.root_dir, name)
+                    if not create and not os.path.exists(path):
+                        raise StorageError(f"no backing file {name}")
+                    bf = _BackingFile(path)
+                    if not create:
+                        bf.size = os.path.getsize(path)
+                    self._files[name] = bf
+        return bf
+
+    # ------------------------------------------------------------------- GC
+    def disk_usage(self) -> int:
+        """Apparent bytes across backing files (holes excluded by the OS;
+        we track logical size here and real usage via ``real_usage``)."""
+        return sum(bf.size for bf in self._files.values())
+
+    def real_usage(self) -> int:
+        """Blocks actually allocated (sparse holes don't count)."""
+        total = 0
+        for bf in self._files.values():
+            st = os.stat(bf.path)
+            total += st.st_blocks * 512
+        return total
+
+    def gc_pass(self, live: Iterable[SlicePointer],
+                max_files: Optional[int] = None) -> dict:
+        """One garbage-collection pass given the filesystem-wide live list.
+
+        ``live`` is the in-use pointer list the metadata scan produced for
+        this server (delivered via a reserved WTF directory in the real
+        system — the driver in ``gc.py`` does exactly that).  Applies the
+        two-consecutive-scans rule, then sparse-rewrites the files with the
+        most garbage first.
+        """
+        live_by_file: Dict[str, List[Tuple[int, int]]] = {}
+        for p in live:
+            if p.server_id != self.server_id:
+                continue
+            live_by_file.setdefault(p.backing_file, []).append(
+                (p.offset, p.length))
+
+        # Compute garbage intervals: bytes in each file not covered by live.
+        garbage_now: Dict[str, List[Tuple[int, int]]] = {}
+        garbage_per_file: Dict[str, int] = {}
+        for name, bf in list(self._files.items()):
+            merged = _merge_intervals(live_by_file.get(name, []))
+            cursor, gaps = 0, []
+            for off, end in merged:
+                if off > cursor:
+                    gaps.append((cursor, off))
+                cursor = max(cursor, end)
+            if bf.size > cursor:
+                gaps.append((cursor, bf.size))
+            garbage_now[name] = gaps
+            garbage_per_file[name] = sum(e - s for s, e in gaps)
+
+        # Two-scan rule: only byte ranges that were garbage last scan too.
+        collectable: Dict[str, int] = {}
+        for name, gaps in garbage_now.items():
+            both = _intersect_intervals(
+                gaps, self._gc_prev_garbage.get(name, []))
+            collectable[name] = sum(e - s for s, e in both)
+        self._gc_prev_garbage = garbage_now
+
+        # Most-garbage-first ordering (§2.8): those files reclaim the most
+        # space for the least rewrite I/O.
+        by_garbage = sorted(garbage_per_file.items(),
+                            key=lambda kv: kv[1], reverse=True)
+        reclaimed = rewritten = files_compacted = 0
+        for name, garbage in by_garbage:
+            if garbage == 0 or collectable.get(name, 0) == 0:
+                continue
+            r, w = self._sparse_rewrite(name, live_by_file.get(name, []))
+            reclaimed += r
+            rewritten += w
+            files_compacted += 1
+            if max_files is not None and files_compacted >= max_files:
+                break
+        self.stats.gc_bytes_reclaimed += reclaimed
+        self.stats.gc_bytes_rewritten += rewritten
+        return {"reclaimed": reclaimed, "rewritten": rewritten,
+                "files": files_compacted}
+
+    def _sparse_rewrite(self, name: str,
+                        live: List[Tuple[int, int]]) -> Tuple[int, int]:
+        """Rewrite a backing file keeping only live extents, seeking past
+        garbage (→ sparse file, offsets preserved, pointers stay valid)."""
+        bf = self._get_backing_file(name)
+        with bf.lock:
+            tmp = bf.path + ".gc"
+            written = 0
+            with open(tmp, "wb") as out:
+                for off, ln in sorted(live):
+                    data = os.pread(bf._fh.fileno(), ln, off)
+                    out.seek(off)           # seek past garbage → hole
+                    out.write(data)
+                    written += ln
+                out.truncate(max(bf.size, 0))
+            old_real = os.stat(bf.path).st_blocks * 512
+            os.replace(tmp, bf.path)
+            bf._fh.close()
+            bf._fh = open(bf.path, "rb+", buffering=0)
+            new_real = os.stat(bf.path).st_blocks * 512
+            reclaimed = max(0, old_real - new_real)
+            return reclaimed, written
+
+    # ------------------------------------------------------------- failures
+    def crash(self) -> None:
+        self.alive = False
+
+    def recover(self) -> None:
+        self.alive = True
+
+    def close(self) -> None:
+        for bf in self._files.values():
+            bf.close()

@@ -1,0 +1,164 @@
+"""Deterministic, resumable, multi-host training-data pipeline on WTF.
+
+Per epoch, the pipeline materializes a *shuffled epoch file* with the
+zero-copy shuffle (metadata only), then serves per-host batches by reading
+contiguous record ranges.  Because every epoch file is a pure function of
+(sources, seed, epoch), and the cursor is a single integer, the iterator
+state is tiny and is checkpointed transactionally together with the model —
+after a restart, data position and weights can never disagree.
+
+Multi-host / elastic: hosts slice the batch by ``host_id``/``num_hosts``;
+``with_hosts`` re-derives a pipeline for a new topology at the same global
+step (elastic re-scale), which is valid precisely because epoch files are
+deterministic and host assignment is stateless.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import WtfClient
+from .records import RecordFile
+from .shuffle import shuffle_epoch
+
+
+@dataclass
+class PipelineConfig:
+    src_paths: Tuple[str, ...]
+    work_dir: str                  # where epoch files live, e.g. /data/epochs
+    block_tokens: int              # tokens per record (seq_len + 1)
+    global_batch: int              # sequences per step across all hosts
+    seed: int = 0
+    dtype: str = "int32"
+    run_length: int = 1            # shuffle granularity (records)
+    host_id: int = 0
+    num_hosts: int = 1
+    prefetch: int = 2              # prefetched batches (0 = synchronous)
+
+    def __post_init__(self):
+        if self.global_batch % self.num_hosts:
+            raise ValueError("global_batch must divide evenly across hosts")
+
+
+@dataclass
+class PipelineState:
+    """The checkpointable cursor — deliberately tiny."""
+    epoch: int = 0
+    step_in_epoch: int = 0
+
+    def to_dict(self) -> dict:
+        return {"epoch": self.epoch, "step_in_epoch": self.step_in_epoch}
+
+    @staticmethod
+    def from_dict(d: dict) -> "PipelineState":
+        return PipelineState(d["epoch"], d["step_in_epoch"])
+
+
+class DataPipeline:
+    def __init__(self, client: WtfClient, config: PipelineConfig,
+                 state: Optional[PipelineState] = None):
+        self.client = client
+        self.cfg = config
+        self.state = state or PipelineState()
+        self._itemsize = np.dtype(config.dtype).itemsize
+        self.record_bytes = config.block_tokens * self._itemsize
+        self._epoch_file: Optional[RecordFile] = None
+        self._epoch_loaded = -1
+        if not client.exists(config.work_dir):
+            client.mkdir(config.work_dir)
+
+    # ----------------------------------------------------------- epoch mgmt
+    def _epoch_path(self, epoch: int) -> str:
+        return f"{self.cfg.work_dir}/epoch-{epoch:05d}"
+
+    def _ensure_epoch(self, epoch: int) -> RecordFile:
+        if self._epoch_loaded == epoch and self._epoch_file is not None:
+            return self._epoch_file
+        path = self._epoch_path(epoch)
+        if not self.client.exists(path):
+            # Zero-copy shuffle: pure metadata, deterministic in (seed, epoch)
+            shuffle_epoch(self.client, self.cfg.src_paths, path,
+                          self.record_bytes,
+                          seed=self.cfg.seed + epoch,
+                          run_length=self.cfg.run_length)
+        if self._epoch_file is not None:
+            self._epoch_file.close()
+        self._epoch_file = RecordFile(self.client, path, self.record_bytes)
+        self._epoch_loaded = epoch
+        return self._epoch_file
+
+    @property
+    def steps_per_epoch(self) -> int:
+        f = self._ensure_epoch(self.state.epoch)
+        return f.count // self.cfg.global_batch
+
+    # ------------------------------------------------------------- batching
+    def _host_batch(self, epoch: int, step: int) -> np.ndarray:
+        """This host's rows of global step ``step`` in ``epoch``."""
+        f = self._ensure_epoch(epoch)
+        per_host = self.cfg.global_batch // self.cfg.num_hosts
+        base = step * self.cfg.global_batch + self.cfg.host_id * per_host
+        raw = f.read_records(base, per_host)
+        arr = np.frombuffer(raw, dtype=self.cfg.dtype).reshape(
+            per_host, self.cfg.block_tokens)
+        return arr
+
+    def __iter__(self) -> Iterator[dict]:
+        if self.cfg.prefetch > 0:
+            return self._prefetching_iter()
+        return self._sync_iter()
+
+    def _sync_iter(self) -> Iterator[dict]:
+        while True:
+            epoch, step = self.state.epoch, self.state.step_in_epoch
+            f = self._ensure_epoch(epoch)
+            if (step + 1) * self.cfg.global_batch > f.count:
+                self.state = PipelineState(epoch + 1, 0)
+                continue
+            blocks = self._host_batch(epoch, step)
+            self.state = PipelineState(epoch, step + 1)
+            yield {
+                "tokens": blocks[:, :-1],
+                "labels": blocks[:, 1:],
+                "epoch": epoch,
+                "step_in_epoch": step,
+            }
+
+    def _prefetching_iter(self) -> Iterator[dict]:
+        """Background-thread prefetch: overlaps storage reads with compute
+        (the trainer's step time hides the pipeline's I/O)."""
+        q: "queue.Queue" = queue.Queue(maxsize=self.cfg.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            try:
+                for item in self._sync_iter():
+                    if stop.is_set():
+                        return
+                    q.put(item)
+            except Exception as e:           # surface errors to the consumer
+                q.put(e)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+
+    # ---------------------------------------------------------- elasticity
+    def with_hosts(self, host_id: int, num_hosts: int) -> "DataPipeline":
+        """Same logical stream, new topology (elastic re-scale)."""
+        import dataclasses
+
+        cfg = dataclasses.replace(self.cfg, host_id=host_id,
+                                  num_hosts=num_hosts)
+        return DataPipeline(self.client, cfg, state=self.state)

@@ -1,0 +1,112 @@
+"""Record-oriented files on WTF.
+
+Training shards are files of *fixed-size records* (a record = ``block_size``
+int32 tokens, or an arbitrary payload for the sort benchmark).  Fixed framing
+is what makes the slicing API shine: any record's byte range is computable,
+so datasets can be shuffled, mixed, and re-sharded with ``yank``/``paste`` —
+pure metadata operations that move zero data bytes (the paper's sort
+pipeline, §4.1, applied to training data).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import Extent, WtfClient
+
+
+@dataclass(frozen=True)
+class RecordSpec:
+    record_bytes: int          # fixed record size in bytes
+    count: int                 # number of records in the file
+
+
+class RecordWriter:
+    """Sequentially append fixed-size records to a WTF file."""
+
+    def __init__(self, client: WtfClient, path: str, record_bytes: int):
+        self.client = client
+        self.path = path
+        self.record_bytes = record_bytes
+        self._fd = client.open(path, "w")
+        self._count = 0
+
+    def append(self, payload: bytes) -> int:
+        if len(payload) != self.record_bytes:
+            raise ValueError(
+                f"record must be exactly {self.record_bytes} bytes, "
+                f"got {len(payload)}")
+        self.client.append(self._fd, payload)
+        self._count += 1
+        return self._count - 1
+
+    def append_array(self, tokens: np.ndarray) -> int:
+        return self.append(np.ascontiguousarray(tokens).tobytes())
+
+    def close(self) -> RecordSpec:
+        self.client.close(self._fd)
+        return RecordSpec(self.record_bytes, self._count)
+
+
+class RecordFile:
+    """Random and sliced access to a fixed-record WTF file."""
+
+    def __init__(self, client: WtfClient, path: str, record_bytes: int):
+        self.client = client
+        self.path = path
+        self.record_bytes = record_bytes
+        self._fd = client.open(path, "r")
+        size = client.stat(path)["size"]
+        if size % record_bytes:
+            raise ValueError(
+                f"{path}: size {size} is not a multiple of record size "
+                f"{record_bytes}")
+        self.count = size // record_bytes
+
+    # -- data-plane reads ---------------------------------------------------
+    def read_record(self, idx: int) -> bytes:
+        self._check(idx)
+        return self.client.pread(self._fd, self.record_bytes,
+                                 idx * self.record_bytes)
+
+    def read_records(self, start: int, n: int) -> bytes:
+        self._check(start)
+        n = min(n, self.count - start)
+        return self.client.pread(self._fd, n * self.record_bytes,
+                                 start * self.record_bytes)
+
+    def read_tokens(self, idx: int, dtype=np.int32) -> np.ndarray:
+        return np.frombuffer(self.read_record(idx), dtype=dtype)
+
+    # -- metadata-plane (zero-copy) ------------------------------------------
+    def yank_records(self, start: int, n: int) -> List[Extent]:
+        """Slice pointers for records [start, start+n) — no data I/O."""
+        self._check(start)
+        n = min(n, self.count - start)
+        self.client.seek(self._fd, start * self.record_bytes)
+        return list(self.client.yank(self._fd, n * self.record_bytes))
+
+    def _check(self, idx: int) -> None:
+        if not (0 <= idx < self.count):
+            raise IndexError(f"record {idx} out of range [0,{self.count})")
+
+    def close(self) -> None:
+        self.client.close(self._fd)
+
+
+def write_token_shard(client: WtfClient, path: str,
+                      token_stream: Iterable[int], block_tokens: int,
+                      dtype=np.int32) -> RecordSpec:
+    """Pack a token stream into fixed ``block_tokens`` records; the tail
+    partial block is dropped (standard LM-shard convention)."""
+    itemsize = np.dtype(dtype).itemsize
+    w = RecordWriter(client, path, block_tokens * itemsize)
+    buf: list[int] = []
+    for tok in token_stream:
+        buf.append(tok)
+        if len(buf) == block_tokens:
+            w.append_array(np.asarray(buf, dtype=dtype))
+            buf.clear()
+    return w.close()

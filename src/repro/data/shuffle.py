@@ -1,0 +1,91 @@
+"""Zero-copy global shuffle and dataset mixing (the paper's technique as a
+training-data primitive).
+
+A global shuffle of N fixed-size records is a permutation of their slice
+pointers: yank every record, permute, paste into the epoch file.  Data bytes
+moved: **zero** — the same property that gives the paper's sort benchmark its
+4× win (§4.1, Table 2).  The shuffled file then reads *sequentially* for the
+trainer, and locality-aware placement keeps those reads contiguous per
+source region.
+
+Mixing datasets with weights is the same trick: interleave yanked record
+runs from each source proportionally to the weights.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import WtfClient
+from .records import RecordFile, RecordSpec
+
+
+def shuffle_epoch(client: WtfClient, src_paths: Sequence[str],
+                  dst_path: str, record_bytes: int, seed: int,
+                  run_length: int = 1) -> int:
+    """Create ``dst_path`` = a seeded permutation of all records across the
+    source shards.  Returns the number of records.
+
+    ``run_length`` shuffles *runs* of consecutive records instead of single
+    records — coarser shuffling that preserves more disk locality (longer
+    mergeable extents), the classic shuffle-quality/IO-locality dial.
+    """
+    files = [RecordFile(client, p, record_bytes) for p in src_paths]
+    runs: List[Tuple[int, int, int]] = []      # (file idx, start, n)
+    for fi, f in enumerate(files):
+        for start in range(0, f.count, run_length):
+            runs.append((fi, start, min(run_length, f.count - start)))
+
+    rng = np.random.Generator(np.random.Philox(seed))
+    order = rng.permutation(len(runs))
+
+    total = 0
+    with client.transaction():
+        dst = client.open(dst_path, "w")
+        for ri in order:
+            fi, start, n = runs[ri]
+            extents = files[fi].yank_records(start, n)
+            client.paste(dst, extents)
+            total += n
+        client.close(dst)
+    for f in files:
+        f.close()
+    return total
+
+
+def mix_datasets(client: WtfClient, specs: Sequence[Tuple[str, float]],
+                 dst_path: str, record_bytes: int, seed: int,
+                 total_records: Optional[int] = None) -> int:
+    """Weighted mixture: dst is an interleaving of source records where
+    source i contributes proportionally to its weight.  Zero data I/O.
+
+    Sampling is without replacement per source; a source that runs dry stops
+    contributing (the remaining weights renormalize implicitly).
+    """
+    files = [RecordFile(client, p, record_bytes) for p, _ in specs]
+    weights = np.asarray([w for _, w in specs], dtype=np.float64)
+    weights = weights / weights.sum()
+    rng = np.random.Generator(np.random.Philox(seed))
+    cursors = [0] * len(files)
+    budget = (sum(f.count for f in files)
+              if total_records is None else total_records)
+
+    written = 0
+    with client.transaction():
+        dst = client.open(dst_path, "w")
+        while written < budget:
+            avail = [i for i, f in enumerate(files)
+                     if cursors[i] < f.count]
+            if not avail:
+                break
+            w = weights[avail]
+            src = int(rng.choice(avail, p=w / w.sum()))
+            extents = files[src].yank_records(cursors[src], 1)
+            client.paste(dst, extents)
+            cursors[src] += 1
+            written += 1
+        client.close(dst)
+    for f in files:
+        f.close()
+    return written

@@ -1,0 +1,149 @@
+"""FlashAttention-2 forward as a Pallas TPU kernel.
+
+Tiling: grid = (B·H, Sq/BQ, Skv/BK); the innermost (kv) grid dimension is
+sequential ("arbitrary"), so fp32 scratch accumulators persist across kv
+blocks for a fixed (head, q-block):
+
+  acc [BQ, D]  running un-normalized output
+  m   [BQ]     running row max          (log-sum-exp streaming)
+  l   [BQ]     running denominator
+
+VMEM working set per step: q (BQ·D) + k,v (2·BK·D) + acc ≈
+(128·128 + 2·128·128 + 128·128) · 4 B ≈ 256 kB — far under the ~16 MB VMEM
+budget; BQ=BK=128 keeps every MXU matmul dimension at the native 128.
+Causal blocks strictly above the diagonal are skipped with `pl.when`
+(the classic ~2× saving for causal masks).
+
+GQA is handled in the index maps: kv head = q head // (H/Hkv) — no
+`repeat_kv` materialization anywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool,
+                sliding_window: Optional[int],
+                block_q: int, block_k: int, kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip fully-masked blocks (strictly above the causal diagonal or
+    # entirely left of the sliding window)
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if sliding_window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1
+            > q_start - sliding_window)
+
+    @pl.when(relevant)
+    def compute():
+        q = q_ref[0].astype(jnp.float32)            # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)            # [BK, D]
+        v = v_ref[0].astype(jnp.float32)            # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [BQ, BK]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if sliding_window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])             # [BQ, BK]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        sliding_window: Optional[int] = None,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False) -> jax.Array:
+    """q: [BH, Sq, D]; k/v: [BH_kv... actually [BH, Skv, D] after the ops
+    wrapper flattens (batch, head) and resolves GQA groups via index maps.
+    This entry takes q [B, H, Sq, D] and k/v [B, Hkv, Skv, D]."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    q_blocks = pl.cdiv(sq, block_q)
+    kv_blocks = pl.cdiv(skv, block_k)
+
+    grid = (b * h, q_blocks, kv_blocks)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh % h) // groups + (bh // h) * hkv, ki, 0)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=1.0 / np.sqrt(d), causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        kv_blocks=kv_blocks)
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Layout contract with the models: q [B, S, H, D], k/v [B, S, Hkv, D]
+(sequence-major, as produced by the QKV projections).  The wrapper moves
+heads outward — the kernel wants contiguous [*, S, D] panes — and attaches
+a custom VJP whose backward recomputes attention with the pure-jnp
+reference (flash forward is the serving/prefill hot path; training defaults
+to attn_impl="xla" where XLA's own fused attention applies)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal: bool = True,
+                    sliding_window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D] → [B, Sq, H, D]."""
+    qt = jnp.moveaxis(q, 2, 1)          # [B, H, Sq, D]
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    out = flash_attention_fwd(qt, kt, vt, causal=causal,
+                              sliding_window=sliding_window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def _fwd(q, k, v, causal, sliding_window, block_q, block_k, interpret):
+    out = flash_attention(q, k, v, causal, sliding_window, block_q,
+                          block_k, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, sliding_window, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(
+            q_, k_, v_, causal=causal, sliding_window=sliding_window),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

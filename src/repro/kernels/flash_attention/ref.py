@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  sliding_window: Optional[int] = None) -> jax.Array:
+    """q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D] with H % Hkv == 0.
+    fp32 softmax, output in q.dtype — the exact contract the Pallas kernel
+    must meet."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if sliding_window is not None:
+        mask = mask & (kpos > qpos - sliding_window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)

@@ -1,0 +1,27 @@
+"""jit'd wrapper matching the model-side calling convention
+(xh [B,S,H,P], dt [B,S,H] post-softplus, a_log [H], b/c [B,S,N], D [H])
+— the same contract as `repro.models.mamba2.ssd_chunked`."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, a_log, b, c, d_skip, *, chunk: int = 128,
+             interpret: bool = False):
+    """Returns (y [B,S,H,P], s_final [B,H,P,N]); y includes the D·x skip."""
+    f32 = jnp.float32
+    dt = dt.astype(f32)
+    la = -jnp.exp(a_log.astype(f32))
+    dta = (dt * la).transpose(0, 2, 1)             # [B,H,S]
+    xw = (xh.astype(f32) * dt[..., None]).transpose(0, 2, 1, 3)  # [B,H,S,P]
+    y, s_final = ssd_scan_kernel(xw, dta, b.astype(f32), c.astype(f32),
+                                 chunk=chunk, interpret=interpret)
+    y = y.transpose(0, 2, 1, 3)                    # [B,S,H,P]
+    y = y + d_skip.astype(f32)[None, None, :, None] * xh.astype(f32)
+    return y, s_final

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the chunked SSD scan: the sequential recurrence,
+one token at a time — the ground truth both the chunked jnp path and the
+Pallas kernel must match."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_recurrent_ref(xw: jax.Array, dta: jax.Array, b: jax.Array,
+                      c: jax.Array,
+                      s0: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token SSD recurrence (fp32).
+
+    xw:  [B, S, H, P]  dt-weighted inputs (x · dt)
+    dta: [B, S, H]     log-decay per step (dt · A, A < 0)
+    b,c: [B, S, N]
+    Returns (y [B, S, H, P], s_final [B, H, P, N]).
+    """
+    bsz, s, h, p = xw.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    xw, dta = xw.astype(f32), dta.astype(f32)
+    b, c = b.astype(f32), c.astype(f32)
+
+    def step(state, inp):
+        xw_t, dta_t, b_t, c_t = inp
+        state = state * jnp.exp(dta_t)[:, :, None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xw_t, b_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    init = jnp.zeros((bsz, h, p, n), f32) if s0 is None \
+        else s0.astype(f32)
+    xs = (jnp.moveaxis(xw, 1, 0), jnp.moveaxis(dta, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    s_final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), s_final

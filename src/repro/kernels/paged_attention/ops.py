@@ -1,0 +1,25 @@
+"""jit'd wrapper: adapts the serving PagedKVCache layout
+([L, P, T, Hkv, D] pools + python page tables) to the kernel layout and
+dispatches per layer."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def paged_attention(q, k_pages, v_pages, page_table, lengths,
+                    *, interpret: bool = False, use_kernel: bool = True):
+    """q: [B, H, D]; k_pages/v_pages: [P, T, Hkv, D] (pool layout);
+    page_table: [B, PP]; lengths: [B] → [B, H, D]."""
+    kp = jnp.moveaxis(k_pages, 2, 0)      # [Hkv, P, T, D]
+    vp = jnp.moveaxis(v_pages, 2, 0)
+    if use_kernel:
+        return paged_attention_kernel(q, kp, vp, page_table, lengths,
+                                      interpret=interpret)
+    return paged_attention_ref(q, kp, vp, page_table, lengths)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """q: [B, H, D]; k_pages/v_pages: [Hkv, P, T, D];
+    page_table: [B, pages_per_seq] int32 (-1 = unused);
+    lengths: [B] int32.  Returns [B, H, D].
+
+    Gathers each sequence's pages (the metadata-list walk, materialized),
+    then does masked softmax attention for the single query token.
+    """
+    b, h, d = q.shape
+    hkv, _, t, _ = k_pages.shape
+    groups = h // hkv
+    pp = page_table.shape[1]
+
+    tbl = jnp.maximum(page_table, 0)                   # [B, PP]
+    k = jnp.moveaxis(k_pages[:, tbl], 0, 2)            # [B, PP, Hkv, T, D]
+    v = jnp.moveaxis(v_pages[:, tbl], 0, 2)
+    k = k.transpose(0, 1, 3, 2, 4).reshape(b, pp * t, hkv, d)
+    v = v.transpose(0, 1, 3, 2, 4).reshape(b, pp * t, hkv, d)
+    k = jnp.repeat(k, groups, axis=2)                  # [B, S, H, D]
+    v = jnp.repeat(v, groups, axis=2)
+
+    logits = jnp.einsum("bhd,bshd->bhs", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(d)
+    pos = jnp.arange(pp * t)[None, :]
+    mask = pos < lengths[:, None]                      # [B, S]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs.astype(v.dtype), v)

@@ -1,0 +1,1 @@
+"""Launchers: production meshes, AOT dry-run, train/serve drivers."""

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " \
+    + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod AOT dry-run: lower + compile every (arch × shape × mesh) cell
+against the production meshes, record memory/cost/collective artifacts.
+
+This module — and ONLY this module — forces 512 host devices, before any
+other import (jax locks the device count on first init).  Smoke tests and
+benchmarks see the real single CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both [--force]
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and are
+skipped if present (delete or --force to redo); EXPERIMENTS.md §Dry-run and
+§Roofline are generated from them by repro.roofline.report.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCHS, SHAPES, get_config, get_shape
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.models import get_model
+from repro.models.common import decode_window
+from repro.parallel.sharding import make_rules, spec_for, tree_shardings, P
+from repro.roofline.hlo_analysis import analyze
+from repro.train import TrainHyper, abstract_state, make_prefill_step, \
+    make_serve_step, make_train_step
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def cell_config(arch: str, shape_name: str):
+    """Per-cell config adjustments (documented in DESIGN.md):
+    - long_500k applies `long_context_window` to attention sites;
+    - whisper decode cells size the learned-position table to seq_len;
+    - the dry-run always lowers the XLA attention path (Pallas kernels are
+      validated separately in interpret mode — they don't lower for the
+      host platform)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    cfg = cfg.replace(attn_impl="xla")
+    if shape_name == "long_500k" and cfg.long_context_window is not None:
+        cfg = cfg.replace(sliding_window=cfg.long_context_window)
+    if cfg.encdec is not None or cfg.max_seq < shape.seq_len:
+        cfg = cfg.replace(max_seq=max(shape.seq_len, cfg.max_seq))
+    if shape.kind in ("prefill", "decode"):
+        # serving: no fp32 master copy — bf16 params halve both the
+        # per-step FSDP all-gather bytes and the weight-read traffic
+        cfg = cfg.replace(param_dtype="bfloat16")
+    return cfg, shape
+
+
+def batch_shardings(specs, mesh, rules):
+    """First dim of every input is the global batch."""
+    def sh(s):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, spec_for(axes, rules))
+    return jax.tree.map(sh, specs)
+
+
+def skip_reason(cfg, shape_name: str):
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k decode requires sub-quadratic "
+                "attention — skipped per DESIGN.md §Arch-applicability")
+    return None
+
+
+def fit_batch_rule(mesh, rules, global_batch: int):
+    """Shrink the batch mapping until it divides the global batch
+    (long_500k has batch=1 — everything batch-wise is replicated)."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rule = rules.get("batch")
+    if rule is None:
+        return rules
+    axes = rule if isinstance(rule, tuple) else (rule,)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= axis_size[a]
+        if global_batch % n == 0:
+            break
+        axes = axes[1:]
+    rules = dict(rules)
+    rules["batch"] = axes if axes else None
+    return rules
+
+
+def build_cell(arch: str, shape_name: str, mesh, hyper=None):
+    """Returns (fn, example_args, in_shardings, out_shardings, meta)."""
+    cfg, shape = cell_config(arch, shape_name)
+    model = get_model(cfg)
+    rules = make_rules(mesh, **dict(cfg.rules_overrides))
+    rules = fit_batch_rule(mesh, rules, shape.global_batch)
+    if (shape.kind == "prefill" and rules.get("heads") is None
+            and shape.seq_len % mesh.shape["model"] == 0):
+        # sequence parallelism: when the head count cannot shard on the
+        # model axis, shard the sequence instead — activations and the
+        # S² attention logits partition S/16 per device (§Perf).  The
+        # activation mlp/vocab dims hand their model-axis mapping to seq
+        # (weights keep TP; one mesh axis can't shard two dims of a tensor)
+        rules["seq"] = "model"
+        rules["act_mlp"] = None
+        rules["act_vocab"] = None
+    if shape.kind == "decode":
+        # KV-parallel decode (split-K): shard the ring-cache window dim on
+        # the model axis.  The cache is then fully sharded in storage AND
+        # compute (partial softmax + tiny all-reduces), instead of XLA
+        # re-gathering a replicated cache to match sharded query heads
+        # (measured 212 GB/step of entry all-gather on mistral decode_32k)
+        window = decode_window(cfg, shape.seq_len)
+        if window % mesh.shape["model"] == 0 \
+                and rules.get("kv_heads") is None:
+            # (when kv heads themselves shard on model — whisper/zamba2/
+            # olmoe — the cache is already fully sharded that way)
+            rules["window"] = "model"
+    hyper = hyper or TrainHyper(accum_steps=cfg.accum_steps)
+
+    param_sh = tree_shardings(model.schema(), mesh, rules)
+    inputs = model.input_specs(shape)
+    input_sh = batch_shardings(inputs, mesh, rules)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": model.param_count(),
+        "active_params": model.active_param_count(),
+        "accum_steps": hyper.accum_steps,
+    }
+
+    if shape.kind == "train":
+        state = abstract_state(model)
+        rep = NamedSharding(mesh, PartitionSpec())
+        state_sh = {
+            "params": param_sh,
+            "opt": jax.tree.map(
+                lambda _: None, state["opt"],
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+            "step": rep,
+        }
+        # moments mirror the param shardings
+        state_sh["opt"] = type(state["opt"])(
+            m=param_sh, v=param_sh, count=rep)
+        fn = make_train_step(model, hyper, rules)
+        args = (state, inputs)
+        in_sh = (state_sh, input_sh)
+        out_sh = (state_sh, None)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model, rules)
+        args = (model.abstract_params(), inputs)
+        in_sh = (param_sh, input_sh)
+        out_sh = None
+        donate = ()
+    else:                                       # decode
+        cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cache_sh = tree_shardings(
+            model.cache_schema(shape.global_batch, shape.seq_len),
+            mesh, rules)
+        fn = make_serve_step(model, rules)
+        args = (model.abstract_params(), cache, inputs)
+        in_sh = (param_sh, cache_sh, input_sh)
+        out_sh = (None, cache_sh)
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hyper=None, save: bool = True, verbose: bool = True):
+    mesh_name = "multipod" if multi_pod else "pod"
+    cfg, shape = cell_config(arch, shape_name)
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        out.update({"status": "skip", "reason": reason})
+        return _finish(out, save, verbose)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_devices(mesh)
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh, donate, meta = build_cell(
+            arch, shape_name, mesh, hyper)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        if save:
+            import gzip
+            hlo_dir = ARTIFACT_DIR.parent / "hlo"
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            with gzip.open(hlo_dir / (f"{arch}__{shape_name}__"
+                                      f"{mesh_name}.hlo.gz"), "wt") as f:
+                f.write(hlo)
+        ana = analyze(hlo, total_devices=chips)
+        out.update(meta)
+        out.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "hlo_bytes": len(hlo),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            } if mem is not None else None,
+            "xla_cost_flops": cost.get("flops"),
+            "xla_cost_bytes": cost.get("bytes accessed"),
+            # per-device terms from our trip-count-aware HLO walk
+            "hlo_flops_per_device": ana.flops,
+            "hlo_bytes_per_device": ana.bytes_accessed,
+            "collectives": ana.collective_ops,
+        })
+    except Exception as e:                       # noqa: BLE001
+        out.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    return _finish(out, save, verbose)
+
+
+def _finish(record, save, verbose):
+    if save:
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        path = ARTIFACT_DIR / (f"{record['arch']}__{record['shape']}__"
+                               f"{record['mesh']}.json")
+        path.write_text(json.dumps(record, indent=1))
+    if verbose:
+        s = record["status"]
+        extra = ""
+        if s == "ok":
+            extra = (f" flops/dev={record['hlo_flops_per_device']:.3e}"
+                     f" compile={record['compile_s']:.0f}s")
+        elif s == "error":
+            extra = " " + record["error"][:200]
+        print(f"[dryrun] {record['arch']} × {record['shape']} × "
+              f"{record['mesh']}: {s}{extra}", flush=True)
+    return record
+
+
+def artifact_path(arch, shape_name, mesh_name) -> Path:
+    return ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def reanalyze_all():
+    """Recompute analyzer-derived fields from stored HLO (no recompile)."""
+    import gzip
+    hlo_dir = ARTIFACT_DIR.parent / "hlo"
+    n = 0
+    for p in sorted(ARTIFACT_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hp = hlo_dir / (p.stem + ".hlo.gz")
+        if not hp.exists():
+            print(f"[reanalyze] no HLO for {p.name}")
+            continue
+        with gzip.open(hp, "rt") as f:
+            hlo = f.read()
+        ana = analyze(hlo, total_devices=rec["chips"])
+        rec["hlo_flops_per_device"] = ana.flops
+        rec["hlo_bytes_per_device"] = ana.bytes_accessed
+        rec["collectives"] = ana.collective_ops
+        p.write_text(json.dumps(rec, indent=1))
+        n += 1
+    print(f"[reanalyze] updated {n} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute terms from stored HLO, no compiles")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze_all()
+        return
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    failures = 0
+    for multi in meshes:
+        mname = "multipod" if multi else "pod"
+        for arch in archs:
+            for shape in shapes:
+                p = artifact_path(arch, shape, mname)
+                if p.exists() and not args.force:
+                    rec = json.loads(p.read_text())
+                    if rec.get("status") in ("ok", "skip"):
+                        print(f"[dryrun] cached {p.name}: "
+                              f"{rec['status']}", flush=True)
+                        continue
+                rec = run_cell(arch, shape, multi)
+                failures += rec["status"] == "error"
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Production train driver.
+
+  python -m repro.launch.train --arch smollm-360m --steps 200 [--smoke]
+
+On real hardware this process runs per host (jax.distributed); in this
+container it drives the reduced config end-to-end on CPU with the full
+substrate (WTF data pipeline, transactional checkpoints, restart).
+The full-scale configs are exercised via `repro.launch.dryrun`.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core import Cluster
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.data.records import write_token_shard
+from repro.models import get_model
+from repro.train import AdamWConfig, TrainHyper
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (full configs need TPUs; see "
+                    "repro.launch.dryrun)")
+    ap.add_argument("--data-dir", default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch)).replace(max_seq=args.seq)
+    model = get_model(cfg)
+    data_dir = args.data_dir or tempfile.mkdtemp(prefix="wtf_launch_")
+    cluster = Cluster(n_servers=4, data_dir=data_dir, replication=2)
+    fs = cluster.client()
+    if not fs.exists("/corpus"):
+        fs.mkdir("/corpus")
+        rng = np.random.RandomState(0)
+        write_token_shard(
+            fs, "/corpus/shard0",
+            iter(rng.randint(0, cfg.vocab,
+                             args.batch * (args.seq + 1) * 64)),
+            args.seq + 1)
+    pipe = DataPipeline(fs, PipelineConfig(
+        src_paths=("/corpus/shard0",), work_dir="/epochs",
+        block_tokens=args.seq + 1, global_batch=args.batch, seed=0))
+    trainer = Trainer(
+        model, pipe, CheckpointManager(fs, "/ckpt", keep=3),
+        hyper=TrainHyper(adamw=AdamWConfig(warmup_steps=20,
+                                           decay_steps=args.steps),
+                         accum_steps=args.accum),
+        cfg=TrainerConfig(total_steps=args.steps))
+    trainer.run()
+    cluster.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Architecture zoo: 10 assigned architectures over 5 model families."""
+from .registry import Model, get_model
+
+__all__ = ["Model", "get_model"]

@@ -1,0 +1,110 @@
+"""Shared scaffolding for the architecture zoo.
+
+Every model module exposes the same five functions:
+
+  schema(cfg)                         -> pytree of P (declarative params)
+  forward(params, batch, cfg, rules)  -> logits  [B, S, vocab]
+  cache_spec(cfg, batch, max_len)     -> pytree of P for the decode cache
+  decode_step(params, cache, batch, cfg, rules) -> (logits, new_cache)
+  prefill(params, cache, batch, cfg, rules)     -> (logits, new_cache)
+
+`batch` is a dict of arrays (tokens/labels/positions/frames/patch_embeds);
+the launcher builds ShapeDtypeStructs of exactly the same structure for the
+AOT dry-run.  Layer parameters are *stacked* along a leading "layers" axis
+so the forward pass is a `lax.scan` — constant-size HLO regardless of depth,
+which is what keeps 88-layer × 512-device AOT compiles tractable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import P
+
+VOCAB_PAD = 128
+
+
+def padded_vocab(cfg) -> int:
+    """Embedding tables are padded to a multiple of 128 so the vocab axis
+    shards evenly on any mesh axis up to 128-way (whisper's 51865 and
+    granite's 49155 are not divisible by 16)."""
+    return -(-cfg.vocab // VOCAB_PAD) * VOCAB_PAD
+
+
+def stacked(n_layers: int, sub: Dict[str, P]) -> Dict[str, P]:
+    """Add a leading scan ("layers") axis to every P in a per-layer schema."""
+    out = {}
+    for k, p in sub.items():
+        out[k] = P((n_layers,) + p.shape, ("layers",) + p.axes,
+                   init=p.init, scale=p.scale, dtype=p.dtype)
+    return out
+
+
+def scan_layers(body, x, layer_params, cfg, *, extra_xs=None, length=None):
+    """`lax.scan` over stacked layer params with the config remat policy.
+
+    body(x, per_layer_params, per_layer_xs) -> (x, per_layer_ys)
+    """
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots,
+            prevent_cse=False)
+
+    def step(carry, xs):
+        params_i, extra_i = xs
+        return body(carry, params_i, extra_i)
+
+    xs = (layer_params, extra_xs)
+    x, ys = jax.lax.scan(step, x, xs, length=length)
+    return x, ys
+
+
+def attn_cache_spec(cfg, batch: int, window: int,
+                    n_layers: Optional[int] = None,
+                    prefix: str = "") -> Dict[str, P]:
+    """Ring-buffer KV cache schema, stacked on layers.
+
+    key_pos is int32 (-1 = empty); caches live in compute dtype.
+    """
+    n_layers = cfg.n_layers if n_layers is None else n_layers
+    hd = cfg.head_dim_
+    kv = (n_layers, batch, window, cfg.n_kv_heads, hd)
+    kv_axes = ("layers", "batch", "window", "kv_heads", None)
+    return {
+        prefix + "k": P(kv, kv_axes, init="zeros", dtype=cfg.compute_dtype),
+        prefix + "v": P(kv, kv_axes, init="zeros", dtype=cfg.compute_dtype),
+        prefix + "key_pos": P((n_layers, batch, window),
+                              ("layers", "batch", "window"),
+                              init="neg_ones", dtype="int32"),
+    }
+
+
+def decode_window(cfg, max_len: int) -> int:
+    """Cache width: full history, or the sliding window if the config
+    declares one (sub-quadratic long-context cells)."""
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def positions_for(tokens: jax.Array) -> jax.Array:
+    return jnp.arange(tokens.shape[1])[None, :]
+
+
+def token_specs(batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def decode_specs(batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

@@ -1,0 +1,142 @@
+"""Dense GQA transformer (mistral-large / command-r / qwen2 / smollm) and
+the LLaVA VLM backbone (dense + projected patch embeddings).
+
+Sequential pre-norm blocks by default; `parallel_block=True` (command-r)
+computes attention and FFN from one shared norm and sums the branches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import P, logical_constraint as lc
+from . import layers as L
+from .common import (attn_cache_spec, decode_specs, decode_window,
+                     padded_vocab, scan_layers, stacked, token_specs)
+
+
+def layer_schema(cfg) -> Dict[str, P]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    s: Dict[str, P] = {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        "wq": P((d, cfg.n_heads * hd), ("embed", "heads"), init="scaled"),
+        "wk": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wv": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wo": P((cfg.n_heads * hd, d), ("heads", "embed"), init="scaled"),
+        "ln2": P((d,), ("act_embed",), init="ones"),
+        "w_gate": P((d, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+        "w_up": P((d, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+        "w_down": P((cfg.d_ff, d), ("mlp", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        s["wq_b"] = P((cfg.n_heads * hd,), ("heads",), init="zeros")
+        s["wk_b"] = P((cfg.n_kv_heads * hd,), ("kv_heads",), init="zeros")
+        s["wv_b"] = P((cfg.n_kv_heads * hd,), ("kv_heads",), init="zeros")
+    if getattr(cfg, "parallel_block", False):
+        del s["ln2"]                      # one shared norm per block
+    return s
+
+
+def schema(cfg) -> Dict[str, Any]:
+    v = padded_vocab(cfg)
+    s: Dict[str, Any] = {
+        "embedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "layers": stacked(cfg.n_layers, layer_schema(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        s["unembedding"] = P((v, cfg.d_model), ("vocab", "embed"))
+    if cfg.vlm is not None:
+        s["vision_proj"] = P((cfg.vlm.vision_dim, cfg.d_model),
+                             (None, "embed"), init="scaled")
+    return s
+
+
+def _block(params, x, cfg, *, positions, rules, cache=None,
+           sliding_window=None):
+    """One transformer block; returns (x, new_cache)."""
+    if getattr(cfg, "parallel_block", False):
+        y = L.rms_norm(x, params["ln"], cfg.norm_eps)
+        attn, new_cache = L.gqa_block(params, y, cfg, positions=positions,
+                                      rules=rules, cache=cache, norm=False,
+                                      sliding_window=sliding_window)
+        mlp = L.swiglu({**params, "ln": None}, y, cfg, rules=rules,
+                       pre_normed=True)
+        return x + attn + mlp, new_cache
+    attn, new_cache = L.gqa_block(params, x, cfg, positions=positions,
+                                  rules=rules, cache=cache,
+                                  sliding_window=sliding_window)
+    x = x + attn
+    x = x + L.swiglu({**params, "ln": params["ln2"]}, x, cfg, rules=rules)
+    return x, new_cache
+
+
+def _embed_inputs(params, batch, cfg, rules):
+    """Token embeddings, with projected patch embeddings prepended for the
+    VLM backbone (the vision tower itself is a stub per the assignment)."""
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    positions = jnp.arange(batch["tokens"].shape[1])[None, :]
+    if cfg.vlm is not None and "patch_embeds" in batch:
+        dt = jnp.dtype(cfg.compute_dtype)
+        patches = jnp.einsum("bpv,vd->bpd",
+                             batch["patch_embeds"].astype(dt),
+                             params["vision_proj"].astype(dt))
+        patches = lc(patches, ("batch", "seq", "act_embed"), rules)
+        x = jnp.concatenate([patches, x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+    return x, positions
+
+
+def forward(params, batch, cfg, rules=None):
+    x, positions = _embed_inputs(params, batch, cfg, rules)
+
+    def body(x, p, _):
+        x, _ = _block(p, x, cfg, positions=positions, rules=rules,
+                      sliding_window=cfg.sliding_window)
+        return x, None
+
+    x, _ = scan_layers(body, x, params["layers"], cfg)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params, x, cfg, rules)
+    if cfg.vlm is not None and "patch_embeds" in batch:
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    return logits
+
+
+# ------------------------------------------------------------------ decode
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, P]:
+    return attn_cache_spec(cfg, batch, decode_window(cfg, max_len))
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    """One token: batch = {"tokens": [B,1], "pos": [B]}."""
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    pos = batch["pos"]
+
+    def body(x, p, cache_l):
+        x, new_cache = _block(p, x, cfg, positions=pos, rules=rules,
+                              cache=(cache_l["k"], cache_l["v"],
+                                     cache_l["key_pos"]),
+                              sliding_window=cfg.sliding_window)
+        k, v, kp = new_cache
+        return x, {"k": k, "v": v, "key_pos": kp}
+
+    x, new_cache = scan_layers(body, x, params["layers"], cfg,
+                               extra_xs=cache)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules), new_cache
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_specs(shape.global_batch)
+    specs = token_specs(shape.global_batch, shape.seq_len)
+    if cfg.vlm is not None:
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.vlm.num_patches, cfg.vlm.vision_dim),
+            jnp.dtype(cfg.compute_dtype))
+    return specs

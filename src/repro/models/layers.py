@@ -1,0 +1,340 @@
+"""Shared building blocks for the architecture zoo (pure JAX).
+
+Everything is functional: params are pytrees produced by the declarative
+schemas in each model file; these functions only compute.  ``rules`` is an
+optional logical→mesh table that drops activation sharding constraints into
+the graph (no-op when None, e.g. CPU smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import logical_constraint as lc
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+# ----------------------------------------------------------------- rotary
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2,
+                                      dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,D/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, h, groups, d)).reshape(b, s, h * groups, d)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              sliding_window: Optional[int] = None,
+              q_offset: Optional[jax.Array] = None,
+              kv_len: Optional[jax.Array] = None,
+              impl: str = "xla") -> jax.Array:
+    """Scaled-dot-product GQA attention.
+
+    q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D].  ``q_offset`` positions the
+    query block inside the kv timeline (decode: q_offset = kv_len - 1).
+    ``kv_len`` masks out unwritten cache slots.  ``impl`` selects the XLA
+    einsum path or the Pallas flash kernel (train/prefill shapes).
+    """
+    if impl.startswith("pallas") and q.shape[1] > 1 and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=(impl == "pallas_interpret"))
+
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    # grouped GQA: fold query heads over their kv head — no repeat_kv
+    # materialization of the K/V tensors (§Perf)
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+
+    # positions: qpos [Bm, Sq] (Bm = 1 or B), kpos [Skv]
+    qpos = jnp.arange(sq)[None, :]
+    if q_offset is not None:
+        qpos = qpos + jnp.reshape(q_offset, (-1, 1))
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((qpos.shape[0], sq, skv), dtype=bool)
+    if causal:
+        mask = mask & (kpos[None, None, :] <= qpos[:, :, None])
+    if sliding_window is not None:
+        mask = mask & (kpos[None, None, :]
+                       > qpos[:, :, None] - sliding_window)
+    if kv_len is not None:
+        mask = mask & (kpos[None, None, :] < jnp.reshape(kv_len, (-1, 1, 1)))
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     key_pos: jax.Array, qpos: jax.Array, *,
+                     sliding_window: Optional[int] = None,
+                     rules=None) -> jax.Array:
+    """Single-token attention against a ring-buffer cache.
+
+    q: [B, 1, H, D]; k_cache/v_cache: [B, W, Hkv, D]; key_pos: [B, W]
+    (absolute position written to each slot, -1 = empty); qpos: [B].
+    The ring layout makes full caches (W = max_len) and sliding-window
+    caches (W = window) the same code path — key validity is positional,
+    not slot-order based.
+
+    GQA is computed GROUPED (q reshaped to [B, Hkv, G, D]) — never via
+    `repeat_kv`, which would materialize H/Hkv copies of the cache in HBM
+    per layer per step (§Perf iteration: 12× cache-read blowup on
+    mistral-large decode_32k).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    mask = (key_pos >= 0) & (key_pos <= qpos[:, None])
+    if sliding_window is not None:
+        mask = mask & (key_pos > qpos[:, None] - sliding_window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    # probs back in cache dtype: the AV einsum must read the cache at its
+    # storage precision — an explicit f32 astype of the (sliced) cache gets
+    # hoisted by XLA into a full-cache convert INSIDE the layer loop
+    # (measured: 2.27 TB/step on mistral-large decode_32k; §Perf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, d).astype(q.dtype)
+    return lc(out, ("batch", None, "heads", None), rules)
+
+
+def cache_write(k_cache: jax.Array, v_cache: jax.Array, key_pos: jax.Array,
+                k: jax.Array, v: jax.Array, pos: jax.Array):
+    """Write one token's K/V into the ring cache at slot = pos % W.
+
+    k_cache/v_cache: [B, W, Hkv, D]; key_pos: [B, W]; k/v: [B, 1, Hkv, D];
+    pos: [B].  One batched scatter (unique indices) instead of a
+    vmap(dynamic_update_slice): the SPMD partitioner keeps the batch
+    dimension aligned for the former but falls back to replicate-and-
+    repartition for the latter (§Perf)."""
+    b, w = k_cache.shape[:2]
+    slot = pos % w
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(
+        k[:, 0].astype(k_cache.dtype), unique_indices=True,
+        indices_are_sorted=True)
+    v_cache = v_cache.at[bidx, slot].set(
+        v[:, 0].astype(v_cache.dtype), unique_indices=True,
+        indices_are_sorted=True)
+    key_pos = key_pos.at[bidx, slot].set(
+        pos.astype(key_pos.dtype), unique_indices=True,
+        indices_are_sorted=True)
+    return k_cache, v_cache, key_pos
+
+
+def gqa_block(params: Dict[str, Any], x: jax.Array, cfg, *,
+              positions: jax.Array, rules=None,
+              cache: Optional[Tuple] = None,
+              sliding_window: Optional[int] = None,
+              norm: bool = True):
+    """Pre-norm GQA attention block.  Returns (out, new_cache).
+
+    Training/prefill: cache=None, full sequence.
+    Decode: x is [B, 1, d]; cache=(k_cache, v_cache, key_pos) — ring-buffer
+    layout [B, W, Hkv, D] (see `decode_attention`); positions [B] are the
+    absolute token positions being written.
+    `norm=False` skips the input norm (parallel-block archs norm once).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.head_dim_
+    y = rms_norm(x, params["ln"], cfg.norm_eps) if norm else x
+    b, s, _ = y.shape
+
+    def proj(name, heads):
+        w = cast(params[name], dt)
+        out = jnp.einsum("bsd,dhk->bshk", y, w.reshape(cfg.d_model, heads, hd))
+        if cfg.qkv_bias and f"{name}_b" in params:
+            out = out + cast(params[f"{name}_b"], dt).reshape(1, 1, heads, hd)
+        return out
+
+    q = proj("wq", cfg.n_heads)
+    k = proj("wk", cfg.n_kv_heads)
+    v = proj("wv", cfg.n_kv_heads)
+    if cache is not None and positions.ndim == 1:
+        rope_pos = positions[:, None]                   # [B] -> [B, 1]
+    else:
+        rope_pos = positions
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
+    k = apply_rope(k, rope_pos, cfg.rope_theta)
+    q = lc(q, ("batch", "seq", "heads", None), rules)
+    k = lc(k, ("batch", "seq", "kv_heads", None), rules)
+
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache, key_pos = cache
+        k_cache, v_cache, key_pos = cache_write(
+            k_cache, v_cache, key_pos, cast(k, k_cache.dtype),
+            cast(v, v_cache.dtype), positions)
+        new_cache = (k_cache, v_cache, key_pos)
+        attn = decode_attention(q, cast(k_cache, dt), cast(v_cache, dt),
+                                key_pos, positions,
+                                sliding_window=sliding_window, rules=rules)
+    else:
+        attn = attention(q, k, v, causal=True,
+                         sliding_window=sliding_window, impl=cfg.attn_impl)
+
+    wo = cast(params["wo"], dt)
+    out = jnp.einsum("bshk,hkd->bsd",
+                     attn, wo.reshape(cfg.n_heads, hd, cfg.d_model))
+    return lc(out, ("batch", "seq", "act_embed"), rules), new_cache
+
+
+# ------------------------------------------------------------------- MLPs
+def swiglu(params, x, cfg, rules=None, pre_normed=False):
+    dt = jnp.dtype(cfg.compute_dtype)
+    y = x if pre_normed else rms_norm(x, params["ln"], cfg.norm_eps)
+    gate = jnp.einsum("bsd,df->bsf", y, cast(params["w_gate"], dt))
+    up = jnp.einsum("bsd,df->bsf", y, cast(params["w_up"], dt))
+    h = jax.nn.silu(gate) * up
+    h = lc(h, ("batch", "seq", "act_mlp"), rules)
+    out = jnp.einsum("bsf,fd->bsd", h, cast(params["w_down"], dt))
+    return lc(out, ("batch", "seq", "act_embed"), rules)
+
+
+def gelu_mlp(params, x, cfg, rules=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    y = layer_norm(x, params["ln"], params["ln_b"], cfg.norm_eps)
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, cast(params["w_up"], dt))
+                    + cast(params["b_up"], dt))
+    h = lc(h, ("batch", "seq", "act_mlp"), rules)
+    return jnp.einsum("bsf,fd->bsd", h, cast(params["w_down"], dt)) \
+        + cast(params["b_down"], dt)
+
+
+# -------------------------------------------------------------------- MoE
+def moe_block(params, x, cfg, rules=None, rng=None):
+    """Top-k expert routing with fixed capacity (gather/scatter dispatch).
+
+    Returns (out, aux_loss).  Compute scales with capacity (≈ active
+    experts), not num_experts — matching the MoE roofline.  EP: the expert
+    dim of the weights is sharded on "model"; XLA inserts the all-to-alls.
+    """
+    m = cfg.moe
+    e_pad = m.e_pad
+    dt = jnp.dtype(cfg.compute_dtype)
+    y = rms_norm(x, params["ln"], cfg.norm_eps)
+    b, s, d = y.shape
+    n_tok = b * s
+    flat = y.reshape(n_tok, d)
+
+    router_logits = jnp.einsum("td,de->te", flat.astype(jnp.float32),
+                               params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)         # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], m.num_experts, dtype=jnp.float32),
+        axis=0)
+    aux = m.num_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    capacity = int(np.ceil(n_tok * m.top_k / m.num_experts
+                           * m.capacity_factor))
+    capacity = max(capacity, 1)
+
+    # slot assignment: position of each (token, choice) within its expert
+    flat_e = top_e.reshape(-1)                           # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e_pad, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot       # 1-based slot
+    slot = jnp.sum(pos_in_e, axis=-1) - 1                # [T*k]
+    keep = slot < capacity                               # dropped beyond C
+
+    # dispatch: expert_inputs[e, c] = token routed to (e, c); the router
+    # only ever selects real experts, so padded rows stay empty
+    tok_idx = jnp.arange(n_tok * m.top_k) // m.top_k
+    e_idx = jnp.where(keep, flat_e, e_pad)               # overflow bucket
+    s_idx = jnp.where(keep, slot, 0)
+    expert_in = jnp.zeros((e_pad + 1, capacity, d), dt)
+    expert_in = expert_in.at[e_idx, s_idx].set(flat[tok_idx].astype(dt))
+    expert_in = expert_in[:-1]                           # drop overflow
+    expert_in = lc(expert_in, ("experts", None, "act_embed"), rules)
+
+    # per-expert SwiGLU at fixed capacity
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in,
+                               cast(params["w_gate"], dt))) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, cast(params["w_up"], dt))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, cast(params["w_down"], dt))
+    expert_out = lc(expert_out, ("experts", None, "act_embed"), rules)
+
+    # combine: weighted scatter back to token positions
+    gathered = expert_out[jnp.where(keep, flat_e, 0), s_idx]   # [T*k, d]
+    weight = jnp.where(keep, top_p.reshape(-1), 0.0).astype(dt)
+    out = jnp.zeros((n_tok, d), dt).at[tok_idx].add(gathered * weight[:, None])
+    return out.reshape(b, s, d), aux
+
+
+# -------------------------------------------------------------- embeddings
+def embed(params, tokens, cfg, rules=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(cast(params["embedding"], dt), tokens, axis=0)
+    return lc(x, ("batch", "seq", "act_embed"), rules)
+
+
+def unembed(params, x, cfg, rules=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    w = params.get("unembedding", params["embedding"])
+    logits = jnp.einsum("bsd,vd->bsv", x, cast(w, dt))
+    return lc(logits, ("batch", "seq", "act_vocab"), rules)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    return jnp.mean(logz - gold)

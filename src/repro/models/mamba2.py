@@ -1,0 +1,354 @@
+"""Mamba2 (SSD) blocks + Zamba2-style shared attention (zamba2-1.2b).
+
+Training/prefill uses the chunked SSD algorithm (quadratic only within a
+chunk, linear across chunks); decode is the O(1) recurrent update.  The
+layer stack is grouped: after every `hybrid.attn_period` Mamba2 layers the
+*weight-shared* attention+MLP block is applied (separate KV caches per
+application site — weights are shared, history is not).  Groups are
+unrolled in Python with an inner `lax.scan` per group so HLO cost reflects
+the true number of attention applications.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import P, logical_constraint as lc
+from . import layers as L
+from .common import (attn_cache_spec, decode_specs, decode_window,
+                     padded_vocab, scan_layers, stacked, token_specs)
+
+
+# --------------------------------------------------------------- structure
+def group_sizes(cfg) -> List[int]:
+    """Mamba-layer run lengths; shared attention fires after each full
+    `attn_period`-sized group (not after a trailing remainder)."""
+    period = cfg.hybrid.attn_period if cfg.hybrid else cfg.n_layers
+    sizes, left = [], cfg.n_layers
+    while left > 0:
+        sizes.append(min(period, left))
+        left -= period
+    return sizes
+
+
+def num_attn_sites(cfg) -> int:
+    period = cfg.hybrid.attn_period if cfg.hybrid else cfg.n_layers
+    return sum(1 for s in group_sizes(cfg) if s == period) \
+        if cfg.hybrid and cfg.hybrid.shared_attention else 0
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    nheads = inner // s.head_dim
+    conv_dim = inner + 2 * s.state_dim
+    return inner, nheads, conv_dim
+
+
+# ------------------------------------------------------------------ schema
+def layer_schema(cfg) -> Dict[str, P]:
+    d, s = cfg.d_model, cfg.ssm
+    inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        # in_proj → [z(inner), x(inner), B(N), C(N), dt(H)]
+        "in_proj": P((d, 2 * inner + 2 * s.state_dim + nheads),
+                     ("embed", "heads"), init="scaled"),
+        "conv_w": P((s.conv_width, conv_dim), ("conv", "heads"),
+                    init="scaled", scale=0.5),
+        "conv_b": P((conv_dim,), ("heads",), init="zeros"),
+        "a_log": P((nheads,), ("heads",), init="ones"),
+        "d_skip": P((nheads,), ("heads",), init="ones"),
+        "dt_bias": P((nheads,), ("heads",), init="zeros"),
+        "norm": P((inner,), ("heads",), init="ones"),
+        "out_proj": P((inner, d), ("heads", "embed"), init="scaled"),
+    }
+
+
+def attn_block_schema(cfg) -> Dict[str, P]:
+    """The single weight-shared attention + MLP block."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    return {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        "wq": P((d, cfg.n_heads * hd), ("embed", "heads"), init="scaled"),
+        "wk": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wv": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wo": P((cfg.n_heads * hd, d), ("heads", "embed"), init="scaled"),
+        "ln2": P((d,), ("act_embed",), init="ones"),
+        "w_gate": P((d, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+        "w_up": P((d, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+        "w_down": P((cfg.d_ff, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def schema(cfg) -> Dict[str, Any]:
+    v = padded_vocab(cfg)
+    s: Dict[str, Any] = {
+        "embedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "layers": stacked(cfg.n_layers, layer_schema(cfg)),
+    }
+    if cfg.hybrid and cfg.hybrid.shared_attention:
+        s["shared_attn"] = attn_block_schema(cfg)
+    return s
+
+
+# ----------------------------------------------------------- SSD (chunked)
+def ssd_chunked(xh, dt, a_log, b, c, d_skip, chunk: int,
+                s0: Optional[jax.Array] = None, rules=None):
+    """Chunked SSD scan (Mamba-2 §6, adapted for TPU-friendly einsums).
+
+    xh: [B,S,H,Pd]  dt: [B,S,H] (post-softplus)  a_log: [H] (A = -exp(a_log))
+    b, c: [B,S,N]   d_skip: [H]   s0: [B,H,Pd,N] initial state or None.
+    Returns (y [B,S,H,Pd], s_final [B,H,Pd,N]).  All state math in fp32.
+    """
+    bsz, seq, h, pd = xh.shape
+    n = b.shape[-1]
+    q = min(chunk, seq)
+    assert seq % q == 0, f"seq {seq} % chunk {q} != 0"
+    nc = seq // q
+    f32 = jnp.float32
+
+    dt = dt.astype(f32)
+    la = -jnp.exp(a_log.astype(f32))                      # A (negative)
+    dta = dt * la                                         # [B,S,H] log-decay
+    xw = xh.astype(f32) * dt[..., None]                   # dt-weighted input
+
+    def r(t, tail):                                       # chunkify
+        return t.reshape((bsz, nc, q) + tail)
+
+    dta, xw = r(dta, (h,)), r(xw, (h, pd))
+    bc, cc = r(b.astype(f32), (n,)), r(c.astype(f32), (n,))
+    lcum = jnp.cumsum(dta, axis=2)                        # [B,C,Q,H]
+
+    # intra-chunk: M[i,j] = (c_i·b_j)·exp(l_i − l_j), j ≤ i  (l_i−l_j ≤ 0)
+    g = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # [B,C,Q,Q]
+    ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # [B,C,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(tri[None, None, :, :, None],
+                  jnp.exp(ldiff), 0.0) * g[..., None]     # [B,C,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xw)
+
+    # per-chunk state contribution: Σ_j exp(l_Q − l_j)·xw_j ⊗ b_j
+    decay_to_end = jnp.exp(lcum[:, :, -1:, :] - lcum)     # [B,C,Q,H]
+    chunk_state = jnp.einsum("bcjh,bcjhp,bcjn->bchpn",
+                             decay_to_end, xw, bc)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])              # [B,C,H]
+
+    # inter-chunk scan over the carried state
+    def step(s, inp):
+        cs, cd = inp                                      # [B,H,Pd,N], [B,H]
+        s_in = s
+        s = s * cd[:, :, None, None] + cs
+        return s, s_in
+
+    s_init = (jnp.zeros((bsz, h, pd, n), f32) if s0 is None
+              else s0.astype(f32))
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)                # [C,B,H,Pd,N]
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                # [C,B,H]
+    s_final, s_starts = jax.lax.scan(step, s_init, (cs_t, cd_t))
+    s_starts = jnp.moveaxis(s_starts, 0, 1)               # [B,C,H,Pd,N]
+
+    # inter-chunk output: c_i · (exp(l_i)·S_start)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         cc, jnp.exp(lcum), s_starts)
+
+    y = (y_intra + y_inter).reshape(bsz, seq, h, pd)
+    y = y + d_skip.astype(f32)[None, None, :, None] * xh.astype(f32)
+    return y, s_final
+
+
+def ssd_step(s, xh, dt, a_log, b, c, d_skip):
+    """Recurrent single-token SSD update.
+
+    s: [B,H,Pd,N]; xh: [B,H,Pd]; dt: [B,H]; b,c: [B,N].
+    Returns (y [B,H,Pd], s')."""
+    f32 = jnp.float32
+    dt = dt.astype(f32)
+    la = -jnp.exp(a_log.astype(f32))
+    decay = jnp.exp(dt * la)                              # [B,H]
+    xw = xh.astype(f32) * dt[..., None]                   # [B,H,Pd]
+    s = s * decay[:, :, None, None] \
+        + jnp.einsum("bhp,bn->bhpn", xw, b.astype(f32))
+    y = jnp.einsum("bhpn,bn->bhp", s, c.astype(f32))
+    y = y + d_skip.astype(f32)[None, :, None] * xh.astype(f32)
+    return y, s
+
+
+# ---------------------------------------------------------- Mamba2 block
+def _split_proj(cfg, zxbcdt):
+    inner, nheads, _ = _dims(cfg)
+    n = cfg.ssm.state_dim
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + n, 2 * inner + 2 * n],
+        axis=-1)
+    return z, x, b, c, dt
+
+
+def mamba2_block(params, x_in, cfg, rules=None,
+                 state: Optional[Tuple] = None):
+    """Pre-norm Mamba2 block.  Returns (out, new_state).
+
+    Training/prefill: state=None (zero-initialized, discarded).
+    Decode: x_in is [B,1,d]; state = (conv_buf [B,K-1,convdim], s [B,H,Pd,N]).
+    """
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    s_cfg = cfg.ssm
+    inner, nheads, conv_dim = _dims(cfg)
+    y = L.rms_norm(x_in, params["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", y, L.cast(params["in_proj"], dt_c))
+    z, xs, b, c, dt_raw = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)        # [B,S,convdim]
+    new_state = None
+    if state is None:
+        # causal depthwise conv via shifted adds (width is tiny, K=4)
+        k = s_cfg.conv_width
+        w = params["conv_w"].astype(jnp.float32)          # [K, convdim]
+        acc = jnp.zeros_like(conv_in, dtype=jnp.float32)
+        for i in range(k):
+            shift = k - 1 - i
+            seg = conv_in.astype(jnp.float32)
+            if shift > 0:
+                seg = jnp.pad(seg[:, :-shift], ((0, 0), (shift, 0), (0, 0)))
+            acc = acc + seg * w[i]
+        conv_out = jax.nn.silu(acc + params["conv_b"].astype(jnp.float32))
+        xs, b, c = jnp.split(conv_out, [inner, inner + s_cfg.state_dim],
+                             axis=-1)
+        xh = xs.reshape(*xs.shape[:2], nheads, s_cfg.head_dim)
+        xh = lc(xh, ("batch", "seq", "heads", None), rules)
+        yh, s_fin = ssd_chunked(xh, dt, params["a_log"], b, c,
+                                params["d_skip"], s_cfg.chunk, rules=rules)
+    else:
+        conv_buf, s0 = state
+        k = s_cfg.conv_width
+        w = params["conv_w"].astype(jnp.float32)
+        hist = jnp.concatenate(
+            [conv_buf, conv_in.astype(conv_buf.dtype)], axis=1)  # [B,K,cd]
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+            + params["conv_b"].astype(jnp.float32))[:, None]     # [B,1,cd]
+        xs1, b1, c1 = jnp.split(conv_out, [inner, inner + s_cfg.state_dim],
+                                axis=-1)
+        xh = xs1[:, 0].reshape(-1, nheads, s_cfg.head_dim)
+        yh, s_fin = ssd_step(s0, xh, dt[:, 0], params["a_log"],
+                             b1[:, 0], c1[:, 0], params["d_skip"])
+        yh = yh[:, None]                                  # [B,1,H,Pd]
+        new_state = (hist[:, 1:], s_fin)
+
+    yv = yh.reshape(*yh.shape[:2], inner)
+    # gated RMSNorm (Mamba2: norm(y) ⊙ silu(z)), then out-projection
+    yv = L.rms_norm(yv.astype(dt_c), params["norm"], cfg.norm_eps) \
+        * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", yv, L.cast(params["out_proj"], dt_c))
+    return lc(out, ("batch", "seq", "act_embed"), rules), new_state
+
+
+def _shared_attn(params, x, cfg, *, positions, rules, cache=None):
+    attn, new_cache = L.gqa_block(params, x, cfg, positions=positions,
+                                  rules=rules, cache=cache,
+                                  sliding_window=cfg.sliding_window)
+    x = x + attn
+    x = x + L.swiglu({**params, "ln": params["ln2"]}, x, cfg, rules=rules)
+    return x, new_cache
+
+
+# ----------------------------------------------------------------- forward
+def _slice_layers(layers, start, size):
+    return jax.tree.map(lambda a: a[start:start + size], layers)
+
+
+def forward(params, batch, cfg, rules=None):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    positions = jnp.arange(batch["tokens"].shape[1])[None, :]
+    period = cfg.hybrid.attn_period if cfg.hybrid else cfg.n_layers
+
+    def body(x, p, _):
+        out, _ = mamba2_block(p, x, cfg, rules=rules)
+        return x + out, None
+
+    start = 0
+    for size in group_sizes(cfg):
+        x, _ = scan_layers(body, x, _slice_layers(params["layers"],
+                                                  start, size), cfg)
+        start += size
+        if size == period and "shared_attn" in params:
+            x, _ = _shared_attn(params["shared_attn"], x, cfg,
+                                positions=positions, rules=rules)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules)
+
+
+# ------------------------------------------------------------------ decode
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    s = cfg.ssm
+    inner, nheads, conv_dim = _dims(cfg)
+    spec: Dict[str, Any] = {
+        "conv": P((cfg.n_layers, batch, s.conv_width - 1, conv_dim),
+                  ("layers", "batch", None, "heads"), init="zeros",
+                  dtype=cfg.compute_dtype),
+        "ssm": P((cfg.n_layers, batch, nheads, s.head_dim, s.state_dim),
+                 ("layers", "batch", "heads", None, "state"),
+                 init="zeros", dtype="float32"),
+    }
+    sites = num_attn_sites(cfg)
+    if sites:
+        spec["attn"] = attn_cache_spec(
+            cfg, batch, decode_window(cfg, max_len), n_layers=sites)
+    return spec
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    pos = batch["pos"]
+    period = cfg.hybrid.attn_period if cfg.hybrid else cfg.n_layers
+
+    def body(x, p, st):
+        out, new_st = mamba2_block(p, x, cfg, rules=rules,
+                                   state=(st["conv"], st["ssm"]))
+        return x + out, {"conv": new_st[0], "ssm": new_st[1]}
+
+    start, site = 0, 0
+    new_cache: Dict[str, Any] = {"conv": [], "ssm": []}
+    new_attn = {"k": [], "v": [], "key_pos": []}
+    for size in group_sizes(cfg):
+        st = {"conv": cache["conv"][start:start + size],
+              "ssm": cache["ssm"][start:start + size]}
+        x, st_out = scan_layers(body, x, _slice_layers(params["layers"],
+                                                       start, size), cfg,
+                                extra_xs=st)
+        new_cache["conv"].append(st_out["conv"])
+        new_cache["ssm"].append(st_out["ssm"])
+        start += size
+        if size == period and "shared_attn" in params:
+            ac = cache["attn"]
+            x, (k, v, kp) = _shared_attn(
+                params["shared_attn"], x, cfg, positions=pos, rules=rules,
+                cache=(ac["k"][site], ac["v"][site], ac["key_pos"][site]))
+            new_attn["k"].append(k)
+            new_attn["v"].append(v)
+            new_attn["key_pos"].append(kp)
+            site += 1
+
+    out: Dict[str, Any] = {
+        "conv": jnp.concatenate(new_cache["conv"], axis=0),
+        "ssm": jnp.concatenate(new_cache["ssm"], axis=0),
+    }
+    if site:
+        out["attn"] = {k: jnp.stack(v_, axis=0)
+                       for k, v_ in new_attn.items()}
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules), out
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_specs(shape.global_batch)
+    return token_specs(shape.global_batch, shape.seq_len)

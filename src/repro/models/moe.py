@@ -1,0 +1,107 @@
+"""Mixture-of-Experts transformer (olmoe-1b-7b, granite-moe-3b-a800m).
+
+Every layer: GQA attention + top-k routed expert SwiGLU FFN with fixed
+capacity (dense dispatch — compile-friendly and EP-shardable: the expert
+axis of the weights shards on "model", XLA inserts the all-to-alls).
+The router auxiliary loss is accumulated through the scan and returned to
+the trainer via the `aux` output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import P
+from . import layers as L
+from .common import (attn_cache_spec, decode_specs, decode_window,
+                     padded_vocab, scan_layers, stacked, token_specs)
+
+
+def layer_schema(cfg) -> Dict[str, P]:
+    d, hd, m = cfg.d_model, cfg.head_dim_, cfg.moe
+    return {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        "wq": P((d, cfg.n_heads * hd), ("embed", "heads"), init="scaled"),
+        "wk": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wv": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                init="scaled"),
+        "wo": P((cfg.n_heads * hd, d), ("heads", "embed"), init="scaled"),
+        "ln2": P((d,), ("act_embed",), init="ones"),
+        "router": P((d, m.num_experts), ("embed", None), init="scaled"),
+        "w_gate": P((m.e_pad, d, m.d_expert),
+                    ("experts", "embed", "mlp"), init="scaled"),
+        "w_up": P((m.e_pad, d, m.d_expert),
+                  ("experts", "embed", "mlp"), init="scaled"),
+        "w_down": P((m.e_pad, m.d_expert, d),
+                    ("experts", "mlp", "embed"), init="scaled"),
+    }
+
+
+def schema(cfg) -> Dict[str, Any]:
+    v = padded_vocab(cfg)
+    s: Dict[str, Any] = {
+        "embedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "layers": stacked(cfg.n_layers, layer_schema(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        s["unembedding"] = P((v, cfg.d_model), ("vocab", "embed"))
+    return s
+
+
+def _block(params, x, cfg, *, positions, rules, cache=None):
+    attn, new_cache = L.gqa_block(params, x, cfg, positions=positions,
+                                  rules=rules, cache=cache,
+                                  sliding_window=cfg.sliding_window)
+    x = x + attn
+    moe_out, aux = L.moe_block({**params, "ln": params["ln2"]}, x, cfg,
+                               rules=rules)
+    return x + moe_out, new_cache, aux
+
+
+def forward(params, batch, cfg, rules=None, return_aux=False):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    positions = jnp.arange(batch["tokens"].shape[1])[None, :]
+
+    def body(carry, p, _):
+        x, aux = carry
+        x, _, aux_l = _block(p, x, cfg, positions=positions, rules=rules)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = scan_layers(body, (x, jnp.zeros((), jnp.float32)),
+                              params["layers"], cfg)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params, x, cfg, rules)
+    if return_aux:
+        return logits, aux
+    return logits
+
+
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, P]:
+    return attn_cache_spec(cfg, batch, decode_window(cfg, max_len))
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+    pos = batch["pos"]
+
+    def body(x, p, cache_l):
+        x, new_cache, _ = _block(p, x, cfg, positions=pos, rules=rules,
+                                 cache=(cache_l["k"], cache_l["v"],
+                                        cache_l["key_pos"]))
+        k, v, kp = new_cache
+        return x, {"k": k, "v": v, "key_pos": kp}
+
+    x, new_cache = scan_layers(body, x, params["layers"], cfg,
+                               extra_xs=cache)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules), new_cache
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_specs(shape.global_batch)
+    return token_specs(shape.global_batch, shape.seq_len)

@@ -1,0 +1,86 @@
+"""Architecture registry: ModelConfig.arch_kind → model module.
+
+`Model` is a thin façade bundling the per-family functions with exact
+(schema-derived) parameter counts for the roofline's MODEL_FLOPS term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import P, abstract_params, init_params
+from . import dense, mamba2, moe, whisper, xlstm
+
+_MODULES = {
+    "dense": dense,
+    "vlm": dense,                   # LLaVA backbone = dense + patch proj
+    "moe": moe,
+    "mamba2_hybrid": mamba2,
+    "xlstm": xlstm,
+    "whisper": whisper,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    module: Any
+
+    # ------------------------------------------------------------- params
+    def schema(self) -> Any:
+        return self.module.schema(self.cfg)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self.schema(), self.cfg.param_dtype)
+
+    def init(self, rng: jax.Array) -> Any:
+        return init_params(self.schema(), rng, self.cfg.param_dtype)
+
+    def param_count(self) -> int:
+        """Exact parameter count, derived from the schema."""
+        leaves = jax.tree.leaves(self.schema(),
+                                 is_leaf=lambda x: isinstance(x, P))
+        return int(sum(int(np.prod(p.shape)) for p in leaves))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k of the expert FFNs)."""
+        m = self.cfg.moe
+        if m is None:
+            return self.param_count()
+        expert = 3 * self.cfg.d_model * m.d_expert * self.cfg.n_layers
+        inactive = expert * (m.e_pad - m.top_k)
+        return self.param_count() - inactive
+
+    # ------------------------------------------------------------ compute
+    def forward(self, params, batch, rules=None):
+        return self.module.forward(params, batch, self.cfg, rules=rules)
+
+    def decode_step(self, params, cache, batch, rules=None):
+        return self.module.decode_step(params, cache, batch, self.cfg,
+                                       rules=rules)
+
+    # ------------------------------------------------------------- decode
+    def cache_schema(self, batch: int, max_len: int) -> Any:
+        return self.module.cache_spec(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int) -> Any:
+        return abstract_params(self.cache_schema(batch, max_len),
+                               self.cfg.compute_dtype)
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        return init_params(self.cache_schema(batch, max_len),
+                           jax.random.PRNGKey(0), self.cfg.compute_dtype)
+
+    # -------------------------------------------------------------- shapes
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        return self.module.input_specs(self.cfg, shape)
+
+
+def get_model(cfg) -> Model:
+    if cfg.arch_kind not in _MODULES:
+        raise KeyError(f"unknown arch_kind {cfg.arch_kind!r}; "
+                       f"known: {sorted(_MODULES)}")
+    return Model(cfg, _MODULES[cfg.arch_kind])

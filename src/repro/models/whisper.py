@@ -1,0 +1,266 @@
+"""Whisper-style encoder-decoder (whisper-medium).
+
+The conv frontend is a stub per the assignment: `input_specs()` provides
+precomputed frame embeddings [B, encoder_seq, d_model].  LayerNorm blocks
+with biases, GELU MLPs, learned decoder positions, sinusoidal encoder
+positions, tied decoder embedding/unembedding — whisper conventions.
+
+Decode caches the decoder self-attention ring buffer AND the cross-attention
+K/V (computed once from the encoder output at prefill; the decode cell feeds
+them in as part of the cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import P, logical_constraint as lc
+from . import layers as L
+from .common import (attn_cache_spec, decode_specs, decode_window,
+                     padded_vocab, scan_layers, stacked)
+
+
+# ------------------------------------------------------------------ schema
+def _attn_schema(cfg, prefix: str) -> Dict[str, P]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    return {
+        f"{prefix}ln": P((d,), ("act_embed",), init="ones"),
+        f"{prefix}ln_b": P((d,), ("act_embed",), init="zeros"),
+        f"{prefix}wq": P((d, cfg.n_heads * hd), ("embed", "heads"),
+                         init="scaled"),
+        f"{prefix}wq_b": P((cfg.n_heads * hd,), ("heads",), init="zeros"),
+        f"{prefix}wk": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                         init="scaled"),
+        f"{prefix}wv": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads"),
+                         init="scaled"),
+        f"{prefix}wv_b": P((cfg.n_kv_heads * hd,), ("kv_heads",),
+                           init="zeros"),
+        f"{prefix}wo": P((cfg.n_heads * hd, d), ("heads", "embed"),
+                         init="scaled"),
+        f"{prefix}wo_b": P((d,), ("act_embed",), init="zeros"),
+    }
+
+
+def _mlp_schema(cfg) -> Dict[str, P]:
+    d = cfg.d_model
+    return {
+        "mlp_ln": P((d,), ("act_embed",), init="ones"),
+        "mlp_ln_b": P((d,), ("act_embed",), init="zeros"),
+        "w_up": P((d, cfg.d_ff), ("embed", "mlp"), init="scaled"),
+        "b_up": P((cfg.d_ff,), ("mlp",), init="zeros"),
+        "w_down": P((cfg.d_ff, d), ("mlp", "embed"), init="scaled"),
+        "b_down": P((d,), ("act_embed",), init="zeros"),
+    }
+
+
+def enc_layer_schema(cfg) -> Dict[str, P]:
+    return {**_attn_schema(cfg, "self_"), **_mlp_schema(cfg)}
+
+
+def dec_layer_schema(cfg) -> Dict[str, P]:
+    return {**_attn_schema(cfg, "self_"), **_attn_schema(cfg, "cross_"),
+            **_mlp_schema(cfg)}
+
+
+def schema(cfg) -> Dict[str, Any]:
+    v = padded_vocab(cfg)
+    e = cfg.encdec
+    return {
+        "embedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "pos_emb": P((cfg.max_seq, cfg.d_model), (None, "embed")),
+        "enc_ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "enc_ln_f_b": P((cfg.d_model,), ("act_embed",), init="zeros"),
+        "dec_ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "dec_ln_f_b": P((cfg.d_model,), ("act_embed",), init="zeros"),
+        "encoder": stacked(e.encoder_layers, enc_layer_schema(cfg)),
+        "decoder": stacked(cfg.n_layers, dec_layer_schema(cfg)),
+    }
+
+
+# --------------------------------------------------------------- attention
+def _proj(params, prefix, name, y, heads, hd, dt, bias=True):
+    w = L.cast(params[f"{prefix}{name}"], dt)
+    out = jnp.einsum("bsd,dhk->bshk", y,
+                     w.reshape(y.shape[-1], heads, hd))
+    bkey = f"{prefix}{name}_b"
+    if bias and bkey in params:
+        out = out + L.cast(params[bkey], dt).reshape(1, 1, heads, hd)
+    return out
+
+
+def _attn(params, prefix, x, kv_src, cfg, *, causal, rules,
+          cache: Optional[Tuple] = None, positions=None,
+          static_kv: Optional[Tuple] = None):
+    """LN attention block with biases, no RoPE.  Returns (out, cache').
+
+    kv_src: sequence K/V come from (encoder output for cross-attention).
+    static_kv: precomputed (k, v) — decode-time cross-attention.
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.head_dim_
+    y = L.layer_norm(x, params[f"{prefix}ln"], params[f"{prefix}ln_b"],
+                     cfg.norm_eps)
+    q = _proj(params, prefix, "wq", y, cfg.n_heads, hd, dt)
+    q = lc(q, ("batch", "seq", "heads", None), rules)
+
+    new_cache = None
+    if static_kv is not None:                    # decode cross-attn
+        k, v = static_kv
+        attn = L.attention(q, L.cast(k, dt), L.cast(v, dt), causal=False)
+    elif cache is not None:                      # decode self-attn
+        yk = L.layer_norm(kv_src, params[f"{prefix}ln"],
+                          params[f"{prefix}ln_b"], cfg.norm_eps)
+        k = _proj(params, prefix, "wk", yk, cfg.n_kv_heads, hd, dt)
+        v = _proj(params, prefix, "wv", yk, cfg.n_kv_heads, hd, dt)
+        k_c, v_c, key_pos = cache
+        k_c, v_c, key_pos = L.cache_write(
+            k_c, v_c, key_pos, L.cast(k, k_c.dtype), L.cast(v, v_c.dtype),
+            positions)
+        new_cache = (k_c, v_c, key_pos)
+        attn = L.decode_attention(q, L.cast(k_c, dt), L.cast(v_c, dt),
+                                  key_pos, positions, rules=rules)
+    else:                                        # full-sequence
+        # self-attn keys come from the normed input; cross-attn keys come
+        # from the (already-final-normed) encoder output
+        yk = y if kv_src is x else kv_src
+        k = _proj(params, prefix, "wk", yk, cfg.n_kv_heads, hd, dt)
+        v = _proj(params, prefix, "wv", yk, cfg.n_kv_heads, hd, dt)
+        k = lc(k, ("batch", "seq", "kv_heads", None), rules)
+        attn = L.attention(q, k, v, causal=causal, impl=cfg.attn_impl)
+
+    wo = L.cast(params[f"{prefix}wo"], dt)
+    out = jnp.einsum("bshk,hkd->bsd", attn,
+                     wo.reshape(cfg.n_heads, hd, cfg.d_model)) \
+        + L.cast(params[f"{prefix}wo_b"], dt)
+    return lc(out, ("batch", "seq", "act_embed"), rules), new_cache
+
+
+def _mlp(params, x, cfg, rules):
+    return L.gelu_mlp(
+        {"ln": params["mlp_ln"], "ln_b": params["mlp_ln_b"],
+         "w_up": params["w_up"], "b_up": params["b_up"],
+         "w_down": params["w_down"], "b_down": params["b_down"]},
+        x, cfg, rules)
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    t = np.log(10000) / (channels // 2 - 1)
+    inv = np.exp(-t * np.arange(channels // 2))
+    ang = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+
+
+# --------------------------------------------------------------- enc / dec
+def encode(params, frames, cfg, rules=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    e = cfg.encdec
+    x = frames.astype(dt) + jnp.asarray(
+        sinusoids(e.encoder_seq, cfg.d_model), dt)[None]
+    x = lc(x, ("batch", "seq", "act_embed"), rules)
+
+    def body(x, p, _):
+        attn, _ = _attn(p, "self_", x, x, cfg, causal=False, rules=rules)
+        x = x + attn
+        return x + _mlp(p, x, cfg, rules), None
+
+    x, _ = scan_layers(body, x, params["encoder"], cfg)
+    return L.layer_norm(x, params["enc_ln_f"], params["enc_ln_f_b"],
+                        cfg.norm_eps)
+
+
+def _decoder_stack(params, x, enc_out, cfg, rules, positions=None,
+                   caches=None, cross_kv=None):
+    def body(x, p, extra):
+        cache_l, cross_l = extra
+        self_cache = None if cache_l is None else \
+            (cache_l["k"], cache_l["v"], cache_l["key_pos"])
+        attn, new_self = _attn(p, "self_", x, x, cfg, causal=True,
+                               rules=rules, cache=self_cache,
+                               positions=positions)
+        x = x + attn
+        static_kv = None if cross_l is None else (cross_l["k"],
+                                                  cross_l["v"])
+        cross, _ = _attn(p, "cross_", x, enc_out, cfg, causal=False,
+                         rules=rules, static_kv=static_kv)
+        x = x + cross
+        x = x + _mlp(p, x, cfg, rules)
+        ys = None if new_self is None else \
+            {"k": new_self[0], "v": new_self[1], "key_pos": new_self[2]}
+        return x, ys
+
+    x, new_caches = scan_layers(body, x, params["decoder"], cfg,
+                                extra_xs=(caches, cross_kv))
+    x = L.layer_norm(x, params["dec_ln_f"], params["dec_ln_f_b"],
+                     cfg.norm_eps)
+    return x, new_caches
+
+
+def forward(params, batch, cfg, rules=None):
+    enc_out = encode(params, batch["frames"], cfg, rules)
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params, tokens, cfg, rules) \
+        + L.cast(params["pos_emb"][:tokens.shape[1]], dt)[None]
+    x, _ = _decoder_stack(params, x, enc_out, cfg, rules)
+    return L.unembed(params, x, cfg, rules)
+
+
+# ------------------------------------------------------------------ decode
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    e = cfg.encdec
+    hd = cfg.head_dim_
+    cross = (cfg.n_layers, batch, e.encoder_seq, cfg.n_kv_heads, hd)
+    return {
+        "self": attn_cache_spec(cfg, batch, decode_window(cfg, max_len)),
+        "cross": {
+            "k": P(cross, ("layers", "batch", "seq", "kv_heads", None),
+                   init="zeros", dtype=cfg.compute_dtype),
+            "v": P(cross, ("layers", "batch", "seq", "kv_heads", None),
+                   init="zeros", dtype=cfg.compute_dtype),
+        },
+    }
+
+
+def make_cross_kv(params, enc_out, cfg, rules=None):
+    """Precompute decoder cross-attention K/V from the encoder output
+    (prefill step of serving)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.head_dim_
+
+    def body(_, p, __):
+        k = _proj(p, "cross_", "wk", enc_out, cfg.n_kv_heads, hd, dt)
+        v = _proj(p, "cross_", "wv", enc_out, cfg.n_kv_heads, hd, dt)
+        return _, (k, v)
+
+    _, (ks, vs) = scan_layers(body, 0, params["decoder"], cfg)
+    return {"k": ks, "v": vs}
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params, tokens, cfg, rules)
+    x = x + jnp.take(L.cast(params["pos_emb"], dt), pos, axis=0)[:, None]
+    x, new_self = _decoder_stack(params, x, None, cfg, rules,
+                                 positions=pos, caches=cache["self"],
+                                 cross_kv=cache["cross"])
+    logits = L.unembed(params, x, cfg, rules)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_specs(shape.global_batch)
+    e = cfg.encdec
+    return {
+        "frames": jax.ShapeDtypeStruct(
+            (shape.global_batch, e.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype)),
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                       jnp.int32),
+    }

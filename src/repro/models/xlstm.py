@@ -1,0 +1,344 @@
+"""xLSTM (xlstm-1.3b): mLSTM blocks with one sLSTM block per
+`xlstm.slstm_every` layers.
+
+mLSTM (matrix memory, exponential gating) trains with a *chunkwise
+parallel* form — quadratic only within a chunk, a `lax.scan` carries the
+stabilized (C, n, m) state across chunks.  sLSTM (scalar memory, true
+recurrence through the hidden state) is a `lax.scan` over time — that
+sequential dependency is the architecture, not an implementation choice.
+
+Layer layout: n_layers = G groups × (slstm_every-1 mLSTM + 1 sLSTM);
+mLSTM params are stacked [G, K, ...] (outer scan over groups, inner scan
+over the K mLSTM layers), sLSTM params are stacked [G, ...].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import P, logical_constraint as lc
+from . import layers as L
+from .common import (decode_specs, padded_vocab, scan_layers, stacked,
+                     token_specs)
+
+
+def _dims(cfg):
+    x = cfg.xlstm
+    d = cfg.d_model
+    dk = int(d * x.qk_dim_factor)
+    dv = int(d * x.v_dim_factor)
+    h = cfg.n_heads
+    return d, dk, dv, h, dk // h, dv // h
+
+
+def _groups(cfg) -> Tuple[int, int]:
+    every = cfg.xlstm.slstm_every
+    assert cfg.n_layers % every == 0, \
+        f"n_layers {cfg.n_layers} % slstm_every {every} != 0"
+    return cfg.n_layers // every, every - 1     # (G groups, K mLSTM each)
+
+
+def _slstm_ff(d: int) -> int:
+    return max(128, (8 * d // 9) // 128 * 128)  # xLSTM pf=4/3 SwiGLU
+
+
+# ------------------------------------------------------------------ schema
+def mlstm_schema(cfg) -> Dict[str, P]:
+    d, dk, dv, h, _, _ = _dims(cfg)
+    return {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        "wq": P((d, dk), ("embed", "heads"), init="scaled"),
+        "wk": P((d, dk), ("embed", "heads"), init="scaled"),
+        "wv": P((d, dv), ("embed", "mlp"), init="scaled"),
+        "wif": P((d, 2 * h), ("embed", None), init="scaled"),
+        "b_if": P((2 * h,), (None,), init="zeros"),
+        "wg": P((d, dv), ("embed", "mlp"), init="scaled"),
+        "wo": P((dv, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def slstm_schema(cfg) -> Dict[str, P]:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ff = _slstm_ff(d)
+    return {
+        "ln": P((d,), ("act_embed",), init="ones"),
+        "w_zifo": P((d, 4 * d), ("embed", "mlp"), init="scaled"),
+        "r_zifo": P((h, dh, 4 * dh), ("heads", None, None), init="scaled",
+                    scale=0.5),
+        "b_zifo": P((4 * d,), ("mlp",), init="zeros"),
+        "wo": P((d, d), ("embed", "embed2"), init="scaled"),
+        "ln2": P((d,), ("act_embed",), init="ones"),
+        "w_gate": P((d, ff), ("embed", "mlp"), init="scaled"),
+        "w_up": P((d, ff), ("embed", "mlp"), init="scaled"),
+        "w_down": P((ff, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def schema(cfg) -> Dict[str, Any]:
+    g, k = _groups(cfg)
+    v = padded_vocab(cfg)
+    return {
+        "embedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "unembedding": P((v, cfg.d_model), ("vocab", "embed")),
+        "ln_f": P((cfg.d_model,), ("act_embed",), init="ones"),
+        "mlstm": stacked(g, stacked(k, mlstm_schema(cfg))),
+        "slstm": stacked(g, slstm_schema(cfg)),
+    }
+
+
+# ------------------------------------------------------- mLSTM chunked fwd
+def mlstm_chunked(q, k, v, ig, fg, chunk: int,
+                  state: Optional[Tuple] = None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k: [B,S,H,dk]; v: [B,S,H,dv]; ig,fg: [B,S,H] raw gate pre-activations.
+    state: (C [B,H,dv,dk], n [B,H,dk], m [B,H]) or None.
+    Returns (h [B,S,H,dv], state').  fp32 throughout.
+    """
+    f32 = jnp.float32
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qc = min(chunk, s)
+    assert s % qc == 0
+    nc = s // qc
+    scale = 1.0 / np.sqrt(dk)
+
+    q, k, v = (t.astype(f32) for t in (q, k, v))
+    logf = jax.nn.log_sigmoid(fg.astype(f32))             # [B,S,H]
+    logi = ig.astype(f32)
+
+    def r(t, tail):
+        return t.reshape((b, nc, qc) + tail)
+
+    qs, ks, vs = r(q, (h, dk)), r(k, (h, dk)), r(v, (h, dv))
+    lf, li = r(logf, (h,)), r(logi, (h,))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dv, dk), f32)
+        n0 = jnp.zeros((b, h, dk), f32)
+        m0 = jnp.full((b, h), -jnp.inf, f32)
+    else:
+        c0, n0, m0 = (t.astype(f32) for t in state)
+
+    tri = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(carry, xs):
+        c_st, n_st, m_st = carry
+        qq, kk, vv, lff, lii = xs                         # [B,Q,...]
+        fcum = jnp.cumsum(lff, axis=1)                    # [B,Q,H]
+        # intra log-weights D[i,j] = Fcum_i − Fcum_j + logi_j  (j ≤ i)
+        dlog = fcum[:, :, None, :] - fcum[:, None, :, :] \
+            + lii[:, None, :, :]                          # [B,Q,Q,H]
+        dlog = jnp.where(tri[None, :, :, None], dlog, -jnp.inf)
+        w_inter = fcum + m_st[:, None, :]                 # [B,Q,H]
+        m_i = jnp.maximum(jnp.max(dlog, axis=2), w_inter)
+        m_i = jnp.maximum(m_i, -1e30)                     # avoid -inf − -inf
+        sc = jnp.einsum("bihk,bjhk->bijh", qq, kk) * scale
+        sc = sc * jnp.exp(dlog - m_i[:, :, None, :])
+        inter_w = jnp.exp(w_inter - m_i)                  # [B,Q,H]
+        num = jnp.einsum("bijh,bjhv->bihv", sc, vv) \
+            + inter_w[..., None] \
+            * jnp.einsum("bihk,bhvk->bihv", qq, c_st) * scale
+        den = jnp.sum(sc, axis=2) \
+            + inter_w * jnp.einsum("bihk,bhk->bih", qq, n_st) * scale
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        hh = num / den[..., None]                         # [B,Q,H,dv]
+
+        # end-of-chunk state
+        f_tot = fcum[:, -1]                               # [B,H]
+        dlog_end = f_tot[:, None, :] - fcum + lii         # [B,Q,H]
+        m_new = jnp.maximum(f_tot + m_st, jnp.max(dlog_end, axis=1))
+        w_old = jnp.exp(f_tot + m_st - m_new)             # [B,H]
+        w_j = jnp.exp(dlog_end - m_new[:, None, :])       # [B,Q,H]
+        c_new = c_st * w_old[:, :, None, None] \
+            + jnp.einsum("bjh,bjhv,bjhk->bhvk", w_j, vv, kk)
+        n_new = n_st * w_old[:, :, None] \
+            + jnp.einsum("bjh,bjhk->bhk", w_j, kk)
+        return (c_new, n_new, m_new), hh
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qs, ks, vs, lf, li))
+    (c_f, n_f, m_f), hs = jax.lax.scan(body, (c0, n0, m0), xs)
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(b, s, h, dv)
+    return h_out, (c_f, n_f, m_f)
+
+
+def mlstm_step(state, q, k, v, ig, fg):
+    """Single-token recurrent mLSTM.  q,k: [B,H,dk]; v: [B,H,dv];
+    ig,fg: [B,H]."""
+    f32 = jnp.float32
+    c, n, m = (t.astype(f32) for t in state)
+    q, k, v = (t.astype(f32) for t in (q, k, v))
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logf = jax.nn.log_sigmoid(fg.astype(f32))
+    logi = ig.astype(f32)
+    m_new = jnp.maximum(logf + m, logi)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(logi - m_new)
+    c = c * fw[:, :, None, None] + iw[:, :, None, None] \
+        * jnp.einsum("bhv,bhk->bhvk", v, k)
+    n = n * fw[..., None] + iw[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", c, q) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)) * scale,
+                      jnp.exp(-m_new))
+    return num / den[..., None], (c, n, m_new)
+
+
+def mlstm_block(params, x, cfg, rules=None, state=None):
+    d, dk, dv, h, dkh, dvh = _dims(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    y = L.rms_norm(x, params["ln"], cfg.norm_eps)
+    b = y.shape[0]
+
+    q = jnp.einsum("bsd,dk->bsk", y, L.cast(params["wq"], dt))
+    k = jnp.einsum("bsd,dk->bsk", y, L.cast(params["wk"], dt))
+    v = jnp.einsum("bsd,dk->bsk", y, L.cast(params["wv"], dt))
+    gates = jnp.einsum("bsd,dg->bsg", y.astype(jnp.float32),
+                       params["wif"].astype(jnp.float32)) \
+        + params["b_if"].astype(jnp.float32)
+    ig, fg = gates[..., :h], gates[..., h:]
+
+    if state is None:
+        qh = q.reshape(*q.shape[:2], h, dkh)
+        kh = k.reshape(*k.shape[:2], h, dkh)
+        vh = v.reshape(*v.shape[:2], h, dvh)
+        qh = lc(qh, ("batch", "seq", "heads", None), rules)
+        hh, _ = mlstm_chunked(qh, kh, vh, ig, fg, cfg.xlstm.chunk)
+        new_state = None
+    else:
+        hh, new_state = mlstm_step(state, q[:, 0].reshape(b, h, dkh),
+                                   k[:, 0].reshape(b, h, dkh),
+                                   v[:, 0].reshape(b, h, dvh),
+                                   ig[:, 0], fg[:, 0])
+        hh = hh[:, None]
+    hv = hh.reshape(*hh.shape[:2], dv).astype(dt)
+    g = jax.nn.silu(jnp.einsum("bsd,dk->bsk", y, L.cast(params["wg"], dt)))
+    out = jnp.einsum("bsk,kd->bsd", hv * g, L.cast(params["wo"], dt))
+    return lc(out, ("batch", "seq", "act_embed"), rules), new_state
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_scan(params, y, cfg, state=None):
+    """y: [B,S,d] (already normed, fp32).  Returns (h [B,S,d], state')."""
+    b, s, d = y.shape
+    h = cfg.n_heads
+    dh = d // h
+    f32 = jnp.float32
+    wx = jnp.einsum("bsd,dg->bsg", y.astype(f32),
+                    params["w_zifo"].astype(f32)) \
+        + params["b_zifo"].astype(f32)                    # [B,S,4d]
+    wx = wx.reshape(b, s, h, 4 * dh)
+    r = params["r_zifo"].astype(f32)                      # [H, dh, 4dh]
+
+    if state is None:
+        zeros = jnp.zeros((b, h, dh), f32)
+        state = (zeros, zeros + 1e-6, jnp.full((b, h, dh), -1e30, f32),
+                 zeros)                                   # c, n, m, h_prev
+
+    def step(carry, wx_t):
+        c, n, m, h_prev = carry
+        g = wx_t + jnp.einsum("bhd,hdg->bhg", h_prev, r)
+        zr, ir, fr, orr = jnp.split(g, 4, axis=-1)        # [B,H,dh] each
+        logf = jax.nn.log_sigmoid(fr)
+        m_new = jnp.maximum(logf + m, ir)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(ir - m_new)
+        c = fw * c + iw * jnp.tanh(zr)
+        n = fw * n + iw
+        h_t = jax.nn.sigmoid(orr) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_t), h_t
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).reshape(b, s, d), state
+
+
+def slstm_block(params, x, cfg, rules=None, state=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    y = L.rms_norm(x, params["ln"], cfg.norm_eps)
+    hs, new_state = slstm_scan(params, y, cfg, state=state)
+    out = jnp.einsum("bsd,de->bse", hs.astype(dt), L.cast(params["wo"], dt))
+    out = lc(out, ("batch", "seq", "act_embed"), rules)
+    x = x + out
+    x = x + L.swiglu({**params, "ln": params["ln2"]}, x, cfg, rules=rules)
+    return x, new_state
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, batch, cfg, rules=None):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+
+    def mbody(x, p, _):
+        out, _ = mlstm_block(p, x, cfg, rules=rules)
+        return x + out, None
+
+    def gbody(x, gp, _):
+        x, _ = scan_layers(mbody, x, gp["mlstm"], cfg)
+        x, _ = slstm_block(gp["slstm"], x, cfg, rules=rules)
+        return x, None
+
+    x, _ = scan_layers(gbody, x,
+                       {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+                       cfg)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules)
+
+
+# ------------------------------------------------------------------ decode
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    g, k = _groups(cfg)
+    d, dk, dv, h, dkh, dvh = _dims(cfg)
+    dh = d // h
+    return {
+        "m_c": P((g, k, batch, h, dvh, dkh),
+                 (None, "layers", "batch", "heads", "mlp", None),
+                 init="zeros", dtype="float32"),
+        "m_n": P((g, k, batch, h, dkh),
+                 (None, "layers", "batch", "heads", None),
+                 init="zeros", dtype="float32"),
+        "m_m": P((g, k, batch, h),
+                 (None, "layers", "batch", "heads"),
+                 init="neg_large", dtype="float32"),
+        "s_c": P((g, batch, h, dh), (None, "batch", "heads", None),
+                 init="zeros", dtype="float32"),
+        "s_n": P((g, batch, h, dh), (None, "batch", "heads", None),
+                 init="eps", dtype="float32"),
+        "s_m": P((g, batch, h, dh), (None, "batch", "heads", None),
+                 init="neg_large", dtype="float32"),
+        "s_h": P((g, batch, h, dh), (None, "batch", "heads", None),
+                 init="zeros", dtype="float32"),
+    }
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    x = L.embed(params, batch["tokens"], cfg, rules)
+
+    def mbody(x, p, st):
+        out, new_st = mlstm_block(p, x, cfg, rules=rules,
+                                  state=(st["c"], st["n"], st["m"]))
+        c, n, m = new_st
+        return x + out, {"c": c, "n": n, "m": m}
+
+    def gbody(x, gp, gc):
+        mst = {"c": gc["m_c"], "n": gc["m_n"], "m": gc["m_m"]}
+        x, mst_out = scan_layers(mbody, x, gp["mlstm"], cfg, extra_xs=mst)
+        x, sst = slstm_block(gp["slstm"], x, cfg, rules=rules,
+                             state=(gc["s_c"], gc["s_n"], gc["s_m"],
+                                    gc["s_h"]))
+        return x, {"m_c": mst_out["c"], "m_n": mst_out["n"],
+                   "m_m": mst_out["m"], "s_c": sst[0], "s_n": sst[1],
+                   "s_m": sst[2], "s_h": sst[3]}
+
+    x, new_cache = scan_layers(
+        gbody, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+        cfg, extra_xs=cache)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return L.unembed(params, x, cfg, rules), new_cache
+
+
+def input_specs(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    if shape.kind == "decode":
+        return decode_specs(shape.global_batch)
+    return token_specs(shape.global_batch, shape.seq_len)

@@ -1,0 +1,141 @@
+"""Logical-axis sharding (MaxText-style) + declarative param schemas.
+
+Every parameter is declared once as a ``P`` (shape, logical axes, init); the
+same schema yields
+  * materialized params (`init_params`),
+  * abstract params for the AOT dry-run (`abstract_params` —
+    ShapeDtypeStruct, no allocation),
+  * NamedShardings (`tree_shardings`) via a *rules* table mapping logical
+    axes to mesh axes.
+
+Rules compose per-run: TP shards heads/mlp/vocab on "model", FSDP shards the
+embed axis of params on "data", EP shards "experts" on "model", SP shards
+long sequences on "model".  The multi-pod mesh adds a pure-DP "pod" axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class P:
+    """Declarative parameter spec."""
+    shape: Tuple[int, ...]
+    axes: Axes                      # logical axis names, len == len(shape)
+    init: str = "normal"            # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Optional[str] = None     # override the config param_dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+# Default logical→mesh rules.  None → replicated on that axis.
+DEFAULT_RULES: Dict[str, Optional[Union[str, Tuple[str, ...]]]] = {
+    "batch": ("pod", "data"),      # activations' batch dim
+    "seq": None,                   # sequence (→ "model" under SP)
+    "embed": "data",               # FSDP: shard params' embed dim on data
+    "embed2": None,                # square-matrix second embed axis
+    "heads": "model",              # TP
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",            # EP
+    "layers": None,                # scan axis — never sharded
+    "conv": None,
+    "state": None,
+    "window": None,                # KV-cache slots (→ "model" under SP)
+    "act_embed": None,             # activations' model dim (replicated)
+    "act_mlp": "model",            # activations' FFN-hidden dim (TP);
+    "act_vocab": "model",          # logits' vocab dim (TP) — separate from
+                                   # the weight axes so sequence
+                                   # parallelism can unmap them
+}
+
+
+def make_rules(mesh: Mesh, **overrides) -> Dict[str, Any]:
+    """Rules valid for ``mesh``: axes absent from the mesh are dropped."""
+    rules = dict(DEFAULT_RULES)
+    rules.update(overrides)
+    names = set(mesh.axis_names)
+
+    def fix(v):
+        if v is None:
+            return None
+        if isinstance(v, tuple):
+            kept = tuple(x for x in v if x in names)
+            return kept if kept else None
+        return v if v in names else None
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def spec_for(axes: Axes, rules: Dict[str, Any]) -> PartitionSpec:
+    return PartitionSpec(*(rules.get(a) if a is not None else None
+                           for a in axes))
+
+
+def tree_shardings(schema: Any, mesh: Mesh,
+                   rules: Dict[str, Any]) -> Any:
+    """NamedSharding tree mirroring a schema/param tree."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, spec_for(p.axes, rules)),
+        schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(schema: Any, param_dtype: str) -> Any:
+    def mk(p: P) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype
+                                                       or param_dtype))
+    return jax.tree.map(mk, schema, is_leaf=lambda x: isinstance(x, P))
+
+
+def init_params(schema: Any, rng: jax.Array, param_dtype: str) -> Any:
+    """Materialize the schema (host-side; used for smoke tests/examples)."""
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(rng, len(leaves))
+
+    def mk(p: P, key):
+        dt = jnp.dtype(p.dtype or param_dtype)
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dt)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dt)
+        if p.init == "neg_ones":
+            return jnp.full(p.shape, -1, dt)
+        if p.init == "neg_large":
+            return jnp.full(p.shape, -1e30, dt)
+        if p.init == "eps":
+            return jnp.full(p.shape, 1e-6, dt)
+        if p.init == "scaled":     # fan-in scaled normal
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            return (jax.random.normal(key, p.shape, dt)
+                    * (p.scale / np.sqrt(max(1, fan_in))))
+        return jax.random.normal(key, p.shape, dt) * 0.02 * p.scale
+
+    return jax.tree.unflatten(
+        treedef, [mk(p, k) for p, k in zip(leaves, keys)])
+
+
+def logical_constraint(x: jax.Array, axes: Axes,
+                       rules: Optional[Dict[str, Any]]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without rules)."""
+    if rules is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, PartitionSpec(*(rules.get(a) for a in axes)))
+    except (ValueError, RuntimeError):
+        return x                    # outside a mesh context (smoke tests)

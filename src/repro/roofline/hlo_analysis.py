@@ -1,0 +1,446 @@
+"""Post-optimization HLO text analyzer.
+
+XLA's `compiled.cost_analysis()` visits a while-loop body ONCE — a
+scan-over-layers model under-reports FLOPs by ~n_layers× (verified
+empirically; see EXPERIMENTS.md §Dry-run).  Every model here scans over
+layers, so we parse `compiled.as_text()` ourselves and propagate
+`known_trip_count` multipliers through the call graph:
+
+  * dot FLOPs       — 2 · prod(result) · prod(lhs contracting dims),
+                      counted inside fusion bodies too;
+  * boundary bytes  — operand+result bytes of top-level (non-fused) ops;
+                      fusion internals never touch HBM, so a fusion op's
+                      boundary is exactly the HBM-traffic model;
+  * collectives     — operand bytes + replica-group size per op, from
+                      which the roofline computes ring wire bytes.
+
+The module is SPMD-partitioned → all shapes (and all terms) are PER-DEVICE.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMP_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+
+# call-graph ops and ops excluded from byte/flop accounting
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "add-dependency", "partition-id",
+             "replica-id", "iota", "custom-call"}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "negate", "abs", "rsqrt", "sqrt",
+    "logistic", "cosine", "sine", "and", "or", "xor", "not", "compare",
+    "select", "clamp", "convert", "floor", "ceil", "sign",
+    "exponential-minus-one", "log-plus-one", "atan2", "remainder",
+}
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all arrays in a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in DTYPE_BYTES:
+            total += _elems(dims) * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    return sum(_elems(dims) for dt, dims in _SHAPE_RE.findall(type_str)
+               if dt in DTYPE_BYTES)
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operand_names: List[str]
+    attrs: str
+    trip_count: int = 1
+
+    def called(self) -> List[str]:
+        out = _CALLS_RE.findall(self.attrs)
+        b = _BRANCH_RE.search(self.attrs)
+        if b:
+            out += [c.strip().lstrip("%") for c in b.group(1).split(",")]
+        return out
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symtab: Dict[str, str]          # instruction/parameter name → type
+
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_ops: List[dict] = field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        """Raw operand bytes through collectives (per device)."""
+        return float(sum(o["operand_bytes"] * o["count"]
+                         for o in self.collective_ops))
+
+
+def _split_type_opcode(rest: str) -> Tuple[str, str, str]:
+    """'f32[8]{1,0} dot(%a, %b), attrs' → (type, opcode, tail)."""
+    rest = rest.strip()
+    if rest.startswith("("):                       # tuple type
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rest[:i + 1]
+                    rest2 = rest[i + 1:].lstrip()
+                    break
+        else:
+            return rest, "", ""
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return rest, "", ""
+        type_str, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    par = rest2.find("(")
+    if par < 0:
+        return type_str, rest2, ""
+    return type_str, rest2[:par], rest2[par + 1:]
+
+
+def _split_operands_attrs(tail: str) -> Tuple[str, str]:
+    depth = 1
+    for i, ch in enumerate(tail):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return tail[:i], tail[i + 1:]
+    return tail, ""
+
+
+def parse_instruction(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    type_str, opcode, tail = _split_type_opcode(s[eq + 3:])
+    if not opcode:
+        return None
+    operands_str, attrs = _split_operands_attrs(tail)
+    operand_names = _NAME_RE.findall(operands_str)
+    trip = 1
+    t = _TRIP_RE.search(attrs)
+    if t:
+        trip = int(t.group(1))
+    return Instr(name=name, opcode=opcode, result_type=type_str,
+                 operand_names=operand_names, attrs=attrs,
+                 trip_count=trip)
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and " = " not in line.split("(")[0]:
+                current = Computation(m.group(2), [], {})
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+        else:
+            if line.strip() == "}":
+                current = None
+                continue
+            ins = parse_instruction(line)
+            if ins is not None:
+                current.symtab[ins.name] = ins.result_type
+                current.instrs.append(ins)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    return sum(shape_bytes(comp.symtab.get(n, "")) for n in
+               ins.operand_names)
+
+
+# ops that touch only a slice of their (first) operand — charging the full
+# operand would overcount HBM traffic by the slab size (e.g. a
+# dynamic-slice of the stacked [L, ...] scan parameters touches one layer,
+# not all L)
+_SLICE_READS = {"dynamic-slice", "slice", "gather"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+_MOVE_OPS = {"copy", "transpose", "concatenate", "pad", "reverse",
+             "reshape", "broadcast"}
+
+
+def _touched_bytes(ins: Instr, comp: Computation) -> float:
+    """HBM bytes this op plausibly moves (read + written)."""
+    op = ins.opcode
+    res = shape_bytes(ins.result_type)
+    if op in _SLICE_READS:
+        return 2.0 * res                       # read region ≈ result size
+    if op in _SLICE_WRITES:
+        # read+write the updated region (≈ update operand), not the target
+        upd = shape_bytes(comp.symtab.get(ins.operand_names[1], "")) \
+            if len(ins.operand_names) > 1 else res
+        return 3.0 * upd
+    if op in _MOVE_OPS:
+        return 2.0 * res
+    if op == "iota":
+        return float(res)
+    return float(_operand_bytes(ins, comp) + res)
+
+
+_PASSTHROUGH = {"convert", "copy", "bitcast", "reshape", "transpose"}
+
+
+def _fusion_param_bytes(comp: Computation) -> float:
+    """Effective read bytes of a fusion computation's parameters.
+
+    A parameter consumed only as the sliced operand of slice-like ops is
+    charged at the sliced size; pass-through ops (convert/copy/bitcast…)
+    inherit their consumers' classification — XLA:CPU normalizes bf16
+    scatter/DUS by converting whole operands to f32 and back, which would
+    otherwise charge a loop-carried KV cache at full size per layer (on
+    TPU the bf16 DUS is native and in-place)."""
+    params = [i for i in comp.instrs if i.opcode == "parameter"]
+    consumers: Dict[str, list] = {}
+    by_name = {i.name: i for i in comp.instrs}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            continue
+        for j, nm in enumerate(ins.operand_names):
+            consumers.setdefault(nm, []).append((ins, j))
+
+    FULL = float("inf")
+    memo: Dict[str, float] = {}
+
+    def charge(name: str, depth: int = 0) -> float:
+        """Bytes read from `name`'s buffer, or FULL."""
+        if name in memo:
+            return memo[name]
+        if depth > 40:
+            return FULL
+        memo[name] = FULL                     # cycle guard (conservative)
+        total = 0.0
+        uses = consumers.get(name, [])
+        if not uses:
+            memo[name] = 0.0
+            return 0.0
+        for ins, j in uses:
+            if ins.opcode in _SLICE_READS and j == 0:
+                total += shape_bytes(ins.result_type)
+            elif ins.opcode in _SLICE_WRITES and j == 0:
+                upd = shape_bytes(
+                    comp.symtab.get(ins.operand_names[1], "")) \
+                    if len(ins.operand_names) > 1 else 0.0
+                total += 2.0 * upd
+            elif ins.opcode in _PASSTHROUGH:
+                total += charge(ins.name, depth + 1)
+            else:
+                total = FULL
+                break
+        memo[name] = total
+        return total
+
+    total = 0.0
+    for p in params:
+        c = charge(p.name)
+        full_b = shape_bytes(p.result_type)
+        total += full_b if c == FULL else min(c, full_b)
+    return total
+
+
+def _fusion_result_bytes(comp: Computation, result_bytes: float) -> float:
+    """Bytes written by a fusion: if the root is (a pass-through chain
+    over) a dynamic-update-slice, only the updated region is written —
+    the loop-carried buffer updates in place."""
+    root = comp.instrs[-1] if comp.instrs else None
+    by_name = {i.name: i for i in comp.instrs}
+    seen = 0
+    while root is not None and root.opcode in _PASSTHROUGH and seen < 10:
+        nxt = by_name.get(root.operand_names[0]) \
+            if root.operand_names else None
+        if nxt is None:
+            break
+        root = nxt
+        seen += 1
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and len(root.operand_names) > 1:
+        upd = shape_bytes(comp.symtab.get(root.operand_names[1], ""))
+        if upd:
+            return float(min(upd, result_bytes))
+    return float(result_bytes)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res = shape_elems(ins.result_type)
+    if not ins.operand_names:
+        return 0.0
+    lhs_type = comp.symtab.get(ins.operand_names[0], "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if cd and cd.group(1):
+        for i in cd.group(1).split(","):
+            contract *= lhs_dims[int(i)]
+    return 2.0 * res * contract
+
+
+def _group_size(ins: Instr, total_devices: int) -> int:
+    gi = _GROUPS_IOTA_RE.search(ins.attrs)
+    if gi:
+        return int(gi.group(2))
+    gl = _GROUPS_LIST_RE.search(ins.attrs)
+    if gl and gl.group(1).strip():
+        return len(gl.group(1).split(","))
+    return total_devices
+
+
+def analyze(text: str, total_devices: int = 1) -> Analysis:
+    comps, entry = parse_computations(text)
+    coll: Dict[Tuple[str, int, int], int] = defaultdict(int)
+    fusion_cache: Dict[str, float] = {}
+
+    def rec(cname: str, mult: float, in_fusion: bool,
+            seen: tuple) -> Tuple[float, float]:
+        comp = comps[cname]
+        flops = bytes_ = 0.0
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _SKIP_OPS:
+                continue
+            if op == "fusion":
+                if not in_fusion:
+                    rb = shape_bytes(ins.result_type)
+                    pbytes = wbytes = 0.0
+                    for c in ins.called():
+                        if c in comps:
+                            if c not in fusion_cache:
+                                fusion_cache[c] = (
+                                    _fusion_param_bytes(comps[c]),
+                                    _fusion_result_bytes(comps[c], rb))
+                            pb, wb = fusion_cache[c]
+                            pbytes += pb
+                            wbytes += wb
+                    bytes_ += (pbytes + (wbytes or rb)) * mult
+                for c in ins.called():
+                    if c in comps and c not in seen:
+                        f, _ = rec(c, mult, True, seen + (c,))
+                        flops += f
+                continue
+            if op == "while":
+                m2 = mult * ins.trip_count
+                body = [c for c in ins.called() if c in comps]
+                for c in body:
+                    if c not in seen:
+                        f, b = rec(c, m2, in_fusion, seen + (c,))
+                        flops += f
+                        bytes_ += b
+                continue
+            if op == "conditional":
+                branches = [c for c in ins.called()
+                            if c in comps and c not in seen]
+                if branches:
+                    f, b = max(rec(c, mult, in_fusion, seen + (c,))
+                               for c in branches)
+                    flops += f
+                    bytes_ += b
+                continue
+            if op == "call":
+                for c in ins.called():
+                    if c in comps and c not in seen:
+                        f, b = rec(c, mult, in_fusion, seen + (c,))
+                        flops += f
+                        bytes_ += b
+                continue
+            if op in ("sort", "reduce", "reduce-window", "scatter", "map",
+                      "select-and-scatter", "reduce-scatter", "all-reduce"):
+                pass        # their to_apply is a scalar lambda — skip walk
+            base = None
+            for ckind in COLLECTIVES:
+                if op == ckind or op == ckind + "-start":
+                    base = ckind
+                    break
+            if base is not None:
+                ob = _operand_bytes(ins, comp)
+                coll[(base, ob, _group_size(ins, total_devices))] += \
+                    max(1, round(mult))
+                if not in_fusion:
+                    bytes_ += (ob + shape_bytes(ins.result_type)) * mult
+                continue
+            # ordinary op
+            if op == "dot":
+                flops += _dot_flops(ins, comp) * mult
+            elif op == "convolution":
+                # 2 × output elems × kernel elems (upper bound; the models
+                # here lower convs to shifted adds, so this op is rare)
+                kt = comp.symtab.get(ins.operand_names[1], "") \
+                    if len(ins.operand_names) > 1 else ""
+                flops += 2.0 * shape_elems(ins.result_type) \
+                    * max(1, shape_elems(kt)) * mult
+            elif op in ("reduce", "reduce-window"):
+                if not in_fusion:
+                    flops += (_operand_bytes(ins, comp) / 4.0) * mult
+            elif op in _ELEMENTWISE:
+                if not in_fusion:
+                    flops += shape_elems(ins.result_type) * mult
+            if not in_fusion:
+                bytes_ += _touched_bytes(ins, comp) * mult
+        return flops, bytes_
+
+    flops, bytes_ = rec(entry, 1.0, False, ())
+    out = Analysis(flops=flops, bytes_accessed=bytes_)
+    for (kind, obytes, gsize), count in sorted(coll.items()):
+        out.collective_ops.append({"kind": kind, "operand_bytes": obytes,
+                                   "group_size": gsize, "count": count})
+    return out

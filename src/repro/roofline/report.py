@@ -1,0 +1,162 @@
+"""Three-term roofline from the dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: 50 GB/s (per-chip aggregate used for ring formulas)
+
+Terms (seconds per step, per chip — HLO shapes are already per-device
+because the module is SPMD-partitioned):
+  compute    = hlo_flops_per_device / 197e12
+  memory     = hlo_bytes_per_device / 819e9
+  collective = Σ_ops ring_wire_bytes(kind, operand_bytes, group) / 50e9
+
+Ring wire bytes per chip: all-reduce 2·B·(g−1)/g, all-gather/
+reduce-scatter/all-to-all B·(g−1)/g, collective-permute B.
+
+MODEL_FLOPS = 6·N_active·D (train), 2·N_active·D (prefill/decode forward
+only); the ratio against HLO_FLOPs exposes remat/recompute and quadratic-
+attention overhead that 6·N·D does not model.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def wire_bytes(kind: str, operand_bytes: float, group: int) -> float:
+    g = max(group, 1)
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * operand_bytes * frac
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return operand_bytes * frac
+    if kind == "collective-permute":
+        return float(operand_bytes)
+    return float(operand_bytes)
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["active_params"]
+    tokens = rec["global_batch"] * (rec["seq_len"]
+                                    if rec["kind"] != "decode" else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    return float(mult * n * tokens)
+
+
+def terms(rec: dict) -> Dict[str, float]:
+    coll = sum(wire_bytes(o["kind"], o["operand_bytes"], o["group_size"])
+               * o["count"] for o in rec["collectives"])
+    t = {
+        "compute_s": rec["hlo_flops_per_device"] / PEAK_FLOPS,
+        "memory_s": rec["hlo_bytes_per_device"] / HBM_BW,
+        "collective_s": coll / LINK_BW,
+    }
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k])
+    t["bound"] = t["dominant"].split("_")[0]
+    mf = model_flops(rec)
+    t["model_flops"] = mf
+    t["flops_ratio"] = mf / max(1.0, rec["hlo_flops_per_device"]
+                                * rec["chips"])
+    # roofline fraction: useful model flops per second at the bottleneck
+    step_time = t[t["dominant"]]
+    t["step_s"] = step_time
+    t["mfu"] = mf / (rec["chips"] * PEAK_FLOPS * step_time) \
+        if step_time > 0 else 0.0
+    return t
+
+
+def load(mesh: str = "pod") -> List[dict]:
+    recs = []
+    for p in sorted(ARTIFACT_DIR.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+MOVE_HINTS = {
+    ("compute", "train"): "cast more matmuls to bf16 / shard attention "
+                          "heads (TP) where divisibility allows",
+    ("compute", "prefill"): "flash-attention kernel halves masked-block "
+                            "work; shard sequence (SP) across model axis",
+    ("compute", "decode"): "batch more sequences per chip; fold GQA "
+                           "groups into one matmul pane",
+    ("memory", "train"): "raise accum_steps (microbatching) and remat to "
+                         "shrink live activations; bf16 cache",
+    ("memory", "prefill"): "fuse attention (flash) to avoid S² logits in "
+                           "HBM",
+    ("memory", "decode"): "decode is KV-bandwidth bound by nature: "
+                          "shrink cache via windowing/quantization, or "
+                          "raise batch to amortize weight reads",
+    ("collective", "train"): "overlap grad all-reduce with backward; "
+                             "int8-compress cross-pod gradients",
+    ("collective", "prefill"): "reduce TP collectives per layer by "
+                               "batching all-gathers",
+    ("collective", "decode"): "keep params resident (no per-step "
+                              "all-gather); shrink TP degree for decode",
+}
+
+
+def row(rec: dict) -> Optional[dict]:
+    if rec["status"] == "skip":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "skip": rec["reason"]}
+    if rec["status"] != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "skip": f"ERROR {rec.get('error', '?')[:80]}"}
+    t = terms(rec)
+    hint = MOVE_HINTS.get((t["bound"], rec["kind"]), "")
+    return {"arch": rec["arch"], "shape": rec["shape"],
+            "kind": rec["kind"], "chips": rec["chips"], **t,
+            "hlo_flops_dev": rec["hlo_flops_per_device"],
+            "hlo_bytes_dev": rec["hlo_bytes_per_device"],
+            "hint": hint}
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}µs"
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "MODEL_FLOPS | MF/HLO | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load(mesh):
+        r = row(rec)
+        if r is None:
+            continue
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP | — | — | {r['skip'][:70]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['bound']}** | {r['model_flops']:.2e} | "
+            f"{r['flops_ratio']:.3f} | {r['hint']} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    args = ap.parse_args()
+    print(markdown_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Serving substrate: slice-paged KV cache with prefix sharing, and the
+continuous-batching engine (`engine.py`)."""
+from .kv_cache import CacheConfig, OutOfPages, PagedKVCache
+
+__all__ = ["PagedKVCache", "CacheConfig", "OutOfPages"]

@@ -1,0 +1,206 @@
+"""WTF-backed data pipeline: shards, zero-copy shuffle/mixing, iteration."""
+import numpy as np
+import pytest
+
+from repro.core import Cluster
+from repro.data import (ByteTokenizer, DataPipeline, PipelineConfig,
+                        PipelineState, RecordFile, RecordWriter,
+                        mix_datasets, shuffle_epoch, write_token_shard)
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=1,
+                region_size=256 * 1024)
+    yield c
+    c.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return cluster.client()
+
+
+def test_record_roundtrip(fs):
+    w = RecordWriter(fs, "/shard", record_bytes=16)
+    for i in range(10):
+        w.append(bytes([i]) * 16)
+    spec = w.close()
+    assert spec.count == 10
+    f = RecordFile(fs, "/shard", 16)
+    assert f.count == 10
+    assert f.read_record(3) == bytes([3]) * 16
+    assert f.read_records(8, 5) == bytes([8]) * 16 + bytes([9]) * 16
+    f.close()
+
+
+def test_token_shard_packing(fs):
+    toks = list(range(105))
+    spec = write_token_shard(fs, "/toks", toks, block_tokens=10)
+    assert spec.count == 10                 # tail 5 tokens dropped
+    f = RecordFile(fs, "/toks", 40)
+    np.testing.assert_array_equal(f.read_tokens(2), np.arange(20, 30))
+    f.close()
+
+
+def test_shuffle_is_permutation_and_zero_copy(cluster, fs):
+    fs.mkdir("/data")
+    records = []
+    w = RecordWriter(fs, "/data/a", 8)
+    for i in range(20):
+        rec = i.to_bytes(4, "little") * 2
+        records.append(rec)
+        w.append(rec)
+    w.close()
+
+    writes_before = sum(s.stats.bytes_written
+                        for s in cluster.servers.values())
+    n = shuffle_epoch(fs, ["/data/a"], "/data/ep0", 8, seed=1)
+    writes_after = sum(s.stats.bytes_written
+                       for s in cluster.servers.values())
+    assert n == 20
+    assert writes_after - writes_before < 100, \
+        "shuffle must move ~zero data bytes (dirent record only)"
+
+    f = RecordFile(fs, "/data/ep0", 8)
+    got = [f.read_record(i) for i in range(f.count)]
+    f.close()
+    assert sorted(got) == sorted(records), "shuffle must be a permutation"
+    assert got != records, "seeded shuffle should actually permute"
+
+
+def test_shuffle_is_deterministic(fs):
+    fs.mkdir("/d")
+    w = RecordWriter(fs, "/d/a", 4)
+    for i in range(30):
+        w.append(i.to_bytes(4, "little"))
+    w.close()
+    shuffle_epoch(fs, ["/d/a"], "/d/e1", 4, seed=42)
+    shuffle_epoch(fs, ["/d/a"], "/d/e2", 4, seed=42)
+    f1 = RecordFile(fs, "/d/e1", 4)
+    f2 = RecordFile(fs, "/d/e2", 4)
+    assert [f1.read_record(i) for i in range(30)] == \
+           [f2.read_record(i) for i in range(30)]
+    f1.close(); f2.close()
+
+
+def test_mixture_weights(fs):
+    fs.mkdir("/m")
+    for name, byte in (("x", b"x"), ("y", b"y")):
+        w = RecordWriter(fs, f"/m/{name}", 1)
+        for _ in range(300):
+            w.append(byte)
+        w.close()
+    n = mix_datasets(fs, [("/m/x", 3.0), ("/m/y", 1.0)], "/m/mix", 1,
+                     seed=0, total_records=200)
+    assert n == 200
+    f = RecordFile(fs, "/m/mix", 1)
+    data = f.read_records(0, 200)
+    f.close()
+    x_frac = data.count(b"x") / 200
+    assert 0.6 < x_frac < 0.9, f"expected ~0.75 x-fraction, got {x_frac}"
+
+
+def _make_corpus(fs, n_records=64, block=9):
+    fs.mkdir("/corpus")
+    w = RecordWriter(fs, "/corpus/s0", block * 4)
+    for i in range(n_records):
+        w.append_array(np.full(block, i, dtype=np.int32))
+    w.close()
+
+
+def test_pipeline_batches_and_shapes(fs):
+    _make_corpus(fs)
+    cfg = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                         block_tokens=9, global_batch=8, seed=0, prefetch=0)
+    pipe = DataPipeline(fs, cfg)
+    it = iter(pipe)
+    batch = next(it)
+    assert batch["tokens"].shape == (8, 8)
+    assert batch["labels"].shape == (8, 8)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+def test_pipeline_epoch_covers_all_records_once(fs):
+    _make_corpus(fs, n_records=32)
+    cfg = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                         block_tokens=9, global_batch=8, seed=0, prefetch=0)
+    pipe = DataPipeline(fs, cfg)
+    seen = []
+    it = iter(pipe)
+    for _ in range(pipe.steps_per_epoch):
+        b = next(it)
+        seen.extend(b["tokens"][:, 0].tolist())
+    assert sorted(seen) == sorted(range(32)), \
+        "one epoch must visit every record exactly once"
+
+
+def test_pipeline_multihost_partition(fs):
+    """Hosts' shards must tile the global batch exactly."""
+    _make_corpus(fs, n_records=32)
+    base = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                          block_tokens=9, global_batch=8, seed=3, prefetch=0)
+    whole = DataPipeline(fs, base)
+    b_full = next(iter(whole))
+    parts = []
+    for h in range(4):
+        import dataclasses
+        cfg = dataclasses.replace(base, host_id=h, num_hosts=4)
+        b = next(iter(DataPipeline(fs, cfg)))
+        parts.append(b["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts), b_full["tokens"])
+
+
+def test_pipeline_resume_from_state(fs):
+    """Restart mid-epoch from the checkpointed cursor → identical stream."""
+    _make_corpus(fs, n_records=64)
+    cfg = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                         block_tokens=9, global_batch=8, seed=0, prefetch=0)
+    p1 = DataPipeline(fs, cfg)
+    it1 = iter(p1)
+    for _ in range(3):
+        next(it1)
+    state = PipelineState.from_dict(p1.state.to_dict())   # "checkpoint"
+    want = next(it1)
+
+    p2 = DataPipeline(fs, cfg, state=state)               # "restart"
+    got = next(iter(p2))
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+
+def test_pipeline_prefetch_matches_sync(fs):
+    _make_corpus(fs, n_records=32)
+    import dataclasses
+    cfg = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                         block_tokens=9, global_batch=8, seed=0, prefetch=0)
+    sync_batches = []
+    it = iter(DataPipeline(fs, cfg))
+    for _ in range(6):
+        sync_batches.append(next(it)["tokens"])
+    pre = iter(DataPipeline(fs, dataclasses.replace(cfg, prefetch=3)))
+    for i in range(6):
+        np.testing.assert_array_equal(next(pre)["tokens"], sync_batches[i])
+
+
+def test_elastic_rescale_same_stream(fs):
+    """2 hosts → 4 hosts at step 5: the union of host batches is unchanged."""
+    _make_corpus(fs, n_records=64)
+    cfg = PipelineConfig(src_paths=("/corpus/s0",), work_dir="/epochs",
+                         block_tokens=9, global_batch=8, seed=0, prefetch=0,
+                         host_id=0, num_hosts=2)
+    p = DataPipeline(fs, cfg)
+    it = iter(p)
+    for _ in range(5):
+        next(it)
+    state = p.state
+    # what a single host would see at the next step
+    whole = DataPipeline(fs, PipelineConfig(
+        src_paths=("/corpus/s0",), work_dir="/epochs", block_tokens=9,
+        global_batch=8, seed=0, prefetch=0), state=state)
+    want = next(iter(whole))["tokens"]
+    parts = []
+    for h in range(4):
+        q = p.with_hosts(h, 4)
+        parts.append(next(iter(q))["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts), want)

@@ -1,0 +1,132 @@
+"""Fault tolerance: coordinator quorum, slice replication, failover (§2.9)."""
+import pytest
+
+from repro.core import (Cluster, NoQuorum, ReplicatedCoordinator,
+                        StorageError)
+
+
+# ------------------------------------------------------------- coordinator
+def test_coordinator_replicas_agree():
+    co = ReplicatedCoordinator(3)
+    co.register_server(0, "a")
+    co.register_server(1, "b")
+    cfg = co.config()
+    assert cfg["online"] == [0, 1]
+    for rep in co._replicas:
+        assert rep.state.config() == cfg
+
+
+def test_coordinator_survives_minority_failure():
+    co = ReplicatedCoordinator(3)
+    co.register_server(0, "a")
+    co.crash_replica(0)
+    co.register_server(1, "b")          # still has 2/3 quorum
+    assert co.config()["online"] == [0, 1]
+
+
+def test_coordinator_loses_quorum():
+    co = ReplicatedCoordinator(3)
+    co.register_server(0, "a")
+    co.crash_replica(0)
+    co.crash_replica(1)
+    with pytest.raises(NoQuorum):
+        co.register_server(1, "b")
+    with pytest.raises(NoQuorum):
+        co.config()
+
+
+def test_coordinator_replica_recovery_catches_up():
+    co = ReplicatedCoordinator(3)
+    co.register_server(0, "a")
+    co.crash_replica(2)
+    co.register_server(1, "b")
+    co.fail_server(0)
+    co.recover_replica(2)
+    assert co._replicas[2].state.config() == co.config()
+
+
+def test_epoch_bumps_on_membership_change():
+    co = ReplicatedCoordinator(3)
+    e1 = co.register_server(0, "a")
+    e2 = co.fail_server(0)
+    e3 = co.recover_server(0)
+    assert e1 < e2 < e3
+
+
+# ---------------------------------------------------------- data replication
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024)
+    yield c
+    c.close()
+
+
+def make_file(fs, path, payload):
+    fd = fs.open(path, "w")
+    fs.write(fd, payload)
+    fs.close(fd)
+
+
+def read_file(fs, path):
+    fd = fs.open(path, "r")
+    data = fs.read(fd)
+    fs.close(fd)
+    return data
+
+
+def test_writes_create_two_replicas(cluster):
+    fs = cluster.client()
+    make_file(fs, "/r", b"replicated" * 100)
+    ino = fs.stat("/r")["inode"]
+    rd = cluster.kv.get("regions", (ino, 0))
+    for e in rd.entries:
+        assert len(e.ptrs) == 2
+        assert e.ptrs[0].server_id != e.ptrs[1].server_id, \
+            "replicas must land on distinct servers"
+
+
+def test_read_survives_one_server_failure(cluster):
+    """Both systems tolerate the failure of any one storage server (§4)."""
+    fs = cluster.client()
+    payload = b"precious-data" * 500
+    make_file(fs, "/critical", payload)
+    ino = fs.stat("/critical")["inode"]
+    rd = cluster.kv.get("regions", (ino, 0))
+    victim = rd.entries[0].ptrs[0].server_id
+    cluster.fail_server(victim)
+    assert read_file(fs, "/critical") == payload
+
+
+def test_write_survives_one_server_failure(cluster):
+    fs = cluster.client()
+    cluster.fail_server(0)
+    payload = b"written-during-failure" * 100
+    make_file(fs, "/during", payload)
+    assert read_file(fs, "/during") == payload
+
+
+def test_failed_server_recovery_rejoins_ring(cluster):
+    fs = cluster.client()
+    cluster.fail_server(1)
+    make_file(fs, "/a", b"x" * 1000)
+    cluster.recover_server(1)
+    assert 1 in cluster._ring.servers
+    make_file(fs, "/b", b"y" * 1000)
+    assert read_file(fs, "/b") == b"y" * 1000
+
+
+def test_unreplicated_cluster_loses_availability(tmp_path):
+    """Sanity check on the failure model: with replication=1, losing the
+    server holding a slice makes reads fail (no silent wrong answers)."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "u"), replication=1,
+                region_size=64 * 1024)
+    fs = c.client()
+    make_file(fs, "/single", b"fragile")
+    ino = fs.stat("/single")["inode"]
+    rd = c.kv.get("regions", (ino, 0))
+    victim = rd.entries[0].ptrs[0].server_id
+    c.fail_server(victim)
+    with pytest.raises(StorageError):
+        read_file(fs, "/single")
+    c.close()

@@ -1,0 +1,201 @@
+"""End-to-end filesystem behaviour: POSIX surface + hierarchy (paper §2.4)."""
+import os
+
+import pytest
+
+from repro.core import (SEEK_CUR, SEEK_END, SEEK_SET, AlreadyExists, Cluster,
+                        IsADirectory, NotADirectory, NotFound)
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=1,
+                region_size=1024)
+    yield c
+    c.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return cluster.client()
+
+
+def test_write_read_roundtrip(fs):
+    fd = fs.open("/a", "w")
+    assert fs.write(fd, b"hello world") == 11
+    fs.seek(fd, 0)
+    assert fs.read(fd) == b"hello world"
+    fs.close(fd)
+
+
+def test_one_lookup_open_deep_path(fs):
+    fs.mkdir("/d1")
+    fs.mkdir("/d1/d2")
+    fs.mkdir("/d1/d2/d3")
+    fd = fs.open("/d1/d2/d3/file", "w")
+    fs.write(fd, b"deep")
+    fs.close(fd)
+    gets_before = fs.kv.stats.gets
+    fd = fs.open("/d1/d2/d3/file", "r")
+    gets_after = fs.kv.stats.gets
+    # one lookup for the path + one for the inode — no per-component traversal
+    assert gets_after - gets_before <= 2
+    assert fs.read(fd) == b"deep"
+    fs.close(fd)
+
+
+def test_overwrite_middle(fs):
+    fd = fs.open("/f", "w")
+    fs.write(fd, b"A" * 100)
+    fs.seek(fd, 40)
+    fs.write(fd, b"B" * 20)
+    fs.seek(fd, 0)
+    data = fs.read(fd)
+    assert data == b"A" * 40 + b"B" * 20 + b"A" * 40
+    fs.close(fd)
+
+
+def test_cross_region_write(fs):
+    """region_size=1024: a 3000-byte write spans 3 regions (Figure 3)."""
+    payload = bytes(range(256)) * 12   # 3072 bytes
+    fd = fs.open("/big", "w")
+    fs.write(fd, payload)
+    fs.seek(fd, 0)
+    assert fs.read(fd) == payload
+    assert fs.stat("/big")["size"] == 3072
+    fs.close(fd)
+
+
+def test_sparse_file_reads_zeros(fs):
+    fd = fs.open("/sparse", "w")
+    fs.seek(fd, 5000)
+    fs.write(fd, b"end")
+    fs.seek(fd, 0)
+    data = fs.read(fd)
+    assert len(data) == 5003
+    assert data[:5000] == b"\x00" * 5000
+    assert data[5000:] == b"end"
+    fs.close(fd)
+
+
+def test_seek_semantics(fs):
+    fd = fs.open("/s", "w")
+    fs.write(fd, b"0123456789")
+    assert fs.seek(fd, 2) == 2
+    assert fs.seek(fd, 3, SEEK_CUR) == 5
+    # SEEK_END hides the offset from the application (§2.6)
+    assert fs.seek(fd, 0, SEEK_END) is None
+    assert fs.tell(fd) == 10
+    fs.close(fd)
+
+
+def test_append_mode_and_calls(fs):
+    fd = fs.open("/log", "w")
+    fs.write(fd, b"one\n")
+    fs.close(fd)
+    fd = fs.open("/log", "a")
+    fs.append(fd, b"two\n")
+    fs.append(fd, b"three\n")
+    fs.close(fd)
+    fd = fs.open("/log", "r")
+    assert fs.read(fd) == b"one\ntwo\nthree\n"
+    fs.close(fd)
+
+
+def test_append_crossing_region_boundary(fs):
+    fd = fs.open("/roll", "w")
+    fs.write(fd, b"x" * 1000)      # region 0 nearly full (1024)
+    fs.append(fd, b"y" * 100)      # cannot fit → fallback write at EOF
+    fs.seek(fd, 0)
+    data = fs.read(fd)
+    assert data == b"x" * 1000 + b"y" * 100
+    assert fs.stat("/roll")["size"] == 1100
+    fs.close(fd)
+
+
+def test_mkdir_listdir(fs):
+    fs.mkdir("/dir")
+    fd = fs.open("/dir/f1", "w"); fs.write(fd, b"1"); fs.close(fd)
+    fd = fs.open("/dir/f2", "w"); fs.write(fd, b"2"); fs.close(fd)
+    fs.mkdir("/dir/sub")
+    assert fs.listdir("/dir") == ["f1", "f2", "sub"]
+    with pytest.raises(AlreadyExists):
+        fs.mkdir("/dir")
+    with pytest.raises(NotFound):
+        fs.mkdir("/missing/sub")
+
+
+def test_hardlink_semantics(fs):
+    fd = fs.open("/orig", "w"); fs.write(fd, b"shared"); fs.close(fd)
+    fs.link("/orig", "/alias")
+    assert fs.stat("/alias")["links"] == 2
+    assert fs.stat("/alias")["inode"] == fs.stat("/orig")["inode"]
+    fd = fs.open("/alias", "r")
+    assert fs.read(fd) == b"shared"
+    fs.close(fd)
+    fs.unlink("/orig")
+    assert not fs.exists("/orig")
+    assert fs.stat("/alias")["links"] == 1
+    fd = fs.open("/alias", "r")
+    assert fs.read(fd) == b"shared"
+    fs.close(fd)
+
+
+def test_unlink_last_link_removes_metadata(fs):
+    fd = fs.open("/gone", "w"); fs.write(fd, b"bye"); fs.close(fd)
+    ino = fs.stat("/gone")["inode"]
+    fs.unlink("/gone")
+    assert not fs.exists("/gone")
+    assert fs.kv.get("inodes", ino) is None
+    assert "gone" not in fs.listdir("/")
+
+
+def test_rename(fs):
+    fs.mkdir("/src"); fs.mkdir("/dst")
+    fd = fs.open("/src/f", "w"); fs.write(fd, b"move me"); fs.close(fd)
+    fs.rename("/src/f", "/dst/g")
+    assert fs.listdir("/src") == []
+    assert fs.listdir("/dst") == ["g"]
+    fd = fs.open("/dst/g", "r")
+    assert fs.read(fd) == b"move me"
+    fs.close(fd)
+
+
+def test_open_truncate(fs):
+    fd = fs.open("/t", "w"); fs.write(fd, b"old content"); fs.close(fd)
+    fd = fs.open("/t", "w")            # w → truncate
+    fs.write(fd, b"new")
+    fs.close(fd)
+    assert fs.stat("/t")["size"] == 3
+
+
+def test_errors(fs):
+    with pytest.raises(NotFound):
+        fs.open("/nope", "r")
+    fs.mkdir("/d")
+    with pytest.raises(IsADirectory):
+        fs.open("/d", "w")
+    fd = fs.open("/file", "w"); fs.write(fd, b"x"); fs.close(fd)
+    with pytest.raises(NotADirectory):
+        fs.open("/file/sub", "w")
+    with pytest.raises(AlreadyExists):
+        fs.open("/file", "x")
+
+
+def test_pread_pwrite(fs):
+    fd = fs.open("/p", "w")
+    fs.write(fd, b"0123456789")
+    assert fs.pread(fd, 4, 3) == b"3456"
+    fs.pwrite(fd, b"XY", 5)
+    assert fs.pread(fd, 10, 0) == b"01234XY789"
+    assert fs.tell(fd) == 10           # p-ops do not move the offset
+    fs.close(fd)
+
+
+def test_multiple_clients_see_writes_on_completion(cluster):
+    """WTF guarantees all readers see a write upon its completion (§4.2)."""
+    c1, c2 = cluster.client(), cluster.client()
+    fd1 = c1.open("/shared", "w")
+    c1.write(fd1, b"visible")
+    fd2 = c2.open("/shared", "r")
+    assert c2.read(fd2) == b"visible"

@@ -1,0 +1,100 @@
+"""Property-based system test: WTF vs. an in-memory byte oracle.
+
+A random sequence of writes/appends/punches/pastes/compactions/GC cycles is
+applied both to a WTF file and to a plain bytearray; the file's content must
+match the oracle after every step.  This exercises the full stack: overlay
+semantics, region splitting, relative appends, metadata compaction, tier-2
+spills and tier-3 storage GC.
+"""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import Cluster, GarbageCollector
+
+REGION = 2048
+MAXLEN = 3 * REGION          # exercise multi-region behaviour
+
+
+class Oracle:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def write(self, off, data):
+        if off > len(self.buf):
+            self.buf.extend(b"\x00" * (off - len(self.buf)))
+        end = off + len(data)
+        self.buf[off:end] = data
+
+    def append(self, data):
+        self.buf.extend(data)
+
+    def punch(self, off, n):
+        self.write(off, b"\x00" * n)
+
+
+op_strategy = st.one_of(
+    st.tuples(st.just("write"), st.integers(0, MAXLEN - 1),
+              st.binary(min_size=1, max_size=600)),
+    st.tuples(st.just("append"), st.binary(min_size=1, max_size=600)),
+    st.tuples(st.just("punch"), st.integers(0, MAXLEN - 1),
+              st.integers(1, 400)),
+    st.tuples(st.just("yankpaste"), st.integers(0, MAXLEN - 1),
+              st.integers(1, 500), st.integers(0, MAXLEN - 1)),
+    st.tuples(st.just("compact")),
+    st.tuples(st.just("gc")),
+)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.function_scoped_fixture])
+@given(st.lists(op_strategy, min_size=1, max_size=25))
+def test_random_ops_match_oracle(tmp_path_factory, ops):
+    tmp = tmp_path_factory.mktemp("wtf")
+    cluster = Cluster(n_servers=3, data_dir=str(tmp), replication=1,
+                      region_size=REGION, num_backing_files=2)
+    try:
+        fs = cluster.client()
+        gc = GarbageCollector(cluster, spill_threshold=8)
+        oracle = Oracle()
+        fd = fs.open("/f", "w")
+        for op in ops:
+            kind = op[0]
+            if kind == "write":
+                _, off, data = op
+                fs.pwrite(fd, data, off)
+                oracle.write(off, data)
+            elif kind == "append":
+                _, data = op
+                fs.append(fd, data)
+                oracle.append(data)
+            elif kind == "punch":
+                _, off, n = op
+                fs.seek(fd, off)
+                fs.punch(fd, n)
+                oracle.punch(off, n)
+            elif kind == "yankpaste":
+                _, src, n, dst = op
+                size = fs.stat("/f")["size"]
+                if src >= size:
+                    continue
+                n = min(n, size - src)
+                fs.seek(fd, src)
+                exts = fs.yank(fd, n)
+                fs.seek(fd, dst)
+                fs.paste(fd, exts)
+                oracle.write(dst, bytes(oracle.buf[src:src + n]))
+            elif kind == "compact":
+                ino = fs.stat("/f")["inode"]
+                size = fs.stat("/f")["size"]
+                for r in range((size // REGION) + 1):
+                    gc.compact_region(ino, r)
+            elif kind == "gc":
+                gc.storage_gc_pass()
+            # invariant: content equals the oracle after every op
+            got = fs.pread(fd, MAXLEN * 2, 0)
+            assert got == bytes(oracle.buf), f"diverged after {kind}"
+        fs.close(fd)
+    finally:
+        cluster.close()

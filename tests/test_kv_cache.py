@@ -1,0 +1,134 @@
+"""Paged KV cache: page algebra, prefix sharing, copy-on-write, GC."""
+import numpy as np
+import pytest
+
+from repro.serving import CacheConfig, OutOfPages, PagedKVCache
+
+
+def cfg(**kw):
+    base = dict(num_layers=2, num_kv_heads=2, head_dim=4, page_tokens=4,
+                num_pages=32, max_seqs=8)
+    base.update(kw)
+    return CacheConfig(**base)
+
+
+def rand_kv(t, c, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (c.num_layers, t, c.num_kv_heads, c.head_dim)
+    return (rng.standard_normal(shape).astype(np.float32),
+            rng.standard_normal(shape).astype(np.float32))
+
+
+def test_append_gather_roundtrip():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(10, c)
+    cache.append(0, k, v)
+    for layer in range(c.num_layers):
+        gk, gv = cache.gather(0, layer)
+        np.testing.assert_allclose(gk, k[layer])
+        np.testing.assert_allclose(gv, v[layer])
+
+
+def test_incremental_decode_appends():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    ks, vs = [], []
+    for t in range(9):                    # token-by-token decode
+        k, v = rand_kv(1, c, seed=t)
+        cache.append(0, k, v)
+        ks.append(k); vs.append(v)
+    gk, _ = cache.gather(0, 0)
+    np.testing.assert_allclose(gk, np.concatenate(ks, axis=1)[0])
+
+
+def test_page_accounting():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(9, c)                  # 9 tokens → 3 pages of 4
+    cache.append(0, k, v)
+    assert len(cache.page_table[0]) == 3
+    assert cache.free_pages() == c.num_pages - 3
+    cache.release(0)
+    assert cache.free_pages() == c.num_pages
+
+
+def test_fork_shares_pages_zero_copy():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(8, c)                  # exactly 2 full pages
+    cache.append(0, k, v)
+    allocated_before = cache.stats["pages_allocated"]
+    cache.fork(0, 1)
+    assert cache.stats["pages_allocated"] == allocated_before, \
+        "fork must not allocate pages"
+    assert cache.page_table[0] == cache.page_table[1]
+    gk0, _ = cache.gather(0, 0)
+    gk1, _ = cache.gather(1, 0)
+    np.testing.assert_allclose(gk0, gk1)
+
+
+def test_fork_copy_on_write_open_page():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(6, c)                  # page 0 full, page 1 half-open
+    cache.append(0, k, v)
+    cache.fork(0, 1)
+    # both sequences now append different tokens
+    k0, v0 = rand_kv(1, c, seed=100)
+    k1, v1 = rand_kv(1, c, seed=200)
+    cache.append(0, k0, v0)
+    cache.append(1, k1, v1)
+    assert cache.page_table[0][0] == cache.page_table[1][0], \
+        "full page stays shared"
+    assert cache.page_table[0][1] != cache.page_table[1][1], \
+        "open page must diverge (copy-on-write)"
+    gk0, _ = cache.gather(0, 0)
+    gk1, _ = cache.gather(1, 0)
+    np.testing.assert_allclose(gk0[:6], gk1[:6])
+    assert not np.allclose(gk0[6], gk1[6])
+
+
+def test_release_with_sharing_refcounts():
+    c = cfg()
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(8, c)
+    cache.append(0, k, v)
+    cache.fork(0, 1)
+    cache.release(0)
+    gk, _ = cache.gather(1, 0)            # child still intact
+    np.testing.assert_allclose(gk, k[0])
+    cache.release(1)
+    assert cache.free_pages() == c.num_pages
+
+
+def test_pool_exhaustion():
+    c = cfg(num_pages=2)
+    cache = PagedKVCache(c)
+    cache.create(0)
+    k, v = rand_kv(8, c)
+    cache.append(0, k, v)                 # uses both pages
+    cache.create(1)
+    k1, v1 = rand_kv(1, c)
+    with pytest.raises(OutOfPages):
+        cache.append(1, k1, v1)
+
+
+def test_table_array_format():
+    c = cfg()
+    cache = PagedKVCache(c)
+    for s, t in ((0, 3), (1, 9)):
+        cache.create(s)
+        k, v = rand_kv(t, c, seed=s)
+        cache.append(s, k, v)
+    tbl, lens = cache.table_array([0, 1])
+    assert tbl.shape == (2, 3)
+    assert lens.tolist() == [3, 9]
+    assert (tbl[0, 1:] == -1).all()
+    assert (tbl[1] >= 0).all()

@@ -1,0 +1,175 @@
+"""WarpKV: optimistic multi-key transactions + commutative ops."""
+import threading
+
+import pytest
+
+from repro.core.errors import KVConflict, PreconditionFailed
+from repro.core.metadata import ListAppend, Transaction, WarpKV
+
+
+def test_basic_put_get():
+    kv = WarpKV()
+    kv.put("s", "k", 1)
+    assert kv.get("s", "k") == 1
+    assert kv.get("s", "missing", 42) == 42
+
+
+def test_multi_key_commit_is_atomic():
+    kv = WarpKV()
+    txn = kv.begin()
+    txn.put("a", 1, "x")
+    txn.put("b", 2, "y")
+    assert kv.get("a", 1) is None, "writes must not leak before commit"
+    txn.commit()
+    assert kv.get("a", 1) == "x" and kv.get("b", 2) == "y"
+
+
+def test_read_version_conflict_aborts():
+    kv = WarpKV()
+    kv.put("s", "k", 1)
+    t1 = kv.begin()
+    assert t1.get("s", "k") == 1
+    kv.put("s", "k", 2)            # concurrent commit
+    t1.put("s", "other", 99)
+    with pytest.raises(KVConflict):
+        t1.commit()
+    assert kv.get("s", "other") is None
+
+
+def test_blind_writes_do_not_conflict():
+    kv = WarpKV()
+    kv.put("s", "k", 1)
+    t1 = kv.begin()
+    t1.put("s", "k", 10)           # no read → no dependency
+    kv.put("s", "k", 2)
+    t1.commit()                    # must succeed
+    assert kv.get("s", "k") == 10
+
+
+def test_delete_then_recreate_is_not_aba():
+    kv = WarpKV()
+    kv.put("s", "k", "v1")
+    t1 = kv.begin()
+    t1.get("s", "k")
+    # delete and recreate behind t1's back
+    t2 = kv.begin(); t2.delete("s", "k"); t2.commit()
+    t3 = kv.begin(); t3.put("s", "k", "v2"); t3.commit()
+    t1.put("s", "x", 1)
+    with pytest.raises(KVConflict):
+        t1.commit()
+
+
+def test_commutative_appends_never_conflict():
+    kv = WarpKV()
+    t1 = kv.begin()
+    t2 = kv.begin()
+    t1.commute("s", "lst", ListAppend(["a"]))
+    t2.commute("s", "lst", ListAppend(["b"]))
+    t1.commit()
+    t2.commit()                    # both commit: appends commute
+    assert sorted(kv.get("s", "lst")) == ["a", "b"]
+
+
+def test_commute_result_deferred():
+    kv = WarpKV()
+    txn = kv.begin()
+    d = txn.commute("s", "lst", ListAppend(["a", "b"]))
+    with pytest.raises(RuntimeError):
+        _ = d.value
+    txn.commit()
+    assert d.value == 2
+
+
+def test_get_view_sees_own_commutes():
+    kv = WarpKV()
+    txn = kv.begin()
+    txn.commute("s", "lst", ListAppend(["a"]))
+    txn.commute("s", "lst", ListAppend(["b"]))
+    assert txn.get_view("s", "lst") == ["a", "b"]
+    assert kv.get("s", "lst") is None      # still uncommitted
+
+
+def test_noop_commute_does_not_invalidate_readers():
+    kv = WarpKV()
+    kv.put("s", "k", 5)
+
+    class MaxMerge:
+        def __init__(self, v): self.v = v
+        def precondition(self, value): return True
+        def apply(self, value): return max(value, self.v), None
+
+    reader = kv.begin()
+    assert reader.get("s", "k") == 5
+    t = kv.begin()
+    t.commute("s", "k", MaxMerge(3))       # 5 stays 5 → no version bump
+    t.commit()
+    reader.put("s", "out", 1)
+    reader.commit()                         # must NOT conflict
+    assert kv.get("s", "out") == 1
+
+
+def test_precondition_failure_aborts():
+    kv = WarpKV()
+
+    class Bounded(ListAppend):
+        def precondition(self, value):
+            return len(value or []) + len(self.items) <= 2
+
+    t = kv.begin()
+    t.commute("s", "lst", Bounded(["a", "b", "c"]))
+    with pytest.raises(PreconditionFailed):
+        t.commit()
+
+
+def test_injected_abort():
+    kv = WarpKV()
+    kv.inject_aborts(1)
+    t = kv.begin()
+    t.put("s", "k", 1)
+    with pytest.raises(KVConflict):
+        t.commit()
+    t2 = kv.begin(); t2.put("s", "k", 1); t2.commit()
+    assert kv.get("s", "k") == 1
+
+
+def test_concurrent_counter_with_retries():
+    """Classic OCC stress: N threads × M increments via read-modify-write."""
+    kv = WarpKV()
+    kv.put("s", "n", 0)
+    N, M = 8, 25
+
+    def worker():
+        for _ in range(M):
+            while True:
+                txn = kv.begin()
+                v = txn.get("s", "n")
+                txn.put("s", "n", v + 1)
+                try:
+                    txn.commit()
+                    break
+                except KVConflict:
+                    continue
+
+    threads = [threading.Thread(target=worker) for _ in range(N)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    assert kv.get("s", "n") == N * M
+
+
+def test_concurrent_commutative_appends_threaded():
+    kv = WarpKV()
+    N, M = 8, 50
+
+    def worker(i):
+        for j in range(M):
+            txn = kv.begin()
+            txn.commute("s", "lst", ListAppend([(i, j)]))
+            txn.commit()           # never needs a retry loop
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    lst = kv.get("s", "lst")
+    assert len(lst) == N * M
+    assert len(set(lst)) == N * M
+    assert kv.stats.aborts == 0, "commutative appends must never abort"

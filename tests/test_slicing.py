@@ -1,0 +1,174 @@
+"""Unit + property tests for the slicing algebra (paper §2.1, Figure 2)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.slicing import (Extent, SlicePointer, compact,
+                                decode_extents, encode_extents,
+                                merge_adjacent, overlay, slice_range,
+                                split_by_regions, visible_length)
+
+
+def ptr(server=0, f="b0", off=0, ln=1):
+    return SlicePointer(server, f, off, ln)
+
+
+def ext(offset, length, disk_off=None, server=0, f="b0"):
+    if disk_off is None:
+        disk_off = offset
+    return Extent(offset, length, (ptr(server, f, disk_off, length),))
+
+
+# ---------------------------------------------------------------- figure 2
+def test_figure2_compaction():
+    """The exact example from the paper: A@[0,2] B@[2,4] C@[1,3] D@[2,3]
+    E@[2,3] compacts to A@[0,1] C@[1,2] E@[2,3] B@[3,4]."""
+    MB = 1 << 20
+    A = Extent(0 * MB, 2 * MB, (ptr(0, "fa", 0, 2 * MB),))
+    B = Extent(2 * MB, 2 * MB, (ptr(1, "fb", 0, 2 * MB),))
+    C = Extent(1 * MB, 2 * MB, (ptr(2, "fc", 0, 2 * MB),))
+    D = Extent(2 * MB, 1 * MB, (ptr(3, "fd", 0, 1 * MB),))
+    E = Extent(2 * MB, 1 * MB, (ptr(4, "fe", 0, 1 * MB),))
+    out = compact([A, B, C, D, E])
+    spans = [(e.offset // MB, e.end // MB, e.ptrs[0].server_id) for e in out]
+    assert spans == [(0, 1, 0), (1, 2, 2), (2, 3, 4), (3, 4, 1)]
+    # the C fragment must be sub-ranged: C covers [1,3) but only [1,2) shows
+    c_frag = out[1]
+    assert c_frag.ptrs[0].offset == 0 and c_frag.ptrs[0].length == MB
+
+
+def test_subptr_arithmetic():
+    p = ptr(0, "f", 100, 50)
+    s = p.sub(10, 20)
+    assert (s.offset, s.length) == (110, 20)
+    with pytest.raises(ValueError):
+        p.sub(40, 20)
+
+
+def test_merge_adjacent_on_disk():
+    a = ext(0, 10, disk_off=0)
+    b = ext(10, 5, disk_off=10)
+    merged = merge_adjacent([a, b])
+    assert len(merged) == 1
+    assert merged[0].length == 15
+    assert merged[0].ptrs[0].length == 15
+
+
+def test_no_merge_when_disk_discontiguous():
+    a = ext(0, 10, disk_off=0)
+    b = ext(10, 5, disk_off=100)
+    assert len(merge_adjacent([a, b])) == 2
+
+
+def test_zero_extent_obscures():
+    a = ext(0, 10)
+    z = Extent(2, 5, ())           # punch
+    out = compact([a, z])
+    assert [(e.offset, e.length, e.is_zero) for e in out] == [
+        (0, 2, False), (2, 5, True), (7, 3, False)]
+
+
+def test_slice_range_with_holes():
+    a = ext(10, 10)
+    tiles = slice_range([a], 5, 20)
+    assert [(t.offset, t.length, t.is_zero) for t in tiles] == [
+        (5, 5, True), (10, 10, False), (20, 5, True)]
+
+
+def test_split_by_regions():
+    pieces = list(split_by_regions(100, 250, 128))
+    assert pieces == [(0, 100, 0, 28), (1, 0, 28, 128), (2, 0, 156, 94)]
+    assert sum(p[3] for p in pieces) == 250
+
+
+def test_encode_decode_roundtrip():
+    exts = [ext(0, 10), Extent(10, 5, ()), ext(15, 3, disk_off=99)]
+    assert decode_extents(encode_extents(exts)) == exts
+
+
+# ------------------------------------------------------------ property tests
+# Oracle: materialize the overlay into a byte array where each extent writes
+# its (unique) id; compaction/overlay must reproduce the same coverage map.
+
+@st.composite
+def extent_lists(draw, max_len=200):
+    n = draw(st.integers(1, 12))
+    out = []
+    for i in range(n):
+        off = draw(st.integers(0, max_len - 1))
+        ln = draw(st.integers(1, max_len - off))
+        zero = draw(st.booleans())
+        out.append(Extent(off, ln, ()) if zero
+                   else Extent(off, ln, (ptr(0, f"f{i}", 0, ln),)))
+    return out
+
+
+def coverage_map(entries, max_len=200):
+    """id of the visible extent at each byte (-1 hole, -2 zero extent)."""
+    cover = [-1] * max_len
+    for idx, e in enumerate(entries):
+        for b in range(e.offset, min(e.end, max_len)):
+            cover[b] = -2 if e.is_zero else idx
+    return cover
+
+
+@settings(max_examples=200, deadline=None)
+@given(extent_lists())
+def test_overlay_matches_byte_oracle(entries):
+    cover = coverage_map(entries)
+    resolved = overlay(entries)
+    got = [-1] * 200
+    for e in resolved:
+        src = None
+        if not e.is_zero:
+            # identify the source extent by backing-file name
+            src = int(e.ptrs[0].backing_file[1:])
+        for b in range(e.offset, min(e.end, 200)):
+            assert got[b] == -1, "overlay produced overlapping extents"
+            got[b] = -2 if e.is_zero else src
+    assert got == cover
+
+
+@settings(max_examples=200, deadline=None)
+@given(extent_lists())
+def test_compact_idempotent_and_equivalent(entries):
+    c1 = compact(entries)
+    c2 = compact(c1)
+    assert c1 == c2, "compact must be idempotent"
+    assert coverage_visible(c1) == coverage_visible(overlay(entries))
+
+
+def coverage_visible(extents):
+    out = {}
+    for e in extents:
+        for b in range(e.offset, e.end):
+            # (is_zero, disk position) identifies the visible byte source
+            out[b] = ((True, None) if e.is_zero else
+                      (False, (e.ptrs[0].backing_file,
+                               e.ptrs[0].offset + (b - e.offset))))
+    return out
+
+
+@settings(max_examples=200, deadline=None)
+@given(extent_lists(), st.integers(0, 199), st.integers(1, 200))
+def test_slice_range_tiles_exactly(entries, start, length):
+    tiles = slice_range(entries, start, length)
+    assert sum(t.length for t in tiles) == length
+    cursor = start
+    for t in tiles:
+        assert t.offset == cursor
+        cursor += t.length
+    ref = coverage_map(entries)
+    for t in tiles:
+        for b in range(t.offset, t.end):
+            if b < 200:
+                if t.is_zero:
+                    assert ref[b] in (-1, -2)
+                else:
+                    assert ref[b] >= 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(extent_lists())
+def test_visible_length_is_max_end(entries):
+    assert visible_length(entries) == max(e.end for e in entries)

@@ -1,0 +1,172 @@
+"""The file slicing API: yank/paste/punch/append/concat/copy (Table 1).
+
+The defining property throughout: slicing ops move ZERO data bytes — we
+assert on the storage servers' I/O counters, the paper's Table 2 metric.
+"""
+import pytest
+
+from repro.core import Cluster, SEEK_SET
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=1,
+                region_size=4096)
+    yield c
+    c.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return cluster.client()
+
+
+def server_write_bytes(cluster):
+    return sum(s.stats.bytes_written for s in cluster.servers.values())
+
+
+def server_read_bytes(cluster):
+    return sum(s.stats.bytes_read for s in cluster.servers.values())
+
+
+def make_file(fs, path, payload):
+    fd = fs.open(path, "w")
+    fs.write(fd, payload)
+    fs.close(fd)
+    return payload
+
+
+def read_file(fs, path):
+    fd = fs.open(path, "r")
+    data = fs.read(fd)
+    fs.close(fd)
+    return data
+
+
+def test_yank_returns_pointers_without_reading(cluster, fs):
+    payload = make_file(fs, "/src", b"0123456789" * 100)
+    fd = fs.open("/src", "r")
+    reads_before = server_read_bytes(cluster)
+    extents = fs.yank(fd, 500)
+    assert server_read_bytes(cluster) == reads_before, \
+        "yank without data must incur no storage reads"
+    assert sum(e.length for e in extents) == 500
+    assert fs.tell(fd) == 500
+    fs.close(fd)
+
+
+def test_yank_with_data(fs):
+    payload = make_file(fs, "/src", b"abcdef" * 100)
+    fd = fs.open("/src", "r")
+    extents, data = fs.yank(fd, 300, want_data=True)
+    assert data == payload[:300]
+    fs.close(fd)
+
+
+def test_paste_moves_no_data(cluster, fs):
+    payload = make_file(fs, "/src", bytes(range(256)) * 8)  # 2 KB
+    fd = fs.open("/src", "r")
+    extents = fs.yank(fd, 2048)
+    fs.close(fd)
+
+    fd = fs.open("/dst", "w")      # creation writes a dirent record; the
+    writes_before = server_write_bytes(cluster)   # paste itself moves nothing
+    fs.paste(fd, extents)
+    fs.close(fd)
+    assert server_write_bytes(cluster) == writes_before, \
+        "paste is metadata-only"
+    assert read_file(fs, "/dst") == payload
+
+
+def test_paste_rearranges_records(cluster, fs):
+    """The sort primitive: reorder records via yank+paste with zero writes."""
+    rec = 128
+    records = [bytes([i]) * rec for i in (3, 1, 0, 2)]
+    make_file(fs, "/in", b"".join(records))
+    fd = fs.open("/in", "r")
+    exts = []
+    for i in range(4):
+        fs.seek(fd, i * rec)
+        exts.append(fs.yank(fd, rec))
+    fs.close(fd)
+    order = [2, 1, 3, 0]               # sorted by key byte
+    fd = fs.open("/out", "w")
+    writes_before = server_write_bytes(cluster)
+    for i in order:
+        fs.paste(fd, exts[i])
+    fs.close(fd)
+    assert server_write_bytes(cluster) == writes_before
+    assert read_file(fs, "/out") == b"".join(records[i] for i in order)
+
+
+def test_concat_is_metadata_only(cluster, fs):
+    a = make_file(fs, "/a", b"A" * 3000)
+    b = make_file(fs, "/b", b"B" * 5000)
+    c = make_file(fs, "/c", b"C" * 100)
+    before_w = server_write_bytes(cluster)
+    before_r = server_read_bytes(cluster)
+    fs.concat(["/a", "/b", "/c"], "/all")
+    # creating /all appends one dirent record (metadata bookkeeping); the
+    # 8.1 KB of file content itself moves zero bytes
+    assert server_write_bytes(cluster) - before_w < 100
+    assert server_read_bytes(cluster) == before_r
+    assert read_file(fs, "/all") == a + b + c
+
+
+def test_copy_then_diverge(fs):
+    payload = make_file(fs, "/orig", b"original-content" * 10)
+    fs.copy("/orig", "/clone")
+    assert read_file(fs, "/clone") == payload
+    # copies share slices but have independent metadata: mutate the clone
+    fd = fs.open("/clone", "rw")
+    fs.pwrite(fd, b"XXXX", 0)
+    fs.close(fd)
+    assert read_file(fs, "/orig") == payload
+    assert read_file(fs, "/clone")[:4] == b"XXXX"
+
+
+def test_punch_zeroes_and_frees(cluster, fs):
+    payload = make_file(fs, "/p", b"Z" * 1000)
+    fd = fs.open("/p", "rw")
+    fs.seek(fd, 100)
+    writes_before = server_write_bytes(cluster)
+    fs.punch(fd, 200)
+    assert server_write_bytes(cluster) == writes_before
+    assert fs.tell(fd) == 300
+    fs.close(fd)
+    data = read_file(fs, "/p")
+    assert data[:100] == b"Z" * 100
+    assert data[100:300] == b"\x00" * 200
+    assert data[300:] == b"Z" * 700
+
+
+def test_append_slices(fs):
+    make_file(fs, "/x", b"12345")
+    make_file(fs, "/y", b"67890")
+    fd = fs.open("/y", "r")
+    exts = fs.yank(fd, 5)
+    fs.close(fd)
+    fd = fs.open("/x", "rw")
+    fs.append_slices(fd, exts)
+    fs.close(fd)
+    assert read_file(fs, "/x") == b"1234567890"
+
+
+def test_yank_paste_across_region_boundaries(cluster, fs):
+    """region_size=4096; a 10 KB file spans 3 regions."""
+    payload = make_file(fs, "/big", bytes(range(256)) * 40)  # 10240
+    fd = fs.open("/big", "r")
+    fs.seek(fd, 3000)
+    exts = fs.yank(fd, 5000)           # crosses two boundaries
+    fs.close(fd)
+    fd = fs.open("/piece", "w")
+    fs.paste(fd, exts)
+    fs.close(fd)
+    assert read_file(fs, "/piece") == payload[3000:8000]
+
+
+def test_concat_empty_and_missing(fs):
+    make_file(fs, "/only", b"data")
+    from repro.core import NotFound
+    with pytest.raises(NotFound):
+        fs.concat(["/only", "/missing"], "/out2")
