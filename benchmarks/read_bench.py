@@ -1,6 +1,18 @@
-"""Sequential and random read throughput (Figs 11-12), WTF vs HDFS-like."""
+"""Sequential and random read throughput (Figs 11-12), WTF vs HDFS-like,
+plus the vectored-read mode: the same byte ranges issued through ``readv``
+in batches, exercising the batched slice-fetch scheduler.
+
+The scalar/vectored comparison reports the scheduler's effectiveness
+counters from ``ClientStats``: ``fetch_batches`` (storage rounds actually
+issued) and ``slices_coalesced`` (pointer fetches folded into an adjacent
+round).  A vectored run must report fewer fetch batches than the scalar run
+over identical ranges — that is the acceptance gauge of the I/O scheduler.
+
+Usage: ``python -m benchmarks.read_bench [smoke|quick|full]``.
+"""
 from __future__ import annotations
 
+import sys
 import threading
 import time
 from typing import List
@@ -11,6 +23,16 @@ from .common import (Scale, fmt_bytes, hdfs_cluster, lat_summary,
                      save_result, wtf_cluster, wtf_io)
 
 READ_SIZES = [256 << 10, 1 << 20, 4 << 20]
+VEC_BATCH = 16                       # ranges per readv call
+
+
+def _offsets(mode: str, i: int, file_bytes: int, read_size: int) -> List[int]:
+    rng = np.random.RandomState(i)
+    n = file_bytes // read_size
+    if mode == "seq":
+        return [j * read_size for j in range(n)]
+    return [int(rng.randint(0, max(1, file_bytes - read_size)))
+            for _ in range(n)]
 
 
 def _drive(n_clients, file_bytes, read_size, mode, mk_reader):
@@ -18,11 +40,7 @@ def _drive(n_clients, file_bytes, read_size, mode, mk_reader):
 
     def work(i):
         read = mk_reader(i)
-        rng = np.random.RandomState(i)
-        n = file_bytes // read_size
-        for j in range(n):
-            off = (j * read_size if mode == "seq" else
-                   int(rng.randint(0, max(1, file_bytes - read_size))))
+        for off in _offsets(mode, i, file_bytes, read_size):
             t0 = time.perf_counter()
             read(off, read_size)
             lats[i].append(time.perf_counter() - t0)
@@ -37,12 +55,46 @@ def _drive(n_clients, file_bytes, read_size, mode, mk_reader):
     return time.perf_counter() - t0, [x for l in lats for x in l]
 
 
+def _drive_vectored(n_clients, file_bytes, read_size, mode, mk_readv):
+    """Same ranges as ``_drive``, issued as readv batches of VEC_BATCH."""
+    lats: List[List[float]] = [[] for _ in range(n_clients)]
+
+    def work(i):
+        readv = mk_readv(i)
+        offs = _offsets(mode, i, file_bytes, read_size)
+        for j in range(0, len(offs), VEC_BATCH):
+            ranges = [(o, read_size) for o in offs[j:j + VEC_BATCH]]
+            t0 = time.perf_counter()
+            readv(ranges)
+            # amortized per-read latency, so wtf/wtf_vec percentiles in
+            # the saved results compare like for like
+            lats[i].append((time.perf_counter() - t0) / len(ranges))
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, [x for l in lats for x in l]
+
+
+def _sched_stats(clients) -> dict:
+    return {
+        "fetch_batches": sum(c.stats.fetch_batches for c in clients),
+        "slices_coalesced": sum(c.stats.slices_coalesced for c in clients),
+    }
+
+
 def run(scale: Scale) -> dict:
     out = {"modes": {}, "scale": scale.name}
     file_bytes = scale.total_bytes // scale.n_clients
     for mode in ("seq", "random"):
         rows = []
         for rs in READ_SIZES:
+            if rs > file_bytes:
+                continue
             row = {"read_size": rs}
             with wtf_cluster(scale) as cluster:
                 clients = [cluster.client()
@@ -56,15 +108,43 @@ def run(scale: Scale) -> dict:
                 fds = [c.open(f"/f{i}", "r")
                        for i, c in enumerate(clients)]
 
+                # ---- scalar preads (one storage round per extent run)
                 def wtf_reader(i):
                     return lambda off, n: clients[i].pread(fds[i], n, off)
 
+                # identical logical volume for both rows: physical
+                # bytes_read diverges under coalescing (overlaps dedup'd,
+                # gap bytes fetched-and-discarded), so throughput must be
+                # logical-bytes / wall-clock to stay comparable
+                logical = (file_bytes // rs) * rs * scale.n_clients
+
+                base = _sched_stats(clients)
                 secs, lats = _drive(scale.n_clients, file_bytes, rs, mode,
                                     wtf_reader)
                 io = wtf_io(cluster)
+                scalar_sched = {
+                    k: v - base[k] for k, v in _sched_stats(clients).items()}
                 row["wtf"] = {
-                    "throughput_mbs": io["bytes_read"] / secs / 1e6,
-                    **lat_summary(lats)}
+                    "throughput_mbs": logical / secs / 1e6,
+                    "physical_bytes_read": io["bytes_read"],
+                    **scalar_sched, **lat_summary(lats)}
+
+                # ---- vectored readv over the same ranges
+                cluster.reset_io_stats()
+                base = _sched_stats(clients)
+
+                def wtf_readv(i):
+                    return lambda ranges: clients[i].readv(fds[i], ranges)
+
+                secs, lats = _drive_vectored(scale.n_clients, file_bytes,
+                                             rs, mode, wtf_readv)
+                io = wtf_io(cluster)
+                vec_sched = {
+                    k: v - base[k] for k, v in _sched_stats(clients).items()}
+                row["wtf_vec"] = {
+                    "throughput_mbs": logical / secs / 1e6,
+                    "physical_bytes_read": io["bytes_read"],
+                    **vec_sched, **lat_summary(lats)}
             with hdfs_cluster(scale) as cluster:
                 fs = cluster.client()
                 for i in range(scale.n_clients):
@@ -89,16 +169,25 @@ def run(scale: Scale) -> dict:
             row["wtf_vs_hdfs"] = (row["wtf"]["throughput_mbs"]
                                   / max(row["hdfs"]["throughput_mbs"],
                                         1e-9))
+            row["vec_vs_scalar"] = (row["wtf_vec"]["throughput_mbs"]
+                                    / max(row["wtf"]["throughput_mbs"],
+                                          1e-9))
             rows.append(row)
             print(f"[read/{mode}] {fmt_bytes(rs)}: WTF "
                   f"{row['wtf']['throughput_mbs']:.0f} MB/s | HDFS "
                   f"{row['hdfs']['throughput_mbs']:.0f} MB/s | ratio "
                   f"{row['wtf_vs_hdfs']:.2f} "
                   f"(paper: ≥0.8 seq, ≥1 random-small)")
+            print(f"[read/{mode}] {fmt_bytes(rs)}: vectored "
+                  f"{row['wtf_vec']['throughput_mbs']:.0f} MB/s "
+                  f"({row['vec_vs_scalar']:.2f}x scalar) | fetch batches "
+                  f"{row['wtf_vec']['fetch_batches']} vs "
+                  f"{row['wtf']['fetch_batches']} scalar | coalesced "
+                  f"{row['wtf_vec']['slices_coalesced']} slice fetches")
         out["modes"][mode] = rows
     save_result("read_bench", out)
     return out
 
 
 if __name__ == "__main__":
-    run(Scale.of("quick"))
+    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))

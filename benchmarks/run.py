@@ -35,7 +35,8 @@ BENCHES = {
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="quick", choices=["quick", "full"])
+    ap.add_argument("--scale", default="quick",
+                    choices=["smoke", "quick", "full"])
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                     + ",".join(BENCHES))

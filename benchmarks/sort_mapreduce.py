@@ -43,6 +43,9 @@ def _bucket_of(key: bytes, n_buckets: int) -> int:
                * n_buckets >> 32)
 
 
+RECORD_BATCH = 64        # records per vectored read / yank batch
+
+
 # ------------------------------------------------------------------- WTF
 def wtf_sort(scale: Scale, n_buckets: int = 8) -> dict:
     n_rec = scale.total_bytes // scale.record_bytes
@@ -51,38 +54,44 @@ def wtf_sort(scale: Scale, n_buckets: int = 8) -> dict:
     with wtf_cluster(scale) as cluster:
         fs = cluster.client()
         w = RecordWriter(fs, "/input", scale.record_bytes)
-        for r in records:
-            w.append(r)
+        for lo in range(0, n_rec, RECORD_BATCH):
+            w.append_many(records[lo:lo + RECORD_BATCH])
         w.close()
         cluster.reset_io_stats()              # accounting starts post-load
 
-        # ---- stage 1: bucketing — read keys, yank record slices into
-        # bucket files; zero data writes
+        # ---- stage 1: bucketing — read records (vectored, batches of
+        # RECORD_BATCH), yank record slices into bucket files with one
+        # yankv + pastev per bucket; zero data writes
         with timer.lap("bucketing"):
             rdr = RecordFile(fs, "/input", scale.record_bytes)
-            keys = [(_key(rdr.read_record(i)), i) for i in range(n_rec)]
+            keys = []
+            for lo in range(0, n_rec, RECORD_BATCH):
+                idxs = list(range(lo, min(lo + RECORD_BATCH, n_rec)))
+                for i, rec in zip(idxs, rdr.read_records_batch(idxs)):
+                    keys.append((_key(rec), i))
             buckets: List[List[int]] = [[] for _ in range(n_buckets)]
             for k, i in keys:
                 buckets[_bucket_of(k, n_buckets)].append(i)
             for b, idxs in enumerate(buckets):
-                fd = fs.open(f"/bucket_{b:03d}", "w")
-                for i in idxs:
-                    fs.paste(fd, rdr.yank_records(i, 1))
-                fs.close(fd)
+                yanked = rdr.yank_record_runs([(i, 1) for i in idxs])
+                with fs.open_file(f"/bucket_{b:03d}", "w") as f:
+                    f.pastev(yanked)
 
-        # ---- stage 2: sorting — per bucket, read keys, paste a permuted
-        # slice order; zero data writes
+        # ---- stage 2: sorting — per bucket, read records (vectored),
+        # paste the permuted slice order in one op; zero data writes
         with timer.lap("sorting"):
             for b in range(n_buckets):
                 br = RecordFile(fs, f"/bucket_{b:03d}",
                                 scale.record_bytes)
-                n_b = br.count
-                bkeys = [( _key(br.read_record(i)), i) for i in range(n_b)]
+                bkeys = []
+                for lo in range(0, br.count, RECORD_BATCH):
+                    idxs = list(range(lo, min(lo + RECORD_BATCH, br.count)))
+                    for i, rec in zip(idxs, br.read_records_batch(idxs)):
+                        bkeys.append((_key(rec), i))
                 bkeys.sort()
-                fd = fs.open(f"/sorted_{b:03d}", "w")
-                for _, i in bkeys:
-                    fs.paste(fd, br.yank_records(i, 1))
-                fs.close(fd)
+                yanked = br.yank_record_runs([(i, 1) for _, i in bkeys])
+                with fs.open_file(f"/sorted_{b:03d}", "w") as f:
+                    f.pastev(yanked)
 
         # ---- stage 3: merging — pure metadata concat
         with timer.lap("merging"):
@@ -113,15 +122,23 @@ def wtf_sort_keyonly(scale: Scale, n_buckets: int = 8) -> dict:
     with wtf_cluster(scale) as cluster:
         fs = cluster.client()
         w = RecordWriter(fs, "/input", rb)
-        for r in records:
-            w.append(r)
+        for lo in range(0, n_rec, RECORD_BATCH):
+            w.append_many(records[lo:lo + RECORD_BATCH])
         w.close()
         cluster.reset_io_stats()
 
         with timer.lap("bucketing"):
             rdr = RecordFile(fs, "/input", rb)
-            fd = fs.open("/input", "r")
-            keys = [(fs.pread(fd, 10, i * rb), i) for i in range(n_rec)]
+            # Vectored key reads: RECORD_BATCH 10-byte ranges per readv.
+            # The scheduler does NOT coalesce across the ~64 KiB record
+            # gaps (gap > max_gap), so data reads stay ~n·10 bytes — but
+            # each readv is one transaction instead of RECORD_BATCH.
+            keys = []
+            for lo in range(0, n_rec, RECORD_BATCH):
+                idxs = range(lo, min(lo + RECORD_BATCH, n_rec))
+                ranges = [(i * rb, 10) for i in idxs]
+                for i, k in zip(idxs, rdr.handle.readv(ranges)):
+                    keys.append((k, i))
             buckets: List[List[tuple]] = [[] for _ in range(n_buckets)]
             for k, i in keys:
                 buckets[_bucket_of(k, n_buckets)].append((k, i))
@@ -133,11 +150,10 @@ def wtf_sort_keyonly(scale: Scale, n_buckets: int = 8) -> dict:
                 buckets[b].sort()
 
         with timer.lap("merging"):
-            out = fs.open("/output", "w")
-            for b in range(n_buckets):
-                for _, i in buckets[b]:
-                    fs.paste(out, rdr.yank_records(i, 1))
-            fs.close(out)
+            order = [i for b in range(n_buckets) for _, i in buckets[b]]
+            yanked = rdr.yank_record_runs([(i, 1) for i in order])
+            with fs.open_file("/output", "w") as out:
+                out.pastev(yanked)
 
         io = wtf_io(cluster)
         outf = RecordFile(fs, "/output", rb)

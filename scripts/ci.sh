@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the full pytest suite plus a smoke run of the read
+# benchmark (exercises the vectored client + batched slice-fetch scheduler
+# end to end and prints the fetch-batch/coalescing counters).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: read benchmark (vectored vs scalar) =="
+timeout "${READ_BENCH_TIMEOUT:-300}" python -m benchmarks.read_bench smoke
+
+echo "CI OK"

@@ -98,9 +98,8 @@ class CheckpointManager:
                     continue               # not this host's shard
                 lo, hi = self._shard_range(meta["nbytes"], shards, s)
                 path = self._leaf_path(step, name, s, shards)
-                fd = self.client.open(path, "w")
-                self.client.write(fd, data[lo:hi])
-                self.client.close(fd)
+                with self.client.open_file(path, "w") as f:
+                    f.write(data[lo:hi])
                 stats["bytes_written"] += hi - lo
 
         if host_id == 0:
@@ -114,9 +113,8 @@ class CheckpointManager:
         """The atomic rendezvous: manifest + ``latest`` flip in one txn."""
         c = self.client
         with c.transaction():
-            fd = c.open(f"{self._step_dir(step)}/manifest", "w")
-            c.write(fd, encode_manifest(entries, {"step": step, **extra}))
-            c.close(fd)
+            with c.open_file(f"{self._step_dir(step)}/manifest", "w") as f:
+                f.write(encode_manifest(entries, {"step": step, **extra}))
             latest = f"{self.root}/latest"
             if c.exists(latest):
                 c.unlink(latest)
@@ -139,9 +137,8 @@ class CheckpointManager:
         c = self.client
         path = (f"{self.root}/latest" if step is None
                 else f"{self._step_dir(step)}/manifest")
-        fd = c.open(path, "r")
-        raw = c.read(fd)
-        c.close(fd)
+        with c.open_file(path, "r") as f:
+            raw = f.read()
         return decode_manifest(raw)
 
     def latest_step(self) -> Optional[int]:
@@ -159,9 +156,8 @@ class CheckpointManager:
             parts = []
             for s in range(meta["shards"]):
                 path = self._leaf_path(step, name, s, meta["shards"])
-                fd = self.client.open(path, "r")
-                parts.append(self.client.read(fd))
-                self.client.close(fd)
+                with self.client.open_file(path, "r") as f:
+                    parts.append(f.read())
             flat[name] = bytes_to_leaf(b"".join(parts), meta)
         return unflatten_tree(flat, template)
 
@@ -181,19 +177,20 @@ class CheckpointManager:
             old_n = meta["shards"]
             n = new_shards if meta["nbytes"] >= 1 << 16 else 1
             with c.transaction():
-                # yank each old shard fully, building the flat extent list
+                # yank each old shard fully (positional vectored yank —
+                # no seek/stat dance), building the flat extent list
                 flat_extents = []
                 for s in range(old_n):
-                    fd = c.open(self._leaf_path(step, name, s, old_n), "r")
-                    size = c.stat(self._leaf_path(step, name, s, old_n))["size"]
-                    flat_extents.extend(c.yank(fd, size))
-                    c.close(fd)
+                    lo, hi = self._shard_range(meta["nbytes"], old_n, s)
+                    path = self._leaf_path(step, name, s, old_n)
+                    with c.open_file(path, "r") as f:
+                        flat_extents.extend(f.yankv([(0, hi - lo)])[0])
                 # paste computed byte ranges into the new shard files
                 for s in range(n):
                     lo, hi = self._shard_range(meta["nbytes"], n, s)
-                    fd = c.open(self._leaf_path(dst_step, name, s, n), "w")
-                    c.paste(fd, _carve(flat_extents, lo, hi - lo))
-                    c.close(fd)
+                    path = self._leaf_path(dst_step, name, s, n)
+                    with c.open_file(path, "w") as f:
+                        f.paste(_carve(flat_extents, lo, hi - lo))
             new_entries[name] = {**meta, "shards": n}
         self._commit(dst_step, new_entries,
                      {"resharded_from": step, "step": dst_step})

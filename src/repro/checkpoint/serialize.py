@@ -11,7 +11,8 @@ import hashlib
 from typing import Any, Dict, List, Tuple
 
 import numpy as np
-import orjson
+
+from repro.util import jsonio
 
 
 def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, Any]:
@@ -64,8 +65,8 @@ def bytes_to_leaf(data: bytes, meta: dict) -> np.ndarray:
 
 
 def encode_manifest(entries: Dict[str, dict], extra: dict) -> bytes:
-    return orjson.dumps({"leaves": entries, **extra})
+    return jsonio.dumps({"leaves": entries, **extra})
 
 
 def decode_manifest(raw: bytes) -> dict:
-    return orjson.loads(raw)
+    return jsonio.loads(raw)

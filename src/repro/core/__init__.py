@@ -8,13 +8,16 @@ the file-slicing API (`yank`/`paste`/`punch`/`append`/`concat`/`copy`).
 """
 from .client import (SEEK_CUR, SEEK_END, SEEK_SET, Cluster, WtfClient,
                      WtfTransaction, normalize_path)
+from .client_runtime import ClientStats
 from .coordinator import ReplicatedCoordinator
 from .errors import (AlreadyExists, BadFileDescriptor, IsADirectory,
                      KVConflict, NoQuorum, NotADirectory, NotFound,
                      PreconditionFailed, StorageError, TransactionAborted,
                      WtfError)
 from .gc import GarbageCollector
+from .handle import WtfFile
 from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
+from .iosched import SliceScheduler
 from .metadata import CommutingOp, ListAppend, Transaction, WarpKV
 from .placement import HashRing, stable_hash
 from .slicing import (Extent, SlicePointer, compact, decode_extents,
@@ -23,7 +26,8 @@ from .slicing import (Extent, SlicePointer, compact, decode_extents,
 from .storage import StorageServer
 
 __all__ = [
-    "Cluster", "WtfClient", "WtfTransaction", "WarpKV", "StorageServer",
+    "Cluster", "WtfClient", "WtfTransaction", "WtfFile", "ClientStats",
+    "SliceScheduler", "WarpKV", "StorageServer",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",
     "Extent", "SlicePointer", "Inode", "RegionData",
     "compact", "overlay", "slice_range", "merge_adjacent",

@@ -1,16 +1,23 @@
-"""The WTF client library (paper §2.1–§2.6).
+"""The WTF client library (paper §2.1–§2.6) — assembly of the layered client.
 
-The client is where metadata (WarpKV) and data (storage servers) combine into
-a coherent filesystem.  It exposes:
+The client is where metadata (WarpKV) and data (storage servers) combine
+into a coherent filesystem.  The implementation is split into layers:
 
-  * the POSIX-style API: open/close/read/write/seek/tell, mkdir/listdir,
-    link/unlink/rename/stat — with one-lookup open (§2.4);
-  * the file-slicing API: yank/paste/punch/append/concat/copy (Table 1);
-  * fully general multi-file transactions with the §2.6 retry layer: every
-    call inside a transaction is logged with its arguments and app-visible
-    outcome; KV-level aborts are replayed transparently and only surface to
-    the application when a re-executed call's outcome differs (an
-    unresolvable, application-visible conflict).
+  * ``client_runtime`` — fd table, op logging, the auto-commit retry loop,
+    and ``WtfTransaction`` (the §2.6 replay layer);
+  * ``slice_ops``      — the data plane (slice planning, batched fetching
+    through ``iosched``, write/paste engines) and the file-slicing API
+    (Table 1) plus vectored ``yankv``/``pastev``;
+  * ``posix_ops``      — the POSIX-style surface with one-lookup open
+    (§2.4) plus vectored ``readv``/``preadv``/``writev``/``pwritev``;
+  * ``handle``         — ``WtfFile``, the first-class handle returned by
+    ``open_file`` (preferred over raw fd juggling);
+  * ``iosched``        — the batched slice-fetch scheduler: coalesces
+    adjacent slice pointers per (server, backing file) and fans fetches
+    out across servers.
+
+This module assembles ``WtfClient`` from those layers and defines
+``Cluster``, which wires together the four components of Figure 1.
 
 Writers create slices on storage servers *before* their metadata commits, so
 any transaction that can observe a slice pointer can safely dereference it —
@@ -18,130 +25,46 @@ the cornerstone invariant of the design (§2.1).
 """
 from __future__ import annotations
 
-import hashlib
 import itertools
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
-from .errors import (AlreadyExists, BadFileDescriptor, DirectoryNotEmpty,
-                     IsADirectory, KVConflict, NotADirectory, NotFound,
-                     PreconditionFailed, StorageError, TransactionAborted,
-                     WtfError)
-from .inode import (DEFAULT_REGION_SIZE, AppendExtents, BumpInode, Inode,
-                    RegionData, region_key)
-from .metadata import Transaction, WarpKV
-from .placement import region_placement_key, stable_hash
-from .slicing import (Extent, SlicePointer, compact, decode_extents,
-                      encode_extents, merge_adjacent, shift, slice_range,
-                      split_by_regions, visible_length)
-
-import orjson
+# Re-exported for compatibility: these names historically lived here.
+from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET,  # noqa: F401
+                             ClientRuntime, ClientStats, WtfTransaction,
+                             basename_of, normalize_path, parent_of)
+from .errors import StorageError
+from .handle import WtfFile  # noqa: F401  (re-export)
+from .inode import DEFAULT_REGION_SIZE
+from .iosched import DEFAULT_MAX_GAP, SliceScheduler
+from .metadata import WarpKV
+from .posix_ops import PosixOps
+from .slice_ops import SliceOps
+from .slicing import SlicePointer
 
 GC_DIR = "/.wtf-gc"          # reserved directory for GC live lists (§2.8)
 
-SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
 
-
-@dataclass
-class _Fd:
-    fd: int
-    inode_id: int
-    path: str
-    offset: int = 0
-    writable: bool = True
-
-    def snap(self) -> tuple:
-        return (self.fd, self.inode_id, self.path, self.offset, self.writable)
-
-    @staticmethod
-    def restore(t: tuple) -> "_Fd":
-        return _Fd(*t)
-
-
-@dataclass
-class ClientStats:
-    """Logical I/O accounting as seen by this client (drives Table 2)."""
-
-    data_bytes_written: int = 0      # bytes physically sent to storage servers
-    data_bytes_read: int = 0         # bytes physically fetched
-    logical_bytes_written: int = 0   # bytes the app asked to write/paste
-    logical_bytes_read: int = 0      # bytes the app asked to read/yank
-    txn_retries: int = 0
-    txn_aborts: int = 0
-
-    def snapshot(self) -> dict:
-        return dict(self.__dict__)
-
-
-class _Ctx:
-    """Execution context: one WarpKV transaction + replay bookkeeping."""
-
-    def __init__(self, txn: Transaction, first: bool):
-        self.txn = txn
-        self.first = first               # first execution vs. replay
-
-
-class _Op:
-    __slots__ = ("name", "args", "kwargs", "digest", "artifacts")
-
-    def __init__(self, name: str, args: tuple, kwargs: dict):
-        self.name = name
-        self.args = args
-        self.kwargs = kwargs
-        self.digest: Any = None
-        self.artifacts: dict = {}        # slices created, ids allocated, ...
-
-
-def _digest(value: Any) -> Any:
-    """Stable comparison token for an op's application-visible outcome."""
-    if isinstance(value, (bytes, bytearray)):
-        return ("bytes", hashlib.blake2b(bytes(value), digest_size=16).digest())
-    if isinstance(value, tuple):
-        return tuple(_digest(v) for v in value)
-    if isinstance(value, list):
-        return ("list",) + tuple(_digest(v) for v in value)
-    if isinstance(value, dict):
-        return ("dict",) + tuple(sorted((k, _digest(v))
-                                        for k, v in value.items()))
-    return value
-
-
-def normalize_path(path: str) -> str:
-    if not path.startswith("/"):
-        raise WtfError(f"paths must be absolute: {path!r}")
-    parts = [p for p in path.split("/") if p and p != "."]
-    out: list[str] = []
-    for p in parts:
-        if p == "..":
-            if out:
-                out.pop()
-        else:
-            out.append(p)
-    return "/" + "/".join(out)
-
-
-def parent_of(path: str) -> str:
-    norm = normalize_path(path)
-    if norm == "/":
-        return "/"
-    return norm.rsplit("/", 1)[0] or "/"
-
-
-def basename_of(path: str) -> str:
-    norm = normalize_path(path)
-    return norm.rsplit("/", 1)[1] if norm != "/" else "/"
-
-
-class WtfClient:
+class WtfClient(PosixOps, SliceOps, ClientRuntime):
     """One application's handle on the filesystem.
 
     Not thread-safe by design: the paper's workloads use one client per
     thread/process; share the ``Cluster`` instead, which is thread-safe.
-    """
 
-    MAX_RETRIES = 16
+    Surface (see the layer modules for details):
+
+      * POSIX ops with one-lookup open, plus vectored
+        ``readv``/``preadv``/``writev``/``pwritev``;
+      * file slicing (``yank``/``paste``/``punch``/``append``/``concat``/
+        ``copy``) plus vectored ``yankv``/``pastev``;
+      * ``open_file`` returning a ``WtfFile`` context-manager handle;
+      * fully general multi-file transactions via ``transaction()`` with
+        the §2.6 transparent-replay retry layer.
+
+    Every vectored call executes as ONE logged op in ONE transaction, and
+    its slice fetches are batched by the cluster's ``SliceScheduler``.
+    """
 
     def __init__(self, cluster: "Cluster", client_id: Optional[int] = None):
         self.cluster = cluster
@@ -150,748 +73,28 @@ class WtfClient:
         self._client_id = (client_id if client_id is not None
                            else cluster._next_client_id())
         self._fd_counter = itertools.count(3)
-        self._fds: Dict[int, _Fd] = {}
+        self._fds: Dict[int, Any] = {}
         self._id_counter = itertools.count(1)
         self._txn: Optional[WtfTransaction] = None
         self.time_fn: Callable[[], int] = lambda: int(time.time())
-
-    # ------------------------------------------------------------ plumbing
-    def _alloc_inode_id(self) -> int:
-        # Unique without coordination (no read dependency on a counter →
-        # creates never conflict with each other).
-        return (self._client_id << 40) | next(self._id_counter)
-
-    def _fd_state(self) -> dict:
-        return {fd: f.snap() for fd, f in self._fds.items()}
-
-    def _restore_fd_state(self, snap: dict) -> None:
-        self._fds = {fd: _Fd.restore(t) for fd, t in snap.items()}
-
-    def _get_fd(self, fd: int) -> _Fd:
-        f = self._fds.get(fd)
-        if f is None:
-            raise BadFileDescriptor(f"fd {fd}")
-        return f
-
-    # -------------------------------------------------------- txn dispatch
-    def transaction(self) -> "WtfTransaction":
-        """Begin a fully general multi-file transaction (§2.6)."""
-        if self._txn is not None:
-            raise WtfError("nested transactions are not supported")
-        return WtfTransaction(self)
-
-    def _run(self, name: str, *args, **kwargs) -> Any:
-        if self._txn is not None:
-            return self._txn._run(name, args, kwargs)
-        # Auto-commit: single-op transaction with internal retry.  Nothing
-        # is application-visible until we return, so retry is always safe.
-        op = _Op(name, args, kwargs)
-        fd_snap = self._fd_state()
-        last: Optional[Exception] = None
-        for attempt in range(self.MAX_RETRIES):
-            if attempt:
-                self.stats.txn_retries += 1
-                self._restore_fd_state(fd_snap)
-            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
-            try:
-                result = self._exec(op, ctx)
-                ctx.txn.commit()
-                return result
-            except (KVConflict, PreconditionFailed) as e:
-                last = e
-                continue
-        self.stats.txn_aborts += 1
-        raise TransactionAborted(
-            f"auto-commit op {name} failed after {self.MAX_RETRIES} "
-            f"attempts: {last}")
-
-    def _exec(self, op: _Op, ctx: _Ctx) -> Any:
-        fn = getattr(self, f"_op_{op.name}")
-        return fn(ctx, op, *op.args, **op.kwargs)
-
-    # ===================================================== public API: POSIX
-    def mkfs(self) -> None:
-        """Create the root directory and GC directory (idempotent)."""
-        txn = self.kv.begin()
-        if txn.get("paths", "/") is None:
-            root = Inode(self._alloc_inode_id(), "dir",
-                         mtime=self.time_fn(),
-                         region_size=self.cluster.region_size)
-            txn.put("paths", "/", root.inode_id)
-            txn.put("inodes", root.inode_id, root)
-            txn.commit()
-            self.mkdir(GC_DIR)
-        else:
-            txn.abort()
-
-    def open(self, path: str, mode: str = "r",
-             region_size: Optional[int] = None) -> int:
-        """One-lookup open (§2.4): pathname → inode in a single KV get."""
-        return self._run("open", normalize_path(path), mode, region_size)
-
-    def close(self, fd: int) -> None:
-        self._get_fd(fd)
-        del self._fds[fd]
-
-    def read(self, fd: int, size: int = -1) -> bytes:
-        return self._run("read", fd, size)
-
-    def pread(self, fd: int, size: int, offset: int) -> bytes:
-        return self._run("pread", fd, size, offset)
-
-    def write(self, fd: int, data: bytes) -> int:
-        return self._run("write", fd, bytes(data))
-
-    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
-        return self._run("pwrite", fd, bytes(data), offset)
-
-    def seek(self, fd: int, offset: int, whence: int = SEEK_SET):
-        return self._run("seek", fd, offset, whence)
-
-    def tell(self, fd: int) -> int:
-        return self._get_fd(fd).offset
-
-    def truncate(self, fd: int, length: int = 0) -> None:
-        return self._run("truncate", fd, length)
-
-    def mkdir(self, path: str) -> None:
-        return self._run("mkdir", normalize_path(path))
-
-    def listdir(self, path: str) -> list[str]:
-        return self._run("listdir", normalize_path(path))
-
-    def link(self, existing: str, new: str) -> None:
-        """Hardlink: atomically add the path→inode mapping, bump the link
-        count, and append the dirent — the paper's own example txn (§2.4)."""
-        return self._run("link", normalize_path(existing), normalize_path(new))
-
-    def unlink(self, path: str) -> None:
-        return self._run("unlink", normalize_path(path))
-
-    def rmdir(self, path: str) -> None:
-        return self._run("rmdir", normalize_path(path))
-
-    def rename(self, old: str, new: str) -> None:
-        return self._run("rename", normalize_path(old), normalize_path(new))
-
-    def stat(self, path: str) -> dict:
-        return self._run("stat", normalize_path(path))
-
-    def exists(self, path: str) -> bool:
-        return self.kv.get("paths", normalize_path(path)) is not None
-
-    def file_length(self, path: str) -> int:
-        return self.stat(path)["size"]
-
-    # ============================================= public API: file slicing
-    def yank(self, fd: int, size: int, want_data: bool = False):
-        """Copy ``size`` bytes from fd as slice pointers (Table 1)."""
-        return self._run("yank", fd, size, want_data)
-
-    def paste(self, fd: int, extents: Sequence[Extent]) -> int:
-        """Write slices to fd at its offset — metadata only, zero data I/O."""
-        return self._run("paste", fd, tuple(extents))
-
-    def punch(self, fd: int, amount: int) -> int:
-        """Zero ``amount`` bytes at the offset, freeing underlying storage."""
-        return self._run("punch", fd, amount)
-
-    def append(self, fd: int, data: bytes) -> int:
-        """Append with the §2.5 relative-append fast path (commutative)."""
-        return self._run("append", fd, bytes(data))
-
-    def append_slices(self, fd: int, extents: Sequence[Extent]) -> int:
-        return self._run("append_slices", fd, tuple(extents))
-
-    def concat(self, sources: Sequence[str], dest: str) -> None:
-        """Concatenate files by metadata alone (Table 1)."""
-        return self._run("concat",
-                         tuple(normalize_path(s) for s in sources),
-                         normalize_path(dest))
-
-    def copy(self, source: str, dest: str) -> None:
-        return self._run("copy", normalize_path(source), normalize_path(dest))
-
-    # ============================================================ op bodies
-    # Each _op_* body executes against a WarpKV transaction and must be
-    # replayable: artifacts created on first execution (slices, ids) are
-    # recorded on the op and reused verbatim on replay (§2.6: the log keeps
-    # slice pointers, never data).
-
-    def _op_open(self, ctx: _Ctx, op: _Op, path: str, mode: str,
-                 region_size: Optional[int]) -> int:
-        create = "w" in mode or "a" in mode or "x" in mode
-        ino_id = ctx.txn.get("paths", path)
-        if ino_id is None:
-            if not create:
-                raise NotFound(path)
-            ino_id = self._create_file(ctx, op, path, region_size)
-            ino = ctx.txn.get("inodes", ino_id)
-        else:
-            if "x" in mode:
-                raise AlreadyExists(path)
-            ino = ctx.txn.get("inodes", ino_id)
-            if ino is None:
-                raise NotFound(f"dangling path {path}")
-            if ino.kind == "dir" and ("w" in mode or "a" in mode):
-                raise IsADirectory(path)
-            if mode == "w":                       # truncate semantics
-                self._truncate_inode(ctx, ino, 0)
-        f = _Fd(op.artifacts.setdefault("fd", next(self._fd_counter)),
-                ino_id, path, writable=("r" != mode))
-        if "a" in mode:
-            f.offset = self._file_length(ctx, ino)
-        self._fds[f.fd] = f
-        return f.fd
-
-    def _create_file(self, ctx: _Ctx, op: _Op, path: str,
-                     region_size: Optional[int]) -> int:
-        parent = parent_of(path)
-        parent_id = ctx.txn.get("paths", parent)
-        if parent_id is None:
-            raise NotFound(f"parent directory {parent}")
-        pino = ctx.txn.get("inodes", parent_id)
-        if pino.kind != "dir":
-            raise NotADirectory(parent)
-        ino_id = op.artifacts.setdefault("ino", self._alloc_inode_id())
-        now = op.artifacts.setdefault("mtime", self.time_fn())
-        ino = Inode(ino_id, "file", mtime=now,
-                    region_size=region_size or self.cluster.region_size)
-        ctx.txn.put("paths", path, ino_id)
-        ctx.txn.put("inodes", ino_id, ino)
-        self._dir_append(ctx, op, pino, {"op": "add",
-                                         "name": basename_of(path),
-                                         "ino": ino_id})
-        return ino_id
-
-    def _op_read(self, ctx: _Ctx, op: _Op, fd: int, size: int) -> bytes:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        length = self._file_length(ctx, ino)
-        if size < 0:
-            size = max(0, length - f.offset)
-        size = min(size, max(0, length - f.offset))
-        data = self._read_range(ctx, ino, f.offset, size)
-        f.offset += len(data)
-        self.stats.logical_bytes_read += len(data)
-        return data
-
-    def _op_pread(self, ctx: _Ctx, op: _Op, fd: int, size: int,
-                  offset: int) -> bytes:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        length = self._file_length(ctx, ino)
-        size = min(size, max(0, length - offset))
-        data = self._read_range(ctx, ino, offset, size)
-        self.stats.logical_bytes_read += len(data)
-        return data
-
-    def _op_write(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
-        f = self._get_fd(fd)
-        n = self._write_at(ctx, op, f.inode_id, f.offset, data, key="w")
-        f.offset += n
-        return n
-
-    def _op_pwrite(self, ctx: _Ctx, op: _Op, fd: int, data: bytes,
-                   offset: int) -> int:
-        f = self._get_fd(fd)
-        return self._write_at(ctx, op, f.inode_id, offset, data, key="w")
-
-    def _op_seek(self, ctx: _Ctx, op: _Op, fd: int, offset: int,
-                 whence: int):
-        f = self._get_fd(fd)
-        if whence == SEEK_SET:
-            f.offset = offset
-            return f.offset
-        if whence == SEEK_CUR:
-            f.offset += offset
-            return f.offset
-        if whence == SEEK_END:
-            ino = self._inode(ctx, f.inode_id)
-            f.offset = self._file_length(ctx, ino) + offset
-            # The application never observes the end-of-file offset through
-            # seek — that's precisely what makes seek(END)+write retryable
-            # without an application-visible conflict (§2.6).
-            return None
-        raise WtfError(f"bad whence {whence}")
-
-    def _op_truncate(self, ctx: _Ctx, op: _Op, fd: int, length: int) -> None:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        self._truncate_inode(ctx, ino, length)
-
-    def _op_mkdir(self, ctx: _Ctx, op: _Op, path: str) -> None:
-        if ctx.txn.get("paths", path) is not None:
-            raise AlreadyExists(path)
-        parent = parent_of(path)
-        parent_id = ctx.txn.get("paths", parent)
-        if parent_id is None:
-            raise NotFound(f"parent directory {parent}")
-        pino = ctx.txn.get("inodes", parent_id)
-        if pino.kind != "dir":
-            raise NotADirectory(parent)
-        ino_id = op.artifacts.setdefault("ino", self._alloc_inode_id())
-        now = op.artifacts.setdefault("mtime", self.time_fn())
-        ino = Inode(ino_id, "dir", mtime=now,
-                    region_size=self.cluster.region_size)
-        ctx.txn.put("paths", path, ino_id)
-        ctx.txn.put("inodes", ino_id, ino)
-        self._dir_append(ctx, op, pino,
-                         {"op": "add", "name": basename_of(path),
-                          "ino": ino_id})
-
-    def _op_listdir(self, ctx: _Ctx, op: _Op, path: str) -> list[str]:
-        ino = self._inode_at(ctx, path)
-        if ino.kind != "dir":
-            raise NotADirectory(path)
-        return sorted(self._dir_entries(ctx, ino).keys())
-
-    def _op_link(self, ctx: _Ctx, op: _Op, existing: str, new: str) -> None:
-        ino_id = ctx.txn.get("paths", existing)
-        if ino_id is None:
-            raise NotFound(existing)
-        if ctx.txn.get("paths", new) is not None:
-            raise AlreadyExists(new)
-        parent_id = ctx.txn.get("paths", parent_of(new))
-        if parent_id is None:
-            raise NotFound(parent_of(new))
-        pino = ctx.txn.get("inodes", parent_id)
-        # Atomically: new mapping + link count + dirent (§2.4).
-        ctx.txn.put("paths", new, ino_id)
-        ctx.txn.commute("inodes", ino_id, BumpInode(link_delta=1))
-        self._dir_append(ctx, op, pino,
-                         {"op": "add", "name": basename_of(new),
-                          "ino": ino_id})
-
-    def _op_unlink(self, ctx: _Ctx, op: _Op, path: str) -> None:
-        ino_id = ctx.txn.get("paths", path)
-        if ino_id is None:
-            raise NotFound(path)
-        ino = ctx.txn.get("inodes", ino_id)
-        if ino.kind == "dir":
-            raise IsADirectory(path)
-        parent_id = ctx.txn.get("paths", parent_of(path))
-        pino = ctx.txn.get("inodes", parent_id)
-        ctx.txn.delete("paths", path)
-        self._dir_append(ctx, op, pino,
-                         {"op": "del", "name": basename_of(path)})
-        if ino.links <= 1:
-            # Last link: drop the inode and all region metadata; the slices
-            # become garbage for the tier-3 collector (§2.8).
-            ctx.txn.delete("inodes", ino_id)
-            for r in range(ino.max_region + 1):
-                ctx.txn.delete("regions", region_key(ino_id, r))
-        else:
-            ctx.txn.put("inodes", ino_id, ino.replace(links=ino.links - 1))
-
-    def _op_rmdir(self, ctx: _Ctx, op: _Op, path: str) -> None:
-        if path == "/":
-            raise WtfError("cannot remove the root directory")
-        ino_id = ctx.txn.get("paths", path)
-        if ino_id is None:
-            raise NotFound(path)
-        ino = ctx.txn.get("inodes", ino_id)
-        if ino.kind != "dir":
-            raise NotADirectory(path)
-        if self._dir_entries(ctx, ino):
-            raise DirectoryNotEmpty(path)
-        parent_id = ctx.txn.get("paths", parent_of(path))
-        pino = ctx.txn.get("inodes", parent_id)
-        ctx.txn.delete("paths", path)
-        ctx.txn.delete("inodes", ino_id)
-        ctx.txn.delete("regions", region_key(ino_id, 0))
-        self._dir_append(ctx, op, pino,
-                         {"op": "del", "name": basename_of(path)})
-
-    def _op_rename(self, ctx: _Ctx, op: _Op, old: str, new: str) -> None:
-        ino_id = ctx.txn.get("paths", old)
-        if ino_id is None:
-            raise NotFound(old)
-        if ctx.txn.get("paths", new) is not None:
-            raise AlreadyExists(new)
-        old_pid = ctx.txn.get("paths", parent_of(old))
-        new_pid = ctx.txn.get("paths", parent_of(new))
-        if new_pid is None:
-            raise NotFound(parent_of(new))
-        ctx.txn.delete("paths", old)
-        ctx.txn.put("paths", new, ino_id)
-        self._dir_append(ctx, op, ctx.txn.get("inodes", old_pid),
-                         {"op": "del", "name": basename_of(old)}, key="d1")
-        self._dir_append(ctx, op, ctx.txn.get("inodes", new_pid),
-                         {"op": "add", "name": basename_of(new),
-                          "ino": ino_id}, key="d2")
-
-    def _op_stat(self, ctx: _Ctx, op: _Op, path: str) -> dict:
-        ino = self._inode_at(ctx, path)
-        return {
-            "inode": ino.inode_id,
-            "kind": ino.kind,
-            "links": ino.links,
-            "mtime": ino.mtime,
-            "mode": ino.mode,
-            "size": self._file_length(ctx, ino),
-            "region_size": ino.region_size,
-        }
-
-    # ---------------------------------------------------- slicing op bodies
-    def _op_yank(self, ctx: _Ctx, op: _Op, fd: int, size: int,
-                 want_data: bool):
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        length = self._file_length(ctx, ino)
-        size = min(size, max(0, length - f.offset))
-        extents = self._plan_range(ctx, ino, f.offset, size)
-        data = None
-        if want_data:
-            data = self._fetch(extents)
-            self.stats.logical_bytes_read += size
-        f.offset += size
-        extents = tuple(extents)
-        return (extents, data) if want_data else extents
-
-    def _op_paste(self, ctx: _Ctx, op: _Op, fd: int,
-                  extents: Tuple[Extent, ...]) -> int:
-        f = self._get_fd(fd)
-        n = self._paste_at(ctx, f.inode_id, f.offset, extents)
-        f.offset += n
-        self.stats.logical_bytes_written += n
-        return n
-
-    def _op_punch(self, ctx: _Ctx, op: _Op, fd: int, amount: int) -> int:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        max_r = -1
-        for r, rel, _, ln in split_by_regions(f.offset, amount,
-                                              ino.region_size):
-            ctx.txn.commute("regions", region_key(ino.inode_id, r),
-                            AppendExtents([Extent(rel, ln, ())]))
-            max_r = max(max_r, r)
-        self._bump(ctx, ino.inode_id, op, max_region=max_r)
-        f.offset += amount
-        return amount
-
-    def _op_append(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        last = max(ino.max_region, 0)
-        # Unvalidated fit check: the commit-time bound precondition is the
-        # real guard, so concurrent appends carry no read dependency (§2.5).
-        rd = ctx.txn.peek("regions", region_key(ino.inode_id, last),
-                          RegionData())
-        if rd.end + len(data) <= ino.region_size:
-            # Fast path (§2.5): commutative bounded append — resolved against
-            # the region's end at commit time, so concurrent appends all
-            # commit without conflicting.
-            full = self._data_slice(ctx, op, ino, last, data, key="a")
-            ctx.txn.commute(
-                "regions", region_key(ino.inode_id, last),
-                AppendExtents([Extent(0, len(data), full.ptrs)],
-                              relative=True, bound=ino.region_size))
-            self._bump(ctx, ino.inode_id, op, max_region=last)
-        else:
-            # Fallback: read end-of-file and write at that offset (§2.5);
-            # a replay reuses the already-written slice ("paste the
-            # previously written slice at the new end of file").
-            eof = self._file_length(ctx, ino)
-            self._write_at(ctx, op, ino.inode_id, eof, data, key="a")
-        self.stats.logical_bytes_written += len(data)
-        return len(data)
-
-    def _op_append_slices(self, ctx: _Ctx, op: _Op, fd: int,
-                          extents: Tuple[Extent, ...]) -> int:
-        f = self._get_fd(fd)
-        ino = self._inode(ctx, f.inode_id)
-        eof = self._file_length(ctx, ino)
-        n = self._paste_at(ctx, f.inode_id, eof, extents)
-        self.stats.logical_bytes_written += n
-        return n
-
-    def _op_concat(self, ctx: _Ctx, op: _Op, sources: Tuple[str, ...],
-                   dest: str) -> None:
-        cursor = 0
-        if ctx.txn.get("paths", dest) is None:
-            self._create_file(ctx, op, dest, None)
-        dest_ino = self._inode_at(ctx, dest)
-        for src in sources:
-            ino = self._inode_at(ctx, src)
-            length = self._file_length(ctx, ino)
-            extents = self._plan_range(ctx, ino, 0, length)
-            cursor += self._paste_at(ctx, dest_ino.inode_id, cursor, extents)
-        self.stats.logical_bytes_written += cursor
-
-    def _op_copy(self, ctx: _Ctx, op: _Op, source: str, dest: str) -> None:
-        return self._op_concat(ctx, op, (source,), dest)
-
-    # ------------------------------------------------------------ internals
-    def _inode(self, ctx: _Ctx, inode_id: int) -> Inode:
-        # get_view: BumpInode commutes queued earlier in this transaction
-        # (e.g. a paste growing max_region) must be visible to later ops.
-        ino = ctx.txn.get_view("inodes", inode_id)
-        if ino is None:
-            raise NotFound(f"inode {inode_id}")
-        return ino
-
-    def _inode_at(self, ctx: _Ctx, path: str) -> Inode:
-        ino_id = ctx.txn.get("paths", path)
-        if ino_id is None:
-            raise NotFound(path)
-        return self._inode(ctx, ino_id)
-
-    def _bump(self, ctx: _Ctx, inode_id: int, op: _Op,
-              max_region: Optional[int] = None) -> None:
-        now = op.artifacts.setdefault("mtime", self.time_fn())
-        ctx.txn.commute("inodes", inode_id,
-                        BumpInode(max_region=max_region, mtime=now))
-
-    def _file_length(self, ctx: _Ctx, ino: Inode) -> int:
-        if ino.max_region < 0:
-            return 0
-        rd = ctx.txn.get_view("regions",
-                              region_key(ino.inode_id, ino.max_region),
-                              RegionData())
-        return ino.max_region * ino.region_size + rd.end
-
-    def _region_entries(self, ctx: _Ctx, ino: Inode,
-                        region_idx: int) -> list[Extent]:
-        rd = ctx.txn.get_view("regions",
-                              region_key(ino.inode_id, region_idx))
-        if rd is None:
-            return ()
-        if rd.indirect is None:
-            # return the stored tuple itself: `overlay_cached` memoizes on
-            # it, so repeated reads of an unchanged region plan in O(1)
-            return rd.entries
-        # Tier-2 GC: the bulk of the list lives in a slice (§2.8).
-        base = decode_extents(self._fetch([rd.indirect]))
-        return tuple(base) + tuple(rd.entries)
-
-    def _plan_range(self, ctx: _Ctx, ino: Inode, offset: int,
-                    length: int) -> list[Extent]:
-        """File-absolute extents (incl. zero runs) tiling [offset, +length)."""
-        out: list[Extent] = []
-        for r, rel, _, ln in split_by_regions(offset, length,
-                                              ino.region_size):
-            entries = self._region_entries(ctx, ino, r)
-            part = slice_range(entries, rel, ln)
-            out.extend(shift(part, r * ino.region_size))
-        return merge_adjacent(out)
-
-    def _read_range(self, ctx: _Ctx, ino: Inode, offset: int,
-                    length: int) -> bytes:
-        if length <= 0:
-            return b""
-        return self._fetch(self._plan_range(ctx, ino, offset, length))
-
-    def _fetch(self, extents: Sequence[Extent]) -> bytes:
-        """Dereference pointers, replica-failover aware (§2.9)."""
-        chunks: list[bytes] = []
-        for e in extents:
-            if e.is_zero:
-                chunks.append(b"\x00" * e.length)
-                continue
-            chunks.append(self.cluster.fetch_slice(e.ptrs))
-            self.stats.data_bytes_read += e.length
-        return b"".join(chunks)
-
-    def _data_slice(self, ctx: _Ctx, op: _Op, ino: Inode, region: int,
-                    data: bytes, key: str) -> Extent:
-        """Create one (replicated) slice for ``data``, placed for ``region``.
-
-        Created on first execution only; replays reuse the recorded pointers
-        verbatim — the §2.6 op log holds slice pointers, never data.  A write
-        that crosses a region boundary stays a *single* slice; each region's
-        list gets a sub-ranged pointer (Figure 3, write C).
-        """
-        cached = op.artifacts.get(key)
-        if cached is not None:
-            return cached
-        hint = stable_hash(region_placement_key(ino.inode_id, region))
-        ptrs = self.cluster.store_slice(
-            data, region_placement_key(ino.inode_id, region), hint)
-        self.stats.data_bytes_written += len(data) * len(ptrs)
-        ext = Extent(0, len(data), ptrs)
-        op.artifacts[key] = ext
-        return ext
-
-    def _write_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
-                  data: bytes, key: str) -> int:
-        ino = self._inode(ctx, inode_id)
-        first_region = offset // ino.region_size
-        full = self._data_slice(ctx, op, ino, first_region, data, key)
-        max_r = ino.max_region
-        for r, rel, po, ln in split_by_regions(offset, len(data),
-                                               ino.region_size):
-            ctx.txn.commute("regions", region_key(inode_id, r),
-                            AppendExtents([full.sub(po, ln).at(rel)]))
-            max_r = max(max_r, r)
-        self._bump(ctx, inode_id, op, max_region=max_r)
-        self.stats.logical_bytes_written += len(data)
-        return len(data)
-
-    def _paste_at(self, ctx: _Ctx, inode_id: int, offset: int,
-                  extents: Sequence[Extent]) -> int:
-        """Overlay existing slices at ``offset`` — pure metadata, no I/O."""
-        ino = self._inode(ctx, inode_id)
-        cursor = offset
-        max_r = ino.max_region
-        for e in extents:
-            consumed = 0
-            while consumed < e.length:
-                r = cursor // ino.region_size
-                rel = cursor - r * ino.region_size
-                take = min(e.length - consumed, ino.region_size - rel)
-                piece = e.sub(consumed, take).at(rel)
-                ctx.txn.commute("regions", region_key(inode_id, r),
-                                AppendExtents([piece]))
-                max_r = max(max_r, r)
-                cursor += take
-                consumed += take
-        op = _Op("paste_internal", (), {})
-        self._bump(ctx, inode_id, op, max_region=max_r)
-        return cursor - offset
-
-    def _truncate_inode(self, ctx: _Ctx, ino: Inode, length: int) -> None:
-        if length != 0:
-            raise WtfError("only truncate-to-zero is supported")
-        for r in range(ino.max_region + 1):
-            ctx.txn.delete("regions", region_key(ino.inode_id, r))
-        ctx.txn.put("inodes", ino.inode_id,
-                    ino.replace(max_region=-1, mtime=self.time_fn()))
-
-    # ----------------------------------------------------------- dir files
-    # Directories are special files (§2.4): their content is a record log of
-    # add/del entries, maintained with the same append machinery as data.
-    def _dir_append(self, ctx: _Ctx, op: _Op, dir_ino: Inode, record: dict,
-                    key: str = "d") -> None:
-        data = orjson.dumps(record) + b"\n"
-        full = self._data_slice(ctx, op, dir_ino, 0, data, key=key)
-        ctx.txn.commute(
-            "regions", region_key(dir_ino.inode_id, 0),
-            AppendExtents([Extent(0, len(data), full.ptrs)],
-                          relative=True, bound=dir_ino.region_size))
-        self._bump(ctx, dir_ino.inode_id, op, max_region=0)
-
-    def _dir_entries(self, ctx: _Ctx, dir_ino: Inode) -> dict[str, int]:
-        length = self._file_length(ctx, dir_ino)
-        raw = self._read_range(ctx, dir_ino, 0, length)
-        entries: dict[str, int] = {}
-        for line in raw.split(b"\n"):
-            if not line.strip(b"\x00"):
-                continue
-            rec = orjson.loads(line)
-            if rec["op"] == "add":
-                entries[rec["name"]] = rec["ino"]
-            else:
-                entries.pop(rec["name"], None)
-        return entries
-
-
-class WtfTransaction:
-    """Fully general multi-file transaction with the §2.6 retry layer.
-
-    Every application call is logged with its arguments and app-visible
-    outcome digest.  On a HyperDex-level abort (KVConflict /
-    PreconditionFailed) the filesystem is unchanged, so the whole op log is
-    replayed with the original arguments; if any replayed call's outcome
-    differs from what the application already observed, the transaction
-    aborts to the application — otherwise the replay commits invisibly.
-    """
-
-    MAX_RETRIES = 16
-
-    def __init__(self, client: WtfClient):
-        self.client = client
-        self._ops: list[_Op] = []
-        self._ctx: Optional[_Ctx] = None
-        self._fd_snap: Optional[dict] = None
-        self._done = False
-
-    # -- context manager ------------------------------------------------
-    def __enter__(self) -> "WtfTransaction":
-        if self.client._txn is not None:
-            raise WtfError("client already has an open transaction")
-        self.client._txn = self
-        self._fd_snap = self.client._fd_state()
-        self._ctx = _Ctx(self.client.kv.begin(), first=True)
-        return self
-
-    def __exit__(self, exc_type, exc, tb) -> bool:
-        try:
-            if exc_type is None and not self._done:
-                self.commit()
-            elif not self._done:
-                self.abort()
-        finally:
-            self.client._txn = None
-        return False
-
-    # -- op dispatch -------------------------------------------------------
-    def _run(self, name: str, args: tuple, kwargs: dict) -> Any:
-        if self._done:
-            raise WtfError("transaction already finished")
-        op = _Op(name, args, kwargs)
-        result = self.client._exec(op, self._ctx)
-        op.digest = _digest(result)
-        self._ops.append(op)
-        return result
-
-    # -- commit / abort -----------------------------------------------------
-    def commit(self) -> None:
-        if self._done:
-            raise WtfError("transaction already finished")
-        last: Optional[Exception] = None
-        for attempt in range(self.MAX_RETRIES):
-            if attempt:
-                self.client.stats.txn_retries += 1
-                try:
-                    self._replay()
-                except (KVConflict, PreconditionFailed) as e:
-                    last = e
-                    continue
-            try:
-                self._ctx.txn.commit()
-                self._done = True
-                return
-            except (KVConflict, PreconditionFailed) as e:
-                last = e
-        self._done = True
-        self.client.stats.txn_aborts += 1
-        self.client._restore_fd_state(self._fd_snap)
-        raise TransactionAborted(
-            f"gave up after {self.MAX_RETRIES} replays: {last}")
-
-    def _replay(self) -> None:
-        """Re-execute the op log against a fresh KV transaction (§2.6)."""
-        self.client._restore_fd_state(self._fd_snap)
-        self._ctx = _Ctx(self.client.kv.begin(), first=False)
-        for op in self._ops:
-            result = self.client._exec(op, self._ctx)
-            if _digest(result) != op.digest:
-                self._done = True
-                self.client.stats.txn_aborts += 1
-                # the transaction leaves no trace — including fd offsets
-                self.client._restore_fd_state(self._fd_snap)
-                raise TransactionAborted(
-                    f"replayed {op.name} produced a different "
-                    f"application-visible outcome")
-
-    def abort(self) -> None:
-        self._ctx.txn.abort()
-        self.client._restore_fd_state(self._fd_snap)
-        self._done = True
 
 
 class Cluster:
     """Wires together the four components of Figure 1 and owns shared state.
 
     Thread-safe; create one ``WtfClient`` per worker thread on top of it.
+    Owns the ``SliceScheduler`` (one per cluster, shared by all clients) so
+    batched fetches from every client share one thread pool and one
+    coalescing policy (``fetch_gap_bytes``).
     """
 
     def __init__(self, n_servers: int = 4, data_dir: str = "/tmp/wtf",
                  replication: int = 1,
                  region_size: int = DEFAULT_REGION_SIZE,
                  coordinator_replicas: int = 3,
-                 num_backing_files: int = 8):
+                 num_backing_files: int = 8,
+                 fetch_gap_bytes: int = DEFAULT_MAX_GAP,
+                 fetch_workers: Optional[int] = None):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -913,6 +116,11 @@ class Cluster:
             self.servers[sid] = srv
             self.coordinator.register_server(sid, root)
         self._refresh_ring()
+        self.scheduler = SliceScheduler(
+            self,
+            max_workers=(fetch_workers if fetch_workers is not None
+                         else min(8, max(1, n_servers))),
+            max_gap=fetch_gap_bytes)
         self._root_client = WtfClient(self, client_id=0)
         self._root_client.mkfs()
 
@@ -997,6 +205,8 @@ class Cluster:
             s["bytes_written"] for s in agg["servers"].values())
         agg["data_bytes_read"] = sum(
             s["bytes_read"] for s in agg["servers"].values())
+        agg["slices_read"] = sum(
+            s["slices_read"] for s in agg["servers"].values())
         return agg
 
     def reset_io_stats(self) -> None:
@@ -1006,5 +216,6 @@ class Cluster:
             s.stats = StorageStats()
 
     def close(self) -> None:
+        self.scheduler.close()
         for s in self.servers.values():
             s.close()

@@ -1,0 +1,296 @@
+"""Client transaction/replay runtime (paper §2.6) — the bottom layer of the
+split client.
+
+The client library is assembled from three layers (see ``client.py``):
+
+  * ``client_runtime`` (this module): fd table, per-client stats, op logging,
+    the auto-commit retry loop, and ``WtfTransaction`` — the fully general
+    multi-file transaction with transparent KV-abort replay;
+  * ``slice_ops``: the data plane (slice planning, batched fetch, write/paste
+    engines) and the file-slicing API surface;
+  * ``posix_ops``: the POSIX-style surface (open/read/write/...) and the
+    directory machinery.
+
+Every application call is logged as an ``_Op`` with its arguments and its
+application-visible outcome digest.  On a HyperDex-level abort (KVConflict /
+PreconditionFailed) the filesystem is unchanged, so the whole op log is
+replayed with the original arguments; if any replayed call's outcome differs
+from what the application already observed, the transaction aborts to the
+application — otherwise the replay commits invisibly.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from .errors import (BadFileDescriptor, KVConflict, PreconditionFailed,
+                     TransactionAborted, WtfError)
+from .metadata import Transaction
+
+SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
+
+
+@dataclass
+class _Fd:
+    fd: int
+    inode_id: int
+    path: str
+    offset: int = 0
+    writable: bool = True
+
+    def snap(self) -> tuple:
+        return (self.fd, self.inode_id, self.path, self.offset, self.writable)
+
+    @staticmethod
+    def restore(t: tuple) -> "_Fd":
+        return _Fd(*t)
+
+
+@dataclass
+class ClientStats:
+    """Logical I/O accounting as seen by this client (drives Table 2).
+
+    ``fetch_batches`` / ``slices_coalesced`` measure the batched slice-fetch
+    scheduler (``iosched``): each batch is one storage-server round, and each
+    coalesced slice is a pointer dereference the scheduler folded into an
+    adjacent one instead of issuing separately.
+    """
+
+    data_bytes_written: int = 0      # bytes physically sent to storage servers
+    data_bytes_read: int = 0         # bytes physically fetched (incl. gaps)
+    logical_bytes_written: int = 0   # bytes the app asked to write/paste
+    logical_bytes_read: int = 0      # bytes the app asked to read/yank
+    txn_retries: int = 0
+    txn_aborts: int = 0
+    fetch_batches: int = 0           # storage-server rounds issued
+    slices_coalesced: int = 0        # pointer fetches saved by coalescing
+    vectored_ops: int = 0            # readv/writev/yankv/pastev batches run
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class _Ctx:
+    """Execution context: one WarpKV transaction + replay bookkeeping."""
+
+    def __init__(self, txn: Transaction, first: bool):
+        self.txn = txn
+        self.first = first               # first execution vs. replay
+
+
+class _Op:
+    __slots__ = ("name", "args", "kwargs", "digest", "artifacts")
+
+    def __init__(self, name: str, args: tuple, kwargs: dict):
+        self.name = name
+        self.args = args
+        self.kwargs = kwargs
+        self.digest: Any = None
+        self.artifacts: dict = {}        # slices created, ids allocated, ...
+
+
+def _digest(value: Any) -> Any:
+    """Stable comparison token for an op's application-visible outcome."""
+    if isinstance(value, (bytes, bytearray)):
+        return ("bytes", hashlib.blake2b(bytes(value), digest_size=16).digest())
+    if isinstance(value, tuple):
+        return tuple(_digest(v) for v in value)
+    if isinstance(value, list):
+        return ("list",) + tuple(_digest(v) for v in value)
+    if isinstance(value, dict):
+        return ("dict",) + tuple(sorted((k, _digest(v))
+                                        for k, v in value.items()))
+    return value
+
+
+def normalize_path(path: str) -> str:
+    if not path.startswith("/"):
+        raise WtfError(f"paths must be absolute: {path!r}")
+    parts = [p for p in path.split("/") if p and p != "."]
+    out: list[str] = []
+    for p in parts:
+        if p == "..":
+            if out:
+                out.pop()
+        else:
+            out.append(p)
+    return "/" + "/".join(out)
+
+
+def parent_of(path: str) -> str:
+    norm = normalize_path(path)
+    if norm == "/":
+        return "/"
+    return norm.rsplit("/", 1)[0] or "/"
+
+
+def basename_of(path: str) -> str:
+    norm = normalize_path(path)
+    return norm.rsplit("/", 1)[1] if norm != "/" else "/"
+
+
+class ClientRuntime:
+    """Mixin providing fd bookkeeping and transactional op dispatch.
+
+    ``WtfClient`` composes this with ``SliceOps`` and ``PosixOps``; the
+    attributes referenced here (``kv``, ``stats``, ``_fds``, ...) are set up
+    by ``WtfClient.__init__``.
+    """
+
+    MAX_RETRIES = 16
+
+    # ------------------------------------------------------------ plumbing
+    def _alloc_inode_id(self) -> int:
+        # Unique without coordination (no read dependency on a counter →
+        # creates never conflict with each other).
+        return (self._client_id << 40) | next(self._id_counter)
+
+    def _fd_state(self) -> dict:
+        return {fd: f.snap() for fd, f in self._fds.items()}
+
+    def _restore_fd_state(self, snap: dict) -> None:
+        self._fds = {fd: _Fd.restore(t) for fd, t in snap.items()}
+
+    def _get_fd(self, fd: int) -> _Fd:
+        f = self._fds.get(fd)
+        if f is None:
+            raise BadFileDescriptor(f"fd {fd}")
+        return f
+
+    # -------------------------------------------------------- txn dispatch
+    def transaction(self) -> "WtfTransaction":
+        """Begin a fully general multi-file transaction (§2.6)."""
+        if self._txn is not None:
+            raise WtfError("nested transactions are not supported")
+        return WtfTransaction(self)
+
+    def _run(self, name: str, *args, **kwargs) -> Any:
+        if self._txn is not None:
+            return self._txn._run(name, args, kwargs)
+        # Auto-commit: single-op transaction with internal retry.  Nothing
+        # is application-visible until we return, so retry is always safe.
+        # A vectored op (readv/writev/yankv/pastev) is one op here, which is
+        # what makes a whole batch atomic: either the entire batch commits
+        # or the fd state and file contents are exactly as before.
+        op = _Op(name, args, kwargs)
+        fd_snap = self._fd_state()
+        last: Optional[Exception] = None
+        for attempt in range(self.MAX_RETRIES):
+            if attempt:
+                self.stats.txn_retries += 1
+                self._restore_fd_state(fd_snap)
+            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            try:
+                result = self._exec(op, ctx)
+                ctx.txn.commit()
+                return result
+            except (KVConflict, PreconditionFailed) as e:
+                last = e
+                continue
+        self.stats.txn_aborts += 1
+        # the aborted op leaves no trace — including fd offsets the op
+        # body advanced before its commit failed
+        self._restore_fd_state(fd_snap)
+        raise TransactionAborted(
+            f"auto-commit op {name} failed after {self.MAX_RETRIES} "
+            f"attempts: {last}")
+
+    def _exec(self, op: _Op, ctx: _Ctx) -> Any:
+        fn = getattr(self, f"_op_{op.name}")
+        return fn(ctx, op, *op.args, **op.kwargs)
+
+
+class WtfTransaction:
+    """Fully general multi-file transaction with the §2.6 retry layer.
+
+    Every application call is logged with its arguments and app-visible
+    outcome digest.  On a HyperDex-level abort (KVConflict /
+    PreconditionFailed) the filesystem is unchanged, so the whole op log is
+    replayed with the original arguments; if any replayed call's outcome
+    differs from what the application already observed, the transaction
+    aborts to the application — otherwise the replay commits invisibly.
+    """
+
+    MAX_RETRIES = 16
+
+    def __init__(self, client):
+        self.client = client
+        self._ops: list[_Op] = []
+        self._ctx: Optional[_Ctx] = None
+        self._fd_snap: Optional[dict] = None
+        self._done = False
+
+    # -- context manager ------------------------------------------------
+    def __enter__(self) -> "WtfTransaction":
+        if self.client._txn is not None:
+            raise WtfError("client already has an open transaction")
+        self.client._txn = self
+        self._fd_snap = self.client._fd_state()
+        self._ctx = _Ctx(self.client.kv.begin(), first=True)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        try:
+            if exc_type is None and not self._done:
+                self.commit()
+            elif not self._done:
+                self.abort()
+        finally:
+            self.client._txn = None
+        return False
+
+    # -- op dispatch -------------------------------------------------------
+    def _run(self, name: str, args: tuple, kwargs: dict) -> Any:
+        if self._done:
+            raise WtfError("transaction already finished")
+        op = _Op(name, args, kwargs)
+        result = self.client._exec(op, self._ctx)
+        op.digest = _digest(result)
+        self._ops.append(op)
+        return result
+
+    # -- commit / abort -----------------------------------------------------
+    def commit(self) -> None:
+        if self._done:
+            raise WtfError("transaction already finished")
+        last: Optional[Exception] = None
+        for attempt in range(self.MAX_RETRIES):
+            if attempt:
+                self.client.stats.txn_retries += 1
+                try:
+                    self._replay()
+                except (KVConflict, PreconditionFailed) as e:
+                    last = e
+                    continue
+            try:
+                self._ctx.txn.commit()
+                self._done = True
+                return
+            except (KVConflict, PreconditionFailed) as e:
+                last = e
+        self._done = True
+        self.client.stats.txn_aborts += 1
+        self.client._restore_fd_state(self._fd_snap)
+        raise TransactionAborted(
+            f"gave up after {self.MAX_RETRIES} replays: {last}")
+
+    def _replay(self) -> None:
+        """Re-execute the op log against a fresh KV transaction (§2.6)."""
+        self.client._restore_fd_state(self._fd_snap)
+        self._ctx = _Ctx(self.client.kv.begin(), first=False)
+        for op in self._ops:
+            result = self.client._exec(op, self._ctx)
+            if _digest(result) != op.digest:
+                self._done = True
+                self.client.stats.txn_aborts += 1
+                # the transaction leaves no trace — including fd offsets
+                self.client._restore_fd_state(self._fd_snap)
+                raise TransactionAborted(
+                    f"replayed {op.name} produced a different "
+                    f"application-visible outcome")
+
+    def abort(self) -> None:
+        self._ctx.txn.abort()
+        self.client._restore_fd_state(self._fd_snap)
+        self._done = True

@@ -1,0 +1,367 @@
+"""File-slicing surface and the client data plane — the middle layer of the
+split client (see ``client.py`` for how the layers assemble).
+
+Public surface (Table 1 plus the vectored extensions):
+
+  * scalar: ``yank``/``paste``/``punch``/``append``/``append_slices``/
+    ``concat``/``copy``;
+  * vectored: ``yankv(fd, ranges)`` plans many byte ranges in one
+    transaction, ``pastev(fd, batches)`` overlays many extent batches
+    back-to-back at the fd offset as a single atomic op.
+
+This module also owns the shared data-plane engine used by the POSIX layer:
+range planning (``_plan_range``), batched fetching through the
+``iosched.SliceScheduler`` (``_fetch``/``_fetch_many``), slice creation
+(``_data_slice``), and the write/paste engines (``_write_at``/``_paste_at``).
+Writers create slices on storage servers *before* their metadata commits, so
+any transaction that can observe a slice pointer can safely dereference it —
+the cornerstone invariant of the design (§2.1).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from .client_runtime import _Ctx, _Op
+from .errors import NotFound, WtfError
+from .inode import AppendExtents, BumpInode, Inode, RegionData, region_key
+from .placement import region_placement_key, stable_hash
+from .slicing import (Extent, decode_extents, merge_adjacent, overlay_cached,
+                      shift, slice_range, slice_resolved, split_by_regions)
+
+
+class SliceOps:
+    """Mixin: slicing API + data-plane engine for ``WtfClient``."""
+
+    # ============================================= public API: file slicing
+    def yank(self, fd: int, size: int, want_data: bool = False):
+        """Copy ``size`` bytes from fd as slice pointers (Table 1)."""
+        return self._run("yank", fd, size, want_data)
+
+    def paste(self, fd: int, extents: Sequence[Extent]) -> int:
+        """Write slices to fd at its offset — metadata only, zero data I/O."""
+        return self._run("paste", fd, tuple(extents))
+
+    def punch(self, fd: int, amount: int) -> int:
+        """Zero ``amount`` bytes at the offset, freeing underlying storage."""
+        return self._run("punch", fd, amount)
+
+    def append(self, fd: int, data: bytes) -> int:
+        """Append with the §2.5 relative-append fast path (commutative)."""
+        return self._run("append", fd, bytes(data))
+
+    def append_slices(self, fd: int, extents: Sequence[Extent]) -> int:
+        return self._run("append_slices", fd, tuple(extents))
+
+    def concat(self, sources: Sequence[str], dest: str) -> None:
+        """Concatenate files by metadata alone (Table 1)."""
+        from .client_runtime import normalize_path
+        return self._run("concat",
+                         tuple(normalize_path(s) for s in sources),
+                         normalize_path(dest))
+
+    def copy(self, source: str, dest: str) -> None:
+        from .client_runtime import normalize_path
+        return self._run("copy", normalize_path(source), normalize_path(dest))
+
+    # ----------------------------------------------- vectored slicing API
+    def yankv(self, fd: int,
+              ranges: Sequence[Tuple[int, int]]) -> List[Tuple[Extent, ...]]:
+        """Plan many ``(offset, length)`` ranges of fd as slice pointers in
+        one transaction — positional (the fd offset does not move) and
+        zero data I/O.  Returns one extent tuple per requested range."""
+        return list(self._run("yankv", fd,
+                              tuple((int(o), int(n)) for o, n in ranges)))
+
+    def pastev(self, fd: int,
+               batches: Sequence[Sequence[Extent]]) -> int:
+        """Overlay many extent batches back-to-back at the fd offset as one
+        atomic op; advances the offset past everything pasted and returns
+        the total byte count.  Replaces N scalar ``paste`` calls with one
+        logged op — one transaction, one replay unit, O(regions) commit."""
+        return self._run("pastev", fd,
+                         tuple(tuple(b) for b in batches))
+
+    # ============================================================ op bodies
+    def _op_yank(self, ctx: _Ctx, op: _Op, fd: int, size: int,
+                 want_data: bool):
+        f = self._get_fd(fd)
+        ino = self._inode(ctx, f.inode_id)
+        length = self._file_length(ctx, ino)
+        size = min(size, max(0, length - f.offset))
+        extents = self._plan_range(ctx, ino, f.offset, size)
+        data = None
+        if want_data:
+            data = self._fetch(extents)
+            self.stats.logical_bytes_read += size
+        f.offset += size
+        extents = tuple(extents)
+        return (extents, data) if want_data else extents
+
+    def _op_yankv(self, ctx: _Ctx, op: _Op, fd: int,
+                  ranges: Tuple[Tuple[int, int], ...]):
+        _, plans = self._clamped_plans(ctx, fd, ranges)
+        self.stats.vectored_ops += 1
+        return tuple(tuple(p) for p in plans)
+
+    def _clamped_plans(self, ctx: _Ctx, fd: int,
+                       ranges: Sequence[Tuple[int, int]]):
+        """Shared readv/yankv prologue: EOF-clamp every range exactly like
+        scalar ``pread``, then plan them all with one overlay resolution
+        per region.  Returns (fd record, plans)."""
+        f = self._get_fd(fd)
+        ino = self._inode(ctx, f.inode_id)
+        length = self._file_length(ctx, ino)
+        clamped = [(off, min(size, max(0, length - off)))
+                   for off, size in ranges]
+        return f, self._plan_many(ctx, ino, clamped)
+
+    def _op_paste(self, ctx: _Ctx, op: _Op, fd: int,
+                  extents: Tuple[Extent, ...]) -> int:
+        f = self._get_fd(fd)
+        n = self._paste_at(ctx, f.inode_id, f.offset, extents)
+        f.offset += n
+        self.stats.logical_bytes_written += n
+        return n
+
+    def _op_pastev(self, ctx: _Ctx, op: _Op, fd: int,
+                   batches: Tuple[Tuple[Extent, ...], ...]) -> int:
+        f = self._get_fd(fd)
+        flat = [e for batch in batches for e in batch]
+        n = self._paste_at(ctx, f.inode_id, f.offset, flat)
+        f.offset += n
+        self.stats.logical_bytes_written += n
+        self.stats.vectored_ops += 1
+        return n
+
+    def _op_punch(self, ctx: _Ctx, op: _Op, fd: int, amount: int) -> int:
+        f = self._get_fd(fd)
+        ino = self._inode(ctx, f.inode_id)
+        max_r = -1
+        for r, rel, _, ln in split_by_regions(f.offset, amount,
+                                              ino.region_size):
+            ctx.txn.commute("regions", region_key(ino.inode_id, r),
+                            AppendExtents([Extent(rel, ln, ())]))
+            max_r = max(max_r, r)
+        self._bump(ctx, ino.inode_id, op, max_region=max_r)
+        f.offset += amount
+        return amount
+
+    def _op_append(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
+        f = self._get_fd(fd)
+        ino = self._inode(ctx, f.inode_id)
+        last = max(ino.max_region, 0)
+        # Unvalidated fit check: the commit-time bound precondition is the
+        # real guard, so concurrent appends carry no read dependency (§2.5).
+        rd = ctx.txn.peek("regions", region_key(ino.inode_id, last),
+                          RegionData())
+        if rd.end + len(data) <= ino.region_size:
+            # Fast path (§2.5): commutative bounded append — resolved against
+            # the region's end at commit time, so concurrent appends all
+            # commit without conflicting.
+            full = self._data_slice(ctx, op, ino, last, data, key="a")
+            ctx.txn.commute(
+                "regions", region_key(ino.inode_id, last),
+                AppendExtents([Extent(0, len(data), full.ptrs)],
+                              relative=True, bound=ino.region_size))
+            self._bump(ctx, ino.inode_id, op, max_region=last)
+        else:
+            # Fallback: read end-of-file and write at that offset (§2.5);
+            # a replay reuses the already-written slice ("paste the
+            # previously written slice at the new end of file").
+            eof = self._file_length(ctx, ino)
+            self._write_at(ctx, op, ino.inode_id, eof, data, key="a")
+        self.stats.logical_bytes_written += len(data)
+        return len(data)
+
+    def _op_append_slices(self, ctx: _Ctx, op: _Op, fd: int,
+                          extents: Tuple[Extent, ...]) -> int:
+        f = self._get_fd(fd)
+        ino = self._inode(ctx, f.inode_id)
+        eof = self._file_length(ctx, ino)
+        n = self._paste_at(ctx, f.inode_id, eof, extents)
+        self.stats.logical_bytes_written += n
+        return n
+
+    def _op_concat(self, ctx: _Ctx, op: _Op, sources: Tuple[str, ...],
+                   dest: str) -> None:
+        cursor = 0
+        if ctx.txn.get("paths", dest) is None:
+            self._create_file(ctx, op, dest, None)
+        dest_ino = self._inode_at(ctx, dest)
+        for src in sources:
+            ino = self._inode_at(ctx, src)
+            length = self._file_length(ctx, ino)
+            extents = self._plan_range(ctx, ino, 0, length)
+            cursor += self._paste_at(ctx, dest_ino.inode_id, cursor, extents)
+        self.stats.logical_bytes_written += cursor
+
+    def _op_copy(self, ctx: _Ctx, op: _Op, source: str, dest: str) -> None:
+        return self._op_concat(ctx, op, (source,), dest)
+
+    # ------------------------------------------------------------ internals
+    def _inode(self, ctx: _Ctx, inode_id: int) -> Inode:
+        # get_view: BumpInode commutes queued earlier in this transaction
+        # (e.g. a paste growing max_region) must be visible to later ops.
+        ino = ctx.txn.get_view("inodes", inode_id)
+        if ino is None:
+            raise NotFound(f"inode {inode_id}")
+        return ino
+
+    def _inode_at(self, ctx: _Ctx, path: str) -> Inode:
+        ino_id = ctx.txn.get("paths", path)
+        if ino_id is None:
+            raise NotFound(path)
+        return self._inode(ctx, ino_id)
+
+    def _bump(self, ctx: _Ctx, inode_id: int, op: _Op,
+              max_region: Optional[int] = None) -> None:
+        now = op.artifacts.setdefault("mtime", self.time_fn())
+        ctx.txn.commute("inodes", inode_id,
+                        BumpInode(max_region=max_region, mtime=now))
+
+    def _file_length(self, ctx: _Ctx, ino: Inode) -> int:
+        if ino.max_region < 0:
+            return 0
+        rd = ctx.txn.get_view("regions",
+                              region_key(ino.inode_id, ino.max_region),
+                              RegionData())
+        return ino.max_region * ino.region_size + rd.end
+
+    def _region_entries(self, ctx: _Ctx, ino: Inode,
+                        region_idx: int) -> list[Extent]:
+        rd = ctx.txn.get_view("regions",
+                              region_key(ino.inode_id, region_idx))
+        if rd is None:
+            return ()
+        if rd.indirect is None:
+            # return the stored tuple itself: `overlay_cached` memoizes on
+            # it, so repeated reads of an unchanged region plan in O(1)
+            return rd.entries
+        # Tier-2 GC: the bulk of the list lives in a slice (§2.8).
+        base = decode_extents(self._fetch([rd.indirect]))
+        return tuple(base) + tuple(rd.entries)
+
+    def _plan_range(self, ctx: _Ctx, ino: Inode, offset: int,
+                    length: int) -> list[Extent]:
+        """File-absolute extents (incl. zero runs) tiling [offset, +length)."""
+        out: list[Extent] = []
+        for r, rel, _, ln in split_by_regions(offset, length,
+                                              ino.region_size):
+            entries = self._region_entries(ctx, ino, r)
+            part = slice_range(entries, rel, ln)
+            out.extend(shift(part, r * ino.region_size))
+        return merge_adjacent(out)
+
+    def _plan_many(self, ctx: _Ctx, ino: Inode,
+                   ranges: Sequence[Tuple[int, int]]) -> List[List[Extent]]:
+        """Plan many ranges, resolving each touched region's overlay once.
+
+        ``overlay_cached`` memoizes on the entries tuple, but the cache
+        *lookup* hashes the whole tuple — per-range lookups made vectored
+        planning O(ranges × entries).  Caching the resolved overlay per
+        region for the duration of the op removes that quadratic term."""
+        resolved: dict = {}
+        plans: List[List[Extent]] = []
+        for offset, length in ranges:
+            out: list[Extent] = []
+            for r, rel, _, ln in split_by_regions(offset, length,
+                                                  ino.region_size):
+                res = resolved.get(r)
+                if res is None:
+                    res = overlay_cached(
+                        self._region_entries(ctx, ino, r))
+                    resolved[r] = res
+                part = slice_resolved(res, rel, ln)
+                out.extend(shift(part, r * ino.region_size))
+            plans.append(merge_adjacent(out))
+        return plans
+
+    def _read_range(self, ctx: _Ctx, ino: Inode, offset: int,
+                    length: int) -> bytes:
+        if length <= 0:
+            return b""
+        return self._fetch(self._plan_range(ctx, ino, offset, length))
+
+    def _fetch(self, extents: Sequence[Extent]) -> bytes:
+        """Dereference pointers through the batched scheduler (replica-
+        failover aware, §2.9)."""
+        return self.cluster.scheduler.fetch(extents, stats=self.stats)
+
+    def _fetch_many(self, plans: Sequence[Sequence[Extent]]) -> List[bytes]:
+        """Dereference many plans in one scheduler pass: cross-plan
+        coalescing plus per-server fan-out."""
+        return self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+
+    def _data_slice(self, ctx: _Ctx, op: _Op, ino: Inode, region: int,
+                    data: bytes, key: str) -> Extent:
+        """Create one (replicated) slice for ``data``, placed for ``region``.
+
+        Created on first execution only; replays reuse the recorded pointers
+        verbatim — the §2.6 op log holds slice pointers, never data.  A write
+        that crosses a region boundary stays a *single* slice; each region's
+        list gets a sub-ranged pointer (Figure 3, write C).
+        """
+        cached = op.artifacts.get(key)
+        if cached is not None:
+            return cached
+        hint = stable_hash(region_placement_key(ino.inode_id, region))
+        ptrs = self.cluster.store_slice(
+            data, region_placement_key(ino.inode_id, region), hint)
+        self.stats.data_bytes_written += len(data) * len(ptrs)
+        ext = Extent(0, len(data), ptrs)
+        op.artifacts[key] = ext
+        return ext
+
+    def _write_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
+                  data: bytes, key: str) -> int:
+        ino = self._inode(ctx, inode_id)
+        first_region = offset // ino.region_size
+        full = self._data_slice(ctx, op, ino, first_region, data, key)
+        max_r = ino.max_region
+        for r, rel, po, ln in split_by_regions(offset, len(data),
+                                               ino.region_size):
+            ctx.txn.commute("regions", region_key(inode_id, r),
+                            AppendExtents([full.sub(po, ln).at(rel)]))
+            max_r = max(max_r, r)
+        self._bump(ctx, inode_id, op, max_region=max_r)
+        self.stats.logical_bytes_written += len(data)
+        return len(data)
+
+    def _paste_at(self, ctx: _Ctx, inode_id: int, offset: int,
+                  extents: Sequence[Extent]) -> int:
+        """Overlay existing slices at ``offset`` — pure metadata, no I/O.
+
+        Pieces are grouped per region and queued as ONE AppendExtents per
+        region: queueing them one-by-one made the commute-coalescing path
+        rebuild its extent tuple per piece — O(n²) for a bulk ``pastev``.
+        Cursor order is preserved inside each group, so overlay precedence
+        is identical."""
+        ino = self._inode(ctx, inode_id)
+        cursor = offset
+        max_r = ino.max_region
+        per_region: dict[int, list[Extent]] = {}
+        for e in extents:
+            consumed = 0
+            while consumed < e.length:
+                r = cursor // ino.region_size
+                rel = cursor - r * ino.region_size
+                take = min(e.length - consumed, ino.region_size - rel)
+                per_region.setdefault(r, []).append(
+                    e.sub(consumed, take).at(rel))
+                max_r = max(max_r, r)
+                cursor += take
+                consumed += take
+        for r, pieces in per_region.items():
+            ctx.txn.commute("regions", region_key(inode_id, r),
+                            AppendExtents(pieces))
+        op = _Op("paste_internal", (), {})
+        self._bump(ctx, inode_id, op, max_region=max_r)
+        return cursor - offset
+
+    def _truncate_inode(self, ctx: _Ctx, ino: Inode, length: int) -> None:
+        if length != 0:
+            raise WtfError("only truncate-to-zero is supported")
+        for r in range(ino.max_region + 1):
+            ctx.txn.delete("regions", region_key(ino.inode_id, r))
+        ctx.txn.put("inodes", ino.inode_id,
+                    ino.replace(max_region=-1, mtime=self.time_fn()))

@@ -225,13 +225,33 @@ def slice_range(
     requested range exactly.  This is the read/yank planner: each returned
     extent is either a zero run or a sub-sliced pointer to fetch.
     """
+    return slice_resolved(overlay_cached(entries), start, length)
+
+
+def slice_resolved(
+    resolved: Sequence[Extent], start: int, length: int
+) -> list[Extent]:
+    """``slice_range`` against an already-resolved overlay.
+
+    Vectored ops plan many ranges against the same region; resolving (and
+    cache-hashing) the entry list once per op instead of once per range,
+    and bisecting into the sorted disjoint overlay instead of scanning it,
+    is what keeps a 4096-range ``yankv`` O(n log n) instead of O(n²)."""
     if length <= 0:
         return []
+    import bisect
+
     end = start + length
     out: list[Extent] = []
     cursor = start
-    for ext in overlay_cached(entries):
-        if ext.end <= start or ext.offset >= end:
+    # first extent that can overlap [start, end): the one at or before start
+    i = bisect.bisect_right(resolved, start, key=lambda e: e.offset) - 1
+    if i < 0:
+        i = 0
+    for ext in resolved[i:]:
+        if ext.offset >= end:
+            break
+        if ext.end <= start:
             continue
         lo = max(ext.offset, start)
         hi = min(ext.end, end)
@@ -274,9 +294,9 @@ def split_by_regions(
 # ---------------------------------------------------------------------------
 
 def encode_extents(extents: Sequence[Extent]) -> bytes:
-    import orjson
+    from repro.util import jsonio
 
-    return orjson.dumps([
+    return jsonio.dumps([
         {
             "o": e.offset,
             "l": e.length,
@@ -288,7 +308,7 @@ def encode_extents(extents: Sequence[Extent]) -> bytes:
 
 
 def decode_extents(data: bytes) -> list[Extent]:
-    import orjson
+    from repro.util import jsonio
 
     return [
         Extent(
@@ -296,5 +316,5 @@ def decode_extents(data: bytes) -> list[Extent]:
             length=d["l"],
             ptrs=tuple(SlicePointer(*p) for p in d["p"]),
         )
-        for d in orjson.loads(data)
+        for d in jsonio.loads(data)
     ]

@@ -99,13 +99,20 @@ class DataPipeline:
     # ------------------------------------------------------------- batching
     def _host_batch(self, epoch: int, step: int) -> np.ndarray:
         """This host's rows of global step ``step`` in ``epoch``."""
+        return self._host_batches(epoch, [step])[0]
+
+    def _host_batches(self, epoch: int,
+                      steps: Sequence[int]) -> list[np.ndarray]:
+        """This host's rows for several global steps, fetched as ONE
+        vectored read — the record runs of all steps are planned in a
+        single transaction and their slice fetches batched per server."""
         f = self._ensure_epoch(epoch)
         per_host = self.cfg.global_batch // self.cfg.num_hosts
-        base = step * self.cfg.global_batch + self.cfg.host_id * per_host
-        raw = f.read_records(base, per_host)
-        arr = np.frombuffer(raw, dtype=self.cfg.dtype).reshape(
-            per_host, self.cfg.block_tokens)
-        return arr
+        runs = [(s * self.cfg.global_batch + self.cfg.host_id * per_host,
+                 per_host) for s in steps]
+        raws = f.read_record_runs(runs)
+        return [np.frombuffer(raw, dtype=self.cfg.dtype).reshape(
+                    per_host, self.cfg.block_tokens) for raw in raws]
 
     def __iter__(self) -> Iterator[dict]:
         if self.cfg.prefetch > 0:
@@ -130,16 +137,36 @@ class DataPipeline:
 
     def _prefetching_iter(self) -> Iterator[dict]:
         """Background-thread prefetch: overlaps storage reads with compute
-        (the trainer's step time hides the pipeline's I/O)."""
+        (the trainer's step time hides the pipeline's I/O).  The producer
+        pulls up to ``prefetch`` steps per vectored read, so a prefetch
+        window costs one storage round per server instead of one per
+        step."""
         q: "queue.Queue" = queue.Queue(maxsize=self.cfg.prefetch)
         stop = threading.Event()
 
         def producer():
             try:
-                for item in self._sync_iter():
-                    if stop.is_set():
-                        return
-                    q.put(item)
+                window = max(1, self.cfg.prefetch)
+                while not stop.is_set():
+                    epoch = self.state.epoch
+                    f = self._ensure_epoch(epoch)
+                    spe = f.count // self.cfg.global_batch
+                    step = self.state.step_in_epoch
+                    if step >= spe:
+                        self.state = PipelineState(epoch + 1, 0)
+                        continue
+                    steps = list(range(step, min(step + window, spe)))
+                    for s, blocks in zip(steps,
+                                         self._host_batches(epoch, steps)):
+                        if stop.is_set():
+                            return
+                        self.state = PipelineState(epoch, s + 1)
+                        q.put({
+                            "tokens": blocks[:, :-1],
+                            "labels": blocks[:, 1:],
+                            "epoch": epoch,
+                            "step_in_epoch": s,
+                        })
             except Exception as e:           # surface errors to the consumer
                 q.put(e)
 

@@ -19,15 +19,19 @@ import jax
 import numpy as np
 
 
-def _auto(n):
-    from jax.sharding import AxisType
-    return (AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    try:                      # AxisType landed after jax 0.4.x; Auto is the
+        from jax.sharding import AxisType      # default there anyway
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -35,8 +39,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(1, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_devices(mesh) -> int:

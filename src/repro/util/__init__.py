@@ -1,0 +1,1 @@
+"""Small dependency-free utilities shared across the repro packages."""

@@ -34,11 +34,10 @@ def test_small_mesh_train_and_serve_compile():
         from repro.parallel.sharding import make_rules, tree_shardings
         from repro.train import TrainHyper, abstract_state, \\
             make_train_step, make_serve_step
-        from repro.launch.mesh import _auto
+        from repro.launch.mesh import _make_mesh
         from repro.roofline.hlo_analysis import analyze
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=_auto(2))
+        mesh = _make_mesh((2, 4), ("data", "model"))
         cfg = get_smoke_config("olmoe-1b-7b").replace(max_seq=32)
         model = get_model(cfg)
         rules = make_rules(mesh, **dict(cfg.rules_overrides))
@@ -83,11 +82,10 @@ def test_int8_pod_sync_preserves_mean():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec
-        from repro.launch.mesh import _auto
+        from repro.launch.mesh import _make_mesh
         from repro.train.compression import make_pod_sync
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=_auto(3))
+        mesh = _make_mesh((2, 2, 2), ("pod", "data", "model"))
         sync = make_pod_sync(mesh, compress=True)
         rng = np.random.RandomState(0)
         base = rng.randn(64, 32).astype(np.float32)
