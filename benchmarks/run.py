@@ -24,6 +24,8 @@ BENCHES = {
                      "benchmarks.random_write"),
     "read": ("Figs 11-12 (sequential/random reads)",
              "benchmarks.read_bench"),
+    "write_sched": ("write-path scheduler (scalar vs batched stores)",
+                    "benchmarks.write_bench"),
     "scaling": ("Figs 13-14 (client scaling)", "benchmarks.scaling"),
     "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
     "append": ("§2.5 (concurrent relative appends)",

@@ -1,0 +1,149 @@
+"""Scalar vs. batched write-path comparison — the sibling of ``read_bench``.
+
+The same byte ranges are written twice over identical clusters: once as one
+scalar ``pwrite`` per chunk (one synchronous store round per slice, serially
+per replica — the pre-scheduler pipeline) and once as ``pwritev`` batches
+routed through the write scheduler (``wsched``): per-(server, backing-file)
+grouping, covering coalescing of small chunks, concurrent replica fan-out.
+
+Reported per row, from ``ClientStats`` and the servers' ``StorageStats``:
+
+  * ``store_batches``   — store rounds actually issued (the cost metric);
+  * ``slices_store_coalesced`` — slice creations folded into shared rounds;
+  * ``slices_written`` / ``slices_created`` — server-side logical slices
+    vs. rounds accepted.
+
+The acceptance gauge of the write scheduler: a batched run must issue
+FEWER per-server store round-trips than the scalar run over identical
+chunks (``store_batches`` < scalar ``slices_written``).
+
+Usage: ``python -m benchmarks.write_bench [smoke|quick|full]``.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from .common import (Scale, fmt_bytes, lat_summary, save_result, wtf_cluster,
+                     wtf_io)
+
+WRITE_SIZES = [64 << 10, 256 << 10, 1 << 20]
+VEC_BATCH = 16                       # chunks per pwritev call
+
+
+def _chunks(i: int, file_bytes: int, write_size: int) -> List[bytes]:
+    rng = np.random.RandomState(i)
+    n = max(1, file_bytes // write_size)
+    return [rng.bytes(write_size) for _ in range(n)]
+
+
+def _drive_scalar(cluster, scale, write_size, file_bytes):
+    """One pwrite per chunk — one store round per slice."""
+    clients = [cluster.client() for _ in range(scale.n_clients)]
+    fds = [c.open(f"/w{i}", "w") for i, c in enumerate(clients)]
+    lats: List[List[float]] = [[] for _ in range(scale.n_clients)]
+
+    def work(i):
+        off = 0
+        for chunk in _chunks(i, file_bytes, write_size):
+            t0 = time.perf_counter()
+            clients[i].pwrite(fds[i], chunk, off)
+            lats[i].append(time.perf_counter() - t0)
+            off += len(chunk)
+
+    secs = _run_threads(work, scale.n_clients)
+    return clients, secs, [x for l in lats for x in l]
+
+
+def _drive_batched(cluster, scale, write_size, file_bytes):
+    """The same chunks issued as pwritev batches of VEC_BATCH."""
+    clients = [cluster.client() for _ in range(scale.n_clients)]
+    fds = [c.open(f"/w{i}", "w") for i, c in enumerate(clients)]
+    lats: List[List[float]] = [[] for _ in range(scale.n_clients)]
+
+    def work(i):
+        chunks = _chunks(i, file_bytes, write_size)
+        off = 0
+        for j in range(0, len(chunks), VEC_BATCH):
+            batch = chunks[j:j + VEC_BATCH]
+            t0 = time.perf_counter()
+            clients[i].pwritev(fds[i], batch, off)
+            # amortized per-chunk latency, comparable with the scalar row
+            lats[i].append((time.perf_counter() - t0) / len(batch))
+            off += sum(len(b) for b in batch)
+
+    secs = _run_threads(work, scale.n_clients)
+    return clients, secs, [x for l in lats for x in l]
+
+
+def _run_threads(work, n) -> float:
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def _row_stats(cluster, clients) -> dict:
+    total = cluster.total_stats()
+    return {
+        "store_batches": sum(c.stats.store_batches for c in clients),
+        "slices_store_coalesced": sum(c.stats.slices_store_coalesced
+                                      for c in clients),
+        "degraded_stores": total["degraded_stores"],
+        "slices_written": total["slices_written"],
+        "slices_created": sum(s["slices_created"]
+                              for s in total["servers"].values()),
+        "physical_bytes_written": wtf_io(cluster)["bytes_written"],
+    }
+
+
+def run(scale: Scale) -> dict:
+    out = {"rows": [], "scale": scale.name}
+    file_bytes = scale.total_bytes // scale.n_clients
+    for ws in WRITE_SIZES:
+        if ws > file_bytes:
+            continue
+        logical = max(1, file_bytes // ws) * ws * scale.n_clients
+        row = {"write_size": ws}
+        # scalar pipeline: store_batching off, one pwrite per chunk
+        with wtf_cluster(scale) as cluster:
+            cluster.store_batching = False
+            clients, secs, lats = _drive_scalar(cluster, scale, ws,
+                                                file_bytes)
+            row["wtf"] = {"throughput_mbs": logical / secs / 1e6,
+                          **_row_stats(cluster, clients), **lat_summary(lats)}
+        # batched pipeline: identical chunks through the write scheduler
+        with wtf_cluster(scale) as cluster:
+            clients, secs, lats = _drive_batched(cluster, scale, ws,
+                                                 file_bytes)
+            row["wtf_batched"] = {"throughput_mbs": logical / secs / 1e6,
+                                  **_row_stats(cluster, clients),
+                                  **lat_summary(lats)}
+        row["batched_vs_scalar"] = (row["wtf_batched"]["throughput_mbs"]
+                                    / max(row["wtf"]["throughput_mbs"],
+                                          1e-9))
+        b, s = row["wtf_batched"], row["wtf"]
+        row["rounds_saved"] = s["store_batches"] - b["store_batches"]
+        out["rows"].append(row)
+        print(f"[write] {fmt_bytes(ws)}: scalar "
+              f"{s['throughput_mbs']:.0f} MB/s ({s['store_batches']} store "
+              f"rounds) | batched {b['throughput_mbs']:.0f} MB/s "
+              f"({b['store_batches']} rounds, "
+              f"{b['slices_store_coalesced']} coalesced) | "
+              f"{row['batched_vs_scalar']:.2f}x")
+        assert b["store_batches"] < s["slices_written"], (
+            "write scheduler must issue fewer store round-trips than the "
+            "scalar pipeline writes slices")
+    save_result("write_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))

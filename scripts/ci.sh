@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the full pytest suite plus a smoke run of the read
-# benchmark (exercises the vectored client + batched slice-fetch scheduler
-# end to end and prints the fetch-batch/coalescing counters).
+# Tier-1 CI gate: the full pytest suite plus smoke runs of the read and
+# write benchmarks (exercise the vectored client, the batched slice-fetch
+# scheduler and the write-path store scheduler end to end, printing the
+# fetch/store round and coalescing counters).  The write_bench result JSON
+# (scalar-vs-batched counter summary) is left in benchmarks/results/ for
+# the CI workflow to upload as a build artifact.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
+# includes the write-scheduler, fault-injection and interleaving suites
+# (tests/test_write_sched.py, test_write_interleavings.py,
+# test_fault_tolerance.py)
 python -m pytest -x -q
 
 echo "== smoke: read benchmark (vectored vs scalar) =="
 timeout "${READ_BENCH_TIMEOUT:-300}" python -m benchmarks.read_bench smoke
+
+echo "== smoke: write benchmark (batched vs scalar stores) =="
+timeout "${WRITE_BENCH_TIMEOUT:-300}" python -m benchmarks.write_bench smoke
 
 echo "CI OK"

@@ -18,6 +18,7 @@ from .gc import GarbageCollector
 from .handle import WtfFile
 from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
 from .iosched import SliceScheduler
+from .wsched import StoreRequest, WriteScheduler
 from .metadata import CommutingOp, ListAppend, Transaction, WarpKV
 from .placement import HashRing, stable_hash
 from .slicing import (Extent, SlicePointer, compact, decode_extents,
@@ -27,7 +28,8 @@ from .storage import StorageServer
 
 __all__ = [
     "Cluster", "WtfClient", "WtfTransaction", "WtfFile", "ClientStats",
-    "SliceScheduler", "WarpKV", "StorageServer",
+    "SliceScheduler", "WriteScheduler", "StoreRequest",
+    "WarpKV", "StorageServer",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",
     "Extent", "SlicePointer", "Inode", "RegionData",
     "compact", "overlay", "slice_range", "merge_adjacent",

@@ -38,6 +38,7 @@ from .errors import StorageError
 from .handle import WtfFile  # noqa: F401  (re-export)
 from .inode import DEFAULT_REGION_SIZE
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
+from .wsched import DEFAULT_MAX_COALESCE, StoreRequest, WriteScheduler
 from .metadata import WarpKV
 from .posix_ops import PosixOps
 from .slice_ops import SliceOps
@@ -85,7 +86,19 @@ class Cluster:
     Thread-safe; create one ``WtfClient`` per worker thread on top of it.
     Owns the ``SliceScheduler`` (one per cluster, shared by all clients) so
     batched fetches from every client share one thread pool and one
-    coalescing policy (``fetch_gap_bytes``).
+    coalescing policy (``fetch_gap_bytes``), and its write-side mirror, the
+    ``WriteScheduler`` (``wsched``), which shares the same pool.
+
+    The store pipeline: the client plans every slice creation of an op as a
+    ``StoreRequest``; ``store_slices`` groups them by (replica candidate
+    servers, backing-file hint), packs runs of small requests (at most
+    ``store_coalesce_bytes`` each) into covering stores, issues ONE
+    ``create_slices`` round per (group, replica) — concurrently across
+    distinct servers — and falls back to the next ring owner on
+    ``StorageError`` (§2.9).  ``store_batching=False`` degrades to the
+    scalar one-round-per-slice path (same results, more rounds).  Effects
+    are measured by ``ClientStats.store_batches`` / ``slices_store_coalesced``
+    / ``degraded_stores`` and server-side ``StorageStats.slices_written``.
     """
 
     def __init__(self, n_servers: int = 4, data_dir: str = "/tmp/wtf",
@@ -94,7 +107,9 @@ class Cluster:
                  coordinator_replicas: int = 3,
                  num_backing_files: int = 8,
                  fetch_gap_bytes: int = DEFAULT_MAX_GAP,
-                 fetch_workers: Optional[int] = None):
+                 fetch_workers: Optional[int] = None,
+                 store_coalesce_bytes: int = DEFAULT_MAX_COALESCE,
+                 store_batching: bool = True):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -121,6 +136,10 @@ class Cluster:
             max_workers=(fetch_workers if fetch_workers is not None
                          else min(8, max(1, n_servers))),
             max_gap=fetch_gap_bytes)
+        self.store_batching = store_batching
+        self.wsched = WriteScheduler(self, self.scheduler,
+                                     max_coalesce=store_coalesce_bytes)
+        self.degraded_stores = 0     # replica sets that came up short (§2.9)
         self._root_client = WtfClient(self, client_id=0)
         self._root_client.mkfs()
 
@@ -169,9 +188,35 @@ class Cluster:
                 ptrs.append(srv.create_slice(data, locality_hint=hint))
             except StorageError:
                 self._on_server_error(sid)
-        if len(ptrs) < min(want, 1):
+        if not ptrs:
             raise StorageError("no storage server could accept the slice")
+        if len(ptrs) < want:
+            # Under-replicated, not failed: the write stays available, but
+            # the shortfall must never be silent (§2.9).
+            self.note_degraded_stores(1)
         return tuple(ptrs)
+
+    def store_slices(self, requests: Sequence[StoreRequest],
+                     stats=None) -> dict:
+        """Batched stores through the write scheduler (see class docstring);
+        ``store_batching=False`` falls back to one scalar round per request
+        so benchmarks/tests can compare the two pipelines like for like."""
+        if self.store_batching:
+            return self.wsched.store_many(requests, stats=stats)
+        out = {}
+        for r in requests:
+            ptrs = self.store_slice(r.data, r.placement_key, r.hint)
+            out[r.key] = ptrs
+            if stats is not None:
+                stats.store_batches += len(ptrs)
+                stats.data_bytes_written += len(r.data) * len(ptrs)
+                if len(ptrs) < self.replication:
+                    stats.degraded_stores += 1
+        return out
+
+    def note_degraded_stores(self, n: int) -> None:
+        with self._lock:
+            self.degraded_stores += n
 
     def fetch_slice(self, ptrs: Sequence[SlicePointer]) -> bytes:
         """Read any replica; fail over across them (§2.9)."""
@@ -207,6 +252,9 @@ class Cluster:
             s["bytes_read"] for s in agg["servers"].values())
         agg["slices_read"] = sum(
             s["slices_read"] for s in agg["servers"].values())
+        agg["slices_written"] = sum(
+            s["slices_written"] for s in agg["servers"].values())
+        agg["degraded_stores"] = self.degraded_stores
         return agg
 
     def reset_io_stats(self) -> None:
@@ -214,6 +262,8 @@ class Cluster:
 
         for s in self.servers.values():
             s.stats = StorageStats()
+        with self._lock:
+            self.degraded_stores = 0
 
     def close(self) -> None:
         self.scheduler.close()

@@ -54,7 +54,11 @@ class ClientStats:
     ``fetch_batches`` / ``slices_coalesced`` measure the batched slice-fetch
     scheduler (``iosched``): each batch is one storage-server round, and each
     coalesced slice is a pointer dereference the scheduler folded into an
-    adjacent one instead of issuing separately.
+    adjacent one instead of issuing separately.  ``store_batches`` /
+    ``slices_store_coalesced`` are the write-side mirror (``wsched``): store
+    rounds issued vs. slice creations folded into a shared round.
+    ``degraded_stores`` counts stores that achieved fewer than
+    ``replication`` replicas (available but under-replicated, §2.9).
     """
 
     data_bytes_written: int = 0      # bytes physically sent to storage servers
@@ -63,8 +67,11 @@ class ClientStats:
     logical_bytes_read: int = 0      # bytes the app asked to read/yank
     txn_retries: int = 0
     txn_aborts: int = 0
-    fetch_batches: int = 0           # storage-server rounds issued
+    fetch_batches: int = 0           # storage-server rounds issued (reads)
     slices_coalesced: int = 0        # pointer fetches saved by coalescing
+    store_batches: int = 0           # storage-server rounds issued (writes)
+    slices_store_coalesced: int = 0  # slice creations saved by coalescing
+    degraded_stores: int = 0         # stores with fewer replicas than asked
     vectored_ops: int = 0            # readv/writev/yankv/pastev batches run
 
     def snapshot(self) -> dict:

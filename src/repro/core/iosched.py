@@ -118,6 +118,12 @@ class SliceScheduler:
                         thread_name_prefix="wtf-iosched")
         return self._pool
 
+    def pool(self) -> ThreadPoolExecutor:
+        """The cluster's shared data-plane pool (lazily created).  The
+        write scheduler (``wsched``) fans its store rounds out on this same
+        pool, so one executor serves both directions of the data plane."""
+        return self._pool_get()
+
     def close(self) -> None:
         with self._pool_lock:
             if self._pool is not None:

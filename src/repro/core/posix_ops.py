@@ -13,8 +13,10 @@ Vectored surface (the handle-based I/O redesign):
     parallel.  Positional: the fd offset does not move.
   * ``preadv(fd, sizes, offset)`` — POSIX flavor: consecutive chunks
     starting at ``offset``.
-  * ``writev(fd, chunks)``  — gather-write at the fd offset; the whole batch
-    becomes ONE slice on one server instead of one slice per chunk.
+  * ``writev(fd, chunks)``  — gather-write at the fd offset; all chunk
+    stores are planned first and dispatched through the write scheduler
+    (``wsched``): chunks within one region coalesce into a single covering
+    store, regions fan out across distinct servers in parallel.
   * ``pwritev(fd, chunks, offset)`` — positional gather-write.
 
 Each vectored call executes as a single logged op inside one transaction, so
@@ -111,9 +113,10 @@ class PosixOps:
 
     def writev(self, fd: int, chunks: Sequence[bytes]) -> int:
         """Gather-write ``chunks`` at the fd offset as one atomic batch;
-        advances the offset and returns the total byte count.  The batch
-        becomes a single slice — one storage round instead of one per
-        chunk."""
+        advances the offset and returns the total byte count.  Stores are
+        planned for the whole batch before dispatch: chunks in one region
+        coalesce into a single covering store (one round instead of one per
+        chunk), chunks in different regions store in parallel."""
         return self._run("writev", fd, tuple(bytes(c) for c in chunks))
 
     def pwritev(self, fd: int, chunks: Sequence[bytes],
@@ -257,8 +260,7 @@ class PosixOps:
     def _op_writev(self, ctx: _Ctx, op: _Op, fd: int,
                    chunks: Tuple[bytes, ...]) -> int:
         f = self._get_fd(fd)
-        n = self._write_at(ctx, op, f.inode_id, f.offset,
-                           b"".join(chunks), key="w")
+        n = self._writev_at(ctx, op, f.inode_id, f.offset, chunks, key="wv")
         f.offset += n
         self.stats.vectored_ops += 1
         return n
@@ -266,8 +268,7 @@ class PosixOps:
     def _op_pwritev(self, ctx: _Ctx, op: _Op, fd: int,
                     chunks: Tuple[bytes, ...], offset: int) -> int:
         f = self._get_fd(fd)
-        n = self._write_at(ctx, op, f.inode_id, offset,
-                           b"".join(chunks), key="w")
+        n = self._writev_at(ctx, op, f.inode_id, offset, chunks, key="wv")
         self.stats.vectored_ops += 1
         return n
 

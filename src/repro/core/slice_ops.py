@@ -12,7 +12,9 @@ Public surface (Table 1 plus the vectored extensions):
 This module also owns the shared data-plane engine used by the POSIX layer:
 range planning (``_plan_range``), batched fetching through the
 ``iosched.SliceScheduler`` (``_fetch``/``_fetch_many``), slice creation
-(``_data_slice``), and the write/paste engines (``_write_at``/``_paste_at``).
+(``_data_slice`` scalar, ``_data_slices`` batched through the
+``wsched.WriteScheduler``), and the write/paste engines
+(``_write_at``/``_writev_at``/``_paste_at``).
 Writers create slices on storage servers *before* their metadata commits, so
 any transaction that can observe a slice pointer can safely dereference it —
 the cornerstone invariant of the design (§2.1).
@@ -27,6 +29,7 @@ from .inode import AppendExtents, BumpInode, Inode, RegionData, region_key
 from .placement import region_placement_key, stable_hash
 from .slicing import (Extent, decode_extents, merge_adjacent, overlay_cached,
                       shift, slice_range, slice_resolved, split_by_regions)
+from .wsched import StoreRequest
 
 
 class SliceOps:
@@ -308,9 +311,66 @@ class SliceOps:
         ptrs = self.cluster.store_slice(
             data, region_placement_key(ino.inode_id, region), hint)
         self.stats.data_bytes_written += len(data) * len(ptrs)
+        self.stats.store_batches += len(ptrs)   # one round per replica store
+        if len(ptrs) < self.cluster.replication:
+            self.stats.degraded_stores += 1
         ext = Extent(0, len(data), ptrs)
         op.artifacts[key] = ext
         return ext
+
+    def _data_slices(self, ctx: _Ctx, op: _Op, ino: Inode,
+                     pieces: Sequence[Tuple[int, bytes]],
+                     key: str) -> Tuple[Extent, ...]:
+        """Create (replicated) slices for many ``(region, data)`` pieces as
+        ONE scheduled store batch (``wsched``): all stores are planned up
+        front, grouped per (server, backing file), small adjacent pieces
+        coalesce into covering stores, and distinct servers are written
+        concurrently.  Created on first execution only; replays reuse the
+        recorded extents verbatim, exactly like ``_data_slice`` (§2.6).
+        """
+        cached = op.artifacts.get(key)
+        if cached is not None:
+            return cached
+        requests = []
+        for i, (region, data) in enumerate(pieces):
+            pk = region_placement_key(ino.inode_id, region)
+            requests.append(StoreRequest(i, data, pk, stable_hash(pk)))
+        ptrs = self.cluster.store_slices(requests, stats=self.stats)
+        exts = tuple(Extent(0, len(data), ptrs[i])
+                     for i, (_, data) in enumerate(pieces))
+        op.artifacts[key] = exts
+        return exts
+
+    def _writev_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
+                   chunks: Sequence[bytes], key: str) -> int:
+        """Vectored write engine: plan one store per (chunk, region) piece,
+        dispatch the whole plan through the write scheduler, then queue each
+        region's extents as one AppendExtents.  Pieces of one region share a
+        placement group, so a many-chunk gather-write still lands as a
+        single covering slice per region (one store round), while a write
+        spanning regions fans out across the ring in parallel."""
+        ino = self._inode(ctx, inode_id)
+        pieces: list[Tuple[int, int, bytes]] = []   # (region, rel, data)
+        cursor = offset
+        for chunk in chunks:
+            for r, rel, po, ln in split_by_regions(cursor, len(chunk),
+                                                   ino.region_size):
+                pieces.append((r, rel, chunk[po:po + ln]))
+            cursor += len(chunk)
+        exts = self._data_slices(ctx, op, ino,
+                                 [(r, d) for r, _, d in pieces], key)
+        max_r = ino.max_region
+        per_region: dict[int, list[Extent]] = {}
+        for (r, rel, _), ext in zip(pieces, exts):
+            per_region.setdefault(r, []).append(ext.at(rel))
+            max_r = max(max_r, r)
+        for r, items in per_region.items():
+            ctx.txn.commute("regions", region_key(inode_id, r),
+                            AppendExtents(items))
+        self._bump(ctx, inode_id, op, max_region=max_r)
+        total = cursor - offset
+        self.stats.logical_bytes_written += total
+        return total
 
     def _write_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
                   data: bytes, key: str) -> int:

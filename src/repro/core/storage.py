@@ -23,7 +23,7 @@ from __future__ import annotations
 import os
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .errors import StorageError
 from .placement import stable_hash
@@ -32,11 +32,18 @@ from .slicing import SlicePointer
 
 @dataclass
 class StorageStats:
-    """I/O accounting — the primary hardware-independent metric (Table 2)."""
+    """I/O accounting — the primary hardware-independent metric (Table 2).
+
+    ``slices_created`` counts store *rounds* accepted (one ``create_slice``
+    or ``create_slices`` call each); ``slices_written`` counts the logical
+    slices those rounds carried, so ``slices_written - slices_created`` is
+    the number of round trips the write-path scheduler saved this server.
+    """
 
     bytes_written: int = 0
     bytes_read: int = 0
     slices_created: int = 0
+    slices_written: int = 0
     slices_read: int = 0
     gc_bytes_reclaimed: int = 0
     gc_bytes_rewritten: int = 0
@@ -90,6 +97,18 @@ class _BackingFile:
             self.size += len(data)
             return off
 
+    def append_many(self, parts: Sequence[bytes]) -> int:
+        """Append ``parts`` back-to-back under ONE lock acquisition; returns
+        the offset of the first part.  Parts are contiguous on disk, so the
+        per-part pointers carved from the return value are adjacent —
+        exactly what ``Extent.can_merge`` collapses at the metadata layer."""
+        with self.lock:
+            off = self.size
+            self._fh.seek(off)
+            self._fh.write(b"".join(parts))
+            self.size += sum(len(p) for p in parts)
+            return off
+
     def read(self, offset: int, length: int) -> bytes:
         # Positional read: no shared file-offset state between readers.
         return os.pread(self._fh.fileno(), length, offset)
@@ -136,8 +155,39 @@ class StorageServer:
         off = bf.append(data)
         self.stats.bytes_written += len(data)
         self.stats.slices_created += 1
+        self.stats.slices_written += 1
         name = os.path.basename(bf.path)
         return SlicePointer(self.server_id, name, off, len(data))
+
+    def create_slices(self, parts: Sequence[bytes],
+                      locality_hint: Optional[int] = None
+                      ) -> List[SlicePointer]:
+        """Vectored store: write ``parts`` contiguously in ONE round.
+
+        The write-path scheduler's server-side half (§2.7, §2.9): all parts
+        land back-to-back in a single backing file under one lock, so one
+        round trip durably stores the whole batch and the returned per-part
+        pointers are disk-adjacent (the metadata layer can merge them back
+        into a single covering pointer).  Pointers are returned only after
+        every byte is durable — the §2.1 invariant holds batch-wide.
+        """
+        if not self.alive:
+            raise StorageError(f"server {self.server_id} is down")
+        if not parts:
+            return []
+        bf = self._pick_backing_file(locality_hint)
+        base = bf.append_many(parts)
+        total = sum(len(p) for p in parts)
+        self.stats.bytes_written += total
+        self.stats.slices_created += 1
+        self.stats.slices_written += len(parts)
+        name = os.path.basename(bf.path)
+        out: List[SlicePointer] = []
+        off = base
+        for p in parts:
+            out.append(SlicePointer(self.server_id, name, off, len(p)))
+            off += len(p)
+        return out
 
     def retrieve_slice(self, ptr: SlicePointer) -> bytes:
         """Follow a pointer: open the named file, read, return (§2.2)."""

@@ -1,0 +1,153 @@
+"""Deterministic fault injection for tests and benchmarks.
+
+The §2.9 replication and §2.6 transactional-retry guarantees only matter if
+failures can strike *mid-operation*: between planning a batch and executing
+it, between one replica's store and the next, between an op body and its
+commit.  The wrappers here make those windows scriptable:
+
+  * ``FlakyStorageServer`` proxies a real ``StorageServer`` and fails the
+    Nth call of a chosen API (``create_slice``/``create_slices``/
+    ``retrieve_slice``) with ``StorageError`` — transiently, or crashing
+    the server for good (``crash=True``) the way a real node dies.
+  * ``FlakyKV`` proxies ``WarpKV`` and fails the Nth *commit* with
+    ``KVConflict``, driving the §2.6 replay layer deterministically (unlike
+    ``WarpKV.inject_aborts``, which always fails the very next commits).
+
+Both wrappers delegate everything else via ``__getattr__``, so they can be
+installed in place (``cluster.servers[sid] = FlakyStorageServer(...)``,
+``cluster.kv = FlakyKV(...)``) and the cluster keeps working untouched.
+Counters are 1-based: ``fail_on={"create_slices": {1}}`` fails the first
+call.  Clients capture ``cluster.kv`` at construction — install ``FlakyKV``
+*before* creating the clients that should feel it.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Optional, Set
+
+from .errors import KVConflict, StorageError
+
+_FAILABLE_SERVER_OPS = ("create_slice", "create_slices", "retrieve_slice")
+
+
+class FlakyStorageServer:
+    """Proxy around a ``StorageServer`` that fails chosen calls by number.
+
+    ``fail_on`` maps an op name to the set of 1-based call numbers that
+    raise ``StorageError``; with ``crash=True`` the first injected failure
+    also crashes the underlying server (it stays down until
+    ``inner.recover()``), modelling a node death rather than a transient
+    refusal.  Thread-safe: the write scheduler hits servers from a pool.
+    """
+
+    _LOCAL_ATTRS = frozenset(
+        {"_inner", "_fail_on", "_crash", "_lock", "calls", "injected"})
+
+    def __init__(self, inner, fail_on: Dict[str, Iterable[int]],
+                 crash: bool = False):
+        self._inner = inner
+        self._fail_on: Dict[str, Set[int]] = {
+            op: set(ns) for op, ns in fail_on.items()}
+        for op in self._fail_on:
+            if op not in _FAILABLE_SERVER_OPS:
+                raise ValueError(f"cannot inject failures into {op!r}")
+        self._crash = crash
+        self._lock = threading.Lock()
+        self.calls: Dict[str, int] = {op: 0 for op in _FAILABLE_SERVER_OPS}
+        self.injected: int = 0
+
+    def _maybe_fail(self, op: str) -> None:
+        with self._lock:
+            self.calls[op] += 1
+            n = self.calls[op]
+            hit = n in self._fail_on.get(op, ())
+            if hit:
+                self.injected += 1
+        if hit:
+            if self._crash:
+                self._inner.crash()
+            raise StorageError(
+                f"injected failure: {op} call #{n} on server "
+                f"{self._inner.server_id}")
+
+    # -- intercepted API ---------------------------------------------------
+    def create_slice(self, data, locality_hint=None):
+        self._maybe_fail("create_slice")
+        return self._inner.create_slice(data, locality_hint)
+
+    def create_slices(self, parts, locality_hint=None):
+        self._maybe_fail("create_slices")
+        return self._inner.create_slices(parts, locality_hint)
+
+    def retrieve_slice(self, ptr):
+        self._maybe_fail("retrieve_slice")
+        return self._inner.retrieve_slice(ptr)
+
+    # -- everything else passes through ------------------------------------
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def __setattr__(self, name, value):
+        # Writes to server state (e.g. ``reset_io_stats`` assigning a fresh
+        # ``stats``) must land on the wrapped server, not shadow it here.
+        if name in type(self)._LOCAL_ATTRS:
+            object.__setattr__(self, name, value)
+        else:
+            setattr(self._inner, name, value)
+
+
+def make_flaky_server(cluster, server_id: int,
+                      fail_on: Dict[str, Iterable[int]],
+                      crash: bool = False) -> FlakyStorageServer:
+    """Wrap ``cluster.servers[server_id]`` in place; returns the wrapper."""
+    flaky = FlakyStorageServer(cluster.servers[server_id], fail_on,
+                               crash=crash)
+    cluster.servers[server_id] = flaky
+    return flaky
+
+
+class FlakyKV:
+    """Proxy around ``WarpKV`` that fails chosen commits by number.
+
+    ``fail_commits`` holds 1-based commit-attempt numbers (counted across
+    the proxy) that raise ``KVConflict`` *before* the real commit runs —
+    the filesystem is untouched, exactly the HyperDex-abort contract the
+    §2.6 replay layer assumes.  Transactions begun through the proxy route
+    their commits here; install with ``cluster.kv = FlakyKV(cluster.kv)``
+    before creating clients.
+    """
+
+    def __init__(self, inner, fail_commits: Iterable[int] = ()):
+        self._inner = inner
+        self._fail_commits = set(fail_commits)
+        self._lock = threading.Lock()
+        self.commit_calls: int = 0
+        self.injected: int = 0
+
+    def begin(self):
+        txn = self._inner.begin()
+        txn._kv = self           # commits route through _commit below
+        return txn
+
+    def _commit(self, txn) -> None:
+        with self._lock:
+            self.commit_calls += 1
+            hit = self.commit_calls in self._fail_commits
+            if hit:
+                self.injected += 1
+        if hit:
+            self._inner.stats.aborts += 1
+            raise KVConflict(
+                f"injected abort: commit #{self.commit_calls}")
+        self._inner._commit(txn)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def make_flaky_kv(cluster, fail_commits: Iterable[int]) -> FlakyKV:
+    """Swap ``cluster.kv`` for a ``FlakyKV``; affects clients created
+    AFTER this call (clients capture ``cluster.kv`` at construction)."""
+    flaky = FlakyKV(cluster.kv, fail_commits)
+    cluster.kv = flaky
+    return flaky

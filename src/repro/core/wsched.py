@@ -1,0 +1,244 @@
+"""Write-path store scheduler — the client's data-plane write engine.
+
+PR 1 made the read path batched and scheduled (``iosched``); this module is
+its write-side mirror.  The scalar client pays one synchronous
+``Cluster.store_slice`` round per slice, serially per replica.  Here a
+vectored op *plans* all its stores first (``StoreRequest``), and the
+scheduler then:
+
+  1. **Groups by target.**  Requests are grouped by (replica-candidate
+     servers, backing-file hint) — the placement ring (§2.7) maps a
+     metadata region to one server and one backing file, so all writes for
+     a region share a group and land sequentially on one disk.
+  2. **Coalesces.**  Within a group, runs of small requests (each at most
+     ``max_coalesce`` bytes, mirroring the read side's 32 KiB gap policy)
+     are packed into a single covering store; per-request pointers are
+     carved back out with ``SlicePointer.sub`` arithmetic.  The remaining
+     units still travel in ONE ``create_slices`` round per server — parts
+     are appended contiguously under one backing-file lock.
+  3. **Fans out.**  Replica creations for *distinct* servers (and groups
+     targeting different servers) are issued concurrently on the shared
+     cluster thread pool, so a multi-region write completes in one
+     server's latency, not the sum, and replication costs max — not sum —
+     of the replica round trips.
+
+Failure handling (§2.9): each (group, replica) task walks the ring owners;
+on ``StorageError`` it marks the server failed and falls back to the next
+owner, never reusing a server another replica of the same data already
+landed on.  A store that achieves at least one but fewer than
+``replication`` replicas is recorded as *degraded* (never silent); zero
+replicas raises ``StorageError``.
+
+Accounting: ``ClientStats.store_batches`` counts server store rounds
+actually issued and ``slices_store_coalesced`` counts the logical stores
+folded into those rounds — the measurable effectiveness of the scheduler.
+Server-side, each round bumps ``StorageStats.slices_created`` once and
+``slices_written`` per logical slice carried.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .errors import StorageError
+from .slicing import SlicePointer
+
+# Requests at most this large are packed with their neighbours into one
+# covering store (one slice on disk, per-request sub-pointers).  Mirrors the
+# read scheduler's DEFAULT_MAX_GAP: a covering store of small writes costs
+# nothing extra, while large writes keep their own pointers so GC and
+# compaction see them individually.
+DEFAULT_MAX_COALESCE = 32 << 10
+
+
+class StoreRequest:
+    """One planned slice creation: ``data`` placed for ``placement_key``
+    (ring lookup) with ``hint`` (server-local backing-file lookup).  ``key``
+    identifies the request in the result map."""
+
+    __slots__ = ("key", "data", "placement_key", "hint")
+
+    def __init__(self, key: Any, data: bytes, placement_key: Any, hint: int):
+        self.key = key
+        self.data = data
+        self.placement_key = placement_key
+        self.hint = hint
+
+
+class _Unit:
+    """One part of a ``create_slices`` round: either a single large request
+    or a covering pack of small adjacent ones.  ``spans`` maps each packed
+    request to its byte range within the unit."""
+
+    __slots__ = ("data", "spans")
+
+    def __init__(self, data: bytes, spans: List[Tuple[StoreRequest, int, int]]):
+        self.data = data
+        self.spans = spans
+
+
+class _StoreGroup:
+    """All requests bound for one (replica candidate list, backing file).
+
+    Owns the replica-placement state shared by this group's per-replica
+    tasks: ``used`` servers (replicas must stay distinct, §2.9) guarded by
+    ``lock`` because the tasks run concurrently on the pool.
+    """
+
+    __slots__ = ("candidates", "hint", "requests", "units", "used", "lock")
+
+    def __init__(self, candidates: Tuple[int, ...], hint: int):
+        self.candidates = candidates
+        self.hint = hint
+        self.requests: List[StoreRequest] = []
+        self.units: List[_Unit] = []
+        self.used: set[int] = set()
+        self.lock = threading.Lock()
+
+    def pack(self, max_coalesce: int) -> None:
+        """Pack runs of small requests into covering units (plan order is
+        preserved, so carved pointers stay disk-adjacent in file order)."""
+        run: List[StoreRequest] = []
+
+        def flush() -> None:
+            if not run:
+                return
+            off, spans = 0, []
+            for r in run:
+                spans.append((r, off, len(r.data)))
+                off += len(r.data)
+            self.units.append(_Unit(b"".join(r.data for r in run),
+                                    list(spans)))
+            run.clear()
+
+        for r in self.requests:
+            if len(r.data) > max_coalesce:
+                flush()
+                self.units.append(_Unit(r.data, [(r, 0, len(r.data))]))
+            else:
+                run.append(r)
+        flush()
+
+
+def plan_store_groups(requests: Sequence[StoreRequest], ring, n_servers: int,
+                      max_coalesce: int = DEFAULT_MAX_COALESCE
+                      ) -> List[_StoreGroup]:
+    """Group planned stores by (replica candidates, hint) and pack each
+    group's small runs into covering units."""
+    groups: Dict[Tuple[Tuple[int, ...], int], _StoreGroup] = {}
+    for r in requests:
+        cands = tuple(ring.owners(r.placement_key, n_servers))
+        g = groups.get((cands, r.hint))
+        if g is None:
+            g = groups[(cands, r.hint)] = _StoreGroup(cands, r.hint)
+        g.requests.append(r)
+    out = list(groups.values())
+    for g in out:
+        g.pack(max_coalesce)
+    return out
+
+
+class WriteScheduler:
+    """Executes batched slice stores against a ``Cluster``.
+
+    One scheduler per cluster, shared by all clients; it borrows the read
+    scheduler's thread pool (one data-plane pool per cluster).
+    ``store_many`` is the entry point; the client's ``_data_slices`` routes
+    every vectored write through it so batched and scalar stores share one
+    accounting scheme.
+    """
+
+    def __init__(self, cluster, io_scheduler,
+                 max_coalesce: int = DEFAULT_MAX_COALESCE):
+        self.cluster = cluster
+        self.io_scheduler = io_scheduler
+        self.max_coalesce = max_coalesce
+
+    # -------------------------------------------------------------- store
+    def store_many(self, requests: Sequence[StoreRequest],
+                   stats=None) -> Dict[Any, Tuple[SlicePointer, ...]]:
+        """Store every request with ``cluster.replication`` replicas.
+
+        Returns ``{request.key: (ptr per replica, ...)}``.  All data is
+        durable on every returned pointer's server before this returns —
+        metadata queued afterwards preserves the §2.1 invariant for the
+        whole batch.
+        """
+        if not requests:
+            return {}
+        cluster = self.cluster
+        want = max(1, cluster.replication)
+        groups = plan_store_groups(requests, cluster._ring,
+                                   len(cluster.servers), self.max_coalesce)
+        tasks = [(g, rank) for g in groups for rank in range(want)]
+        if len(tasks) > 1:
+            results = list(self.io_scheduler.pool().map(
+                self._run_replica, tasks))
+        else:
+            results = [self._run_replica(tasks[0])]
+
+        # Collate per-replica pointer lists back into per-request tuples.
+        by_group: Dict[int, List[Optional[List[SlicePointer]]]] = {}
+        rounds = physical = coalesced = 0
+        for (g, rank), res in zip(tasks, results):
+            by_group.setdefault(id(g), []).append(res)
+            if res is not None:
+                rounds += 1
+                physical += sum(len(r.data) for r in g.requests)
+                coalesced += len(g.requests) - 1
+        out: Dict[Any, Tuple[SlicePointer, ...]] = {}
+        degraded = 0
+        for g in groups:
+            replicas = [r for r in by_group[id(g)] if r is not None]
+            if not replicas:
+                raise StorageError(
+                    "no storage server could accept the slice batch")
+            if len(replicas) < want:
+                # per-request unit, matching the scalar pipeline: every
+                # slice in the short group is under-replicated
+                degraded += len(g.requests)
+            for i, req in enumerate(g.requests):
+                out[req.key] = tuple(rep[i] for rep in replicas)
+        if degraded:
+            cluster.note_degraded_stores(degraded)
+        if stats is not None:
+            stats.store_batches += rounds
+            stats.slices_store_coalesced += coalesced
+            stats.data_bytes_written += physical
+            stats.degraded_stores += degraded
+        return out
+
+    # ----------------------------------------------------------- internals
+    def _run_replica(self, task) -> Optional[List[SlicePointer]]:
+        """One (group, replica) store round with ring-owner fallback.
+
+        Walks the group's candidate servers from the replica's preferred
+        rank; a ``StorageError`` marks the server failed (§2.9) and falls
+        back to the next owner not already holding a replica of this
+        group.  Returns per-request pointers, or ``None`` if every
+        candidate refused (the caller decides degraded vs. fatal).
+        """
+        g, rank = task
+        n = len(g.candidates)
+        for i in range(n):
+            sid = g.candidates[(rank + i) % n]
+            with g.lock:
+                if sid in g.used:
+                    continue
+                srv = self.cluster.servers.get(sid)
+                if srv is None or not srv.alive:
+                    continue
+                g.used.add(sid)
+            try:
+                ptrs = srv.create_slices([u.data for u in g.units], g.hint)
+            except StorageError:
+                with g.lock:
+                    g.used.discard(sid)
+                self.cluster._on_server_error(sid)
+                continue
+            out: List[SlicePointer] = []
+            for unit, uptr in zip(g.units, ptrs):
+                for req, start, length in unit.spans:
+                    out.append(uptr.sub(start, length))
+            return out
+        return None

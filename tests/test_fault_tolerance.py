@@ -1,8 +1,11 @@
-"""Fault tolerance: coordinator quorum, slice replication, failover (§2.9)."""
+"""Fault tolerance: coordinator quorum, slice replication, failover (§2.9),
+plus deterministic fault injection (``repro.core.testing``) driving the
+batched read scheduler's per-extent failover and the §2.6 replay layer."""
 import pytest
 
 from repro.core import (Cluster, NoQuorum, ReplicatedCoordinator,
-                        StorageError)
+                        StorageError, TransactionAborted)
+from repro.core.testing import make_flaky_kv, make_flaky_server
 
 
 # ------------------------------------------------------------- coordinator
@@ -114,6 +117,95 @@ def test_failed_server_recovery_rejoins_ring(cluster):
     assert 1 in cluster._ring.servers
     make_file(fs, "/b", b"y" * 1000)
     assert read_file(fs, "/b") == b"y" * 1000
+
+
+# ----------------------------------------------------- injected faults (read)
+def test_read_scheduler_degrades_to_per_extent_on_covering_failure(tmp_path):
+    """A covering retrieval that fails mid-batch must fall back to
+    per-extent fetches with full replica failover — batching never reduces
+    availability (iosched docstring contract)."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "pe"), replication=1,
+                region_size=1 << 20)
+    fs = c.client()
+    payload = bytes(i & 0xFF for i in range(128 * 1024))
+    with fs.open_file("/pe", "w") as f:
+        f.write(payload)
+    # every slice of the file lives on one server; fail exactly the FIRST
+    # retrieve (the covering fetch), so only the degraded path can answer
+    sid = c.kv.get("regions", (fs.stat("/pe")["inode"], 0)) \
+        .entries[0].ptrs[0].server_id
+    flaky = make_flaky_server(c, sid, {"retrieve_slice": {1}})
+    ranges = [(i * 16 * 1024, 4096) for i in range(8)]
+    with fs.open_file("/pe") as f:
+        got = f.readv(ranges)
+    assert got == [payload[o:o + n] for o, n in ranges]
+    assert flaky.injected == 1
+    assert flaky.calls["retrieve_slice"] > 1, \
+        "degraded path must have re-fetched per extent"
+    c.close()
+
+
+def test_read_failover_to_replica_on_injected_error(tmp_path):
+    """Transient retrieve failures on one replica fail over to the other
+    (§2.9) without surfacing to the application."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "ro"), replication=2,
+                region_size=1 << 20)
+    fs = c.client()
+    with fs.open_file("/ro", "w") as f:
+        f.write(b"replicated-read" * 100)
+    first = c.kv.get("regions", (fs.stat("/ro")["inode"], 0)) \
+        .entries[0].ptrs[0].server_id
+    flaky = make_flaky_server(c, first, {"retrieve_slice": {1, 2, 3}})
+    with fs.open_file("/ro") as f:
+        assert f.read() == b"replicated-read" * 100
+    assert flaky.injected >= 1
+    c.close()
+
+
+# ------------------------------------------------ injected faults (KV commit)
+def test_injected_commit_failure_replays_invisibly(tmp_path):
+    """FlakyKV fails the Nth commit deterministically; with no concurrent
+    interference the §2.6 replay must commit with identical outcomes."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "kv"), replication=1,
+                region_size=64 * 1024)
+    flaky = make_flaky_kv(c, fail_commits={3})
+    fs = c.client()
+    with fs.open_file("/f", "w") as f:      # commits #1 (open) and #2 (write)
+        f.write(b"one")
+    with fs.transaction():                  # commit #3 fails → replay
+        fd = fs.open("/f", "rw")
+        fs.seek(fd, 0, 2)
+        fs.write(fd, b"-two")
+    assert flaky.injected == 1
+    assert fs.stats.txn_retries >= 1
+    with fs.open_file("/f") as f:
+        assert f.read() == b"one-two"
+    c.close()
+
+
+def test_replay_divergence_aborts_to_application(tmp_path):
+    """If the replay of an injected-abort commit observes different bytes
+    than the application already saw, the transaction must abort — the
+    divergence is application-visible (§2.6)."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "dv"), replication=1,
+                region_size=64 * 1024)
+    flaky = make_flaky_kv(c, fail_commits={5})
+    fs = c.client()
+    other = c.client()
+    with fs.open_file("/d", "w") as f:      # commits #1, #2
+        f.write(b"AAAA")
+    with pytest.raises(TransactionAborted):
+        with fs.transaction():
+            fd = fs.open("/d", "rw")
+            seen = fs.read(fd, 4)           # app observes 'AAAA'
+            ofd = other.open("/d", "rw")    # commit #3 (open)
+            other.pwrite(ofd, b"BBBB", 0)   # commit #4 changes those bytes
+            other.close(ofd)
+            fs.pwrite(fd, seen[::-1], 0)    # commit #5 injected-fails
+    assert flaky.injected == 1
+    with other.open_file("/d") as f:
+        assert f.read() == b"BBBB", "aborted txn must leave no trace"
+    c.close()
 
 
 def test_unreplicated_cluster_loses_availability(tmp_path):

@@ -1,0 +1,317 @@
+"""Write-path store scheduler (``wsched``) + fault-injection harness.
+
+Covers:
+  * coalescing: a gather-write of N small chunks in one region issues ONE
+    store round per replica (``store_batches``/``slices_store_coalesced``);
+  * fan-out: a write spanning regions stores each region's slice through
+    its own (server, backing-file) group;
+  * replication: batched stores place replicas on distinct servers, fall
+    back to the next ring owner on injected ``StorageError``, and record
+    under-replication in ``degraded_stores`` instead of failing silently;
+  * atomicity: a mid-batch server crash never yields a partially visible
+    vectored write — either every byte commits or none are observable;
+  * replay: the §2.6 op log holds the batch's slice pointers, so a
+    replayed ``pwritev`` re-points its slices instead of re-storing them;
+  * equivalence: ``store_batching=False`` produces identical contents with
+    one round per slice (the scalar pipeline the scheduler replaces).
+"""
+import pytest
+
+from repro.core import Cluster, StorageError, StoreRequest
+from repro.core.testing import make_flaky_kv, make_flaky_server
+from repro.core.wsched import plan_store_groups
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=1,
+                region_size=64 * 1024)
+    yield c
+    c.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return cluster.client()
+
+
+def read_file(fs, path):
+    with fs.open_file(path) as f:
+        return f.read()
+
+
+def region_entries(cluster, fs, path, region=0):
+    ino = fs.stat(path)["inode"]
+    return cluster.kv.get("regions", (ino, region)).entries
+
+
+# ------------------------------------------------------------------ planning
+class _FixedRing:
+    """Stand-in ring: every key owns the same candidate list."""
+
+    def __init__(self, owners):
+        self._owners = list(owners)
+
+    def owners(self, key, n):
+        return self._owners[:n]
+
+
+def test_plan_groups_pack_small_runs_and_isolate_large():
+    reqs = [StoreRequest(0, b"a" * 10, "k", 7),
+            StoreRequest(1, b"b" * 10, "k", 7),
+            StoreRequest(2, b"L" * 100, "k", 7),     # over the threshold
+            StoreRequest(3, b"c" * 10, "k", 7)]
+    [g] = plan_store_groups(reqs, _FixedRing([0, 1]), 2, max_coalesce=64)
+    assert [len(u.spans) for u in g.units] == [2, 1, 1]
+    assert g.units[0].data == b"a" * 10 + b"b" * 10
+    # span order must match request order — pointers are carved from it
+    assert [r.key for u in g.units for r, _, _ in u.spans] == [0, 1, 2, 3]
+
+
+def test_plan_groups_split_by_hint():
+    reqs = [StoreRequest(0, b"x", "k", 1), StoreRequest(1, b"y", "k", 2)]
+    groups = plan_store_groups(reqs, _FixedRing([0]), 1)
+    assert len(groups) == 2, "different backing files must not share a store"
+
+
+# ---------------------------------------------------------------- coalescing
+def test_writev_small_chunks_single_store_round(cluster, fs):
+    with fs.open_file("/w", "w") as f:
+        before = fs.stats.store_batches
+        f.writev([b"a" * 100, b"b" * 100, b"c" * 100, b"d" * 100])
+        assert fs.stats.store_batches - before == 1
+    assert fs.stats.slices_store_coalesced >= 3
+    assert read_file(fs, "/w") == b"a" * 100 + b"b" * 100 + b"c" * 100 \
+        + b"d" * 100
+
+
+def test_carved_pointers_are_disk_adjacent(cluster, fs):
+    with fs.open_file("/adj", "w") as f:
+        f.writev([b"1" * 64, b"2" * 64, b"3" * 64])
+    entries = region_entries(cluster, fs, "/adj")
+    ptrs = [e.ptrs[0] for e in entries]
+    assert len({(p.server_id, p.backing_file) for p in ptrs}) == 1
+    for a, b in zip(ptrs, ptrs[1:]):
+        assert a.offset + a.length == b.offset, \
+            "covering store must lay chunk slices contiguously"
+
+
+def test_server_side_round_accounting(cluster, fs):
+    cluster.reset_io_stats()
+    with fs.open_file("/acct", "w") as f:
+        f.writev([b"q" * 200] * 8)
+    st = cluster.total_stats()
+    created = sum(s["slices_created"] for s in st["servers"].values())
+    # one data round (8 chunks coalesced) + one dirent-append round
+    assert created == 2
+    assert st["slices_written"] >= created
+
+
+# ------------------------------------------------------------------- fan-out
+def test_cross_region_write_fans_out_per_region(cluster, fs):
+    data = bytes(i & 0xFF for i in range(256 * 1024))      # 4 regions
+    with fs.open_file("/fan", "w") as f:
+        before = fs.stats.store_batches
+        f.pwritev([data], 0)
+        assert fs.stats.store_batches - before == 4
+    assert read_file(fs, "/fan") == data
+    servers = {region_entries(cluster, fs, "/fan", r)[0].ptrs[0].server_id
+               for r in range(4)}
+    assert len(servers) > 1, "regions must spread across the ring"
+
+
+# --------------------------------------------------------------- replication
+def test_batched_replicas_land_on_distinct_servers(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path / "r"), replication=2,
+                region_size=64 * 1024)
+    fs = c.client()
+    with fs.open_file("/r", "w") as f:
+        f.writev([b"rep" * 50, b"lic" * 50])
+    for e in region_entries(c, fs, "/r"):
+        assert len(e.ptrs) == 2
+        assert e.ptrs[0].server_id != e.ptrs[1].server_id
+    assert c.degraded_stores == 0
+    c.close()
+
+
+def test_store_fallback_on_injected_failure(cluster, fs):
+    # learn the ring target for (inode, region 0), then make it flaky
+    with fs.open_file("/fb", "w") as f:
+        f.writev([b"probe"])
+    target = region_entries(cluster, fs, "/fb")[0].ptrs[0].server_id
+    flaky = make_flaky_server(cluster, target, {"create_slices": {1}})
+    with fs.open_file("/fb", "rw") as f:
+        f.pwritev([b"X" * 64, b"Y" * 64], 5)
+    assert flaky.injected == 1
+    assert read_file(fs, "/fb") == b"probe" + b"X" * 64 + b"Y" * 64
+    moved = region_entries(cluster, fs, "/fb")[-1].ptrs[0].server_id
+    assert moved != target, "fallback must pick the next ring owner"
+
+
+def test_degraded_replication_is_counted_not_silent(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"), replication=2,
+                region_size=64 * 1024)
+    fs = c.client()
+    c.servers[0].crash()            # dead but still in the ring
+    with fs.open_file("/deg", "w") as f:
+        f.writev([b"only-one-replica" * 10])
+    assert read_file(fs, "/deg") == b"only-one-replica" * 10
+    assert c.degraded_stores >= 1
+    assert fs.stats.degraded_stores >= 1
+    for e in region_entries(c, fs, "/deg"):
+        assert len(e.ptrs) == 1
+    c.close()
+
+
+def test_scalar_store_slice_degraded_counter(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "s"), replication=2,
+                region_size=64 * 1024)
+    fs = c.client()
+    c.servers[1].crash()
+    with fs.open_file("/sc", "w") as f:
+        f.write(b"scalar-write" * 10)          # scalar path: store_slice
+    assert c.degraded_stores >= 1
+    assert c.total_stats()["degraded_stores"] == c.degraded_stores
+    c.close()
+
+
+# ----------------------------------------------------------------- atomicity
+def test_mid_batch_crash_with_fallback_commits_fully(tmp_path):
+    """One server dies mid-batch; the batch must still commit WHOLE."""
+    c = Cluster(n_servers=4, data_dir=str(tmp_path / "mb"), replication=2,
+                region_size=64 * 1024)
+    fs = c.client()
+    with fs.open_file("/mb", "w") as f:
+        f.writev([b"seed"])
+    target = region_entries(c, fs, "/mb")[0].ptrs[0].server_id
+    make_flaky_server(c, target, {"create_slices": {1}}, crash=True)
+    data = bytes(i & 0xFF for i in range(200 * 1024))      # multi-region
+    with fs.open_file("/mb", "rw") as f:
+        f.pwritev([data], 4)
+    assert read_file(fs, "/mb") == b"seed" + data
+    assert not c.servers[target].alive
+    c.close()
+
+
+def test_mid_batch_crash_never_partially_visible(tmp_path):
+    """The acceptance property: if the batch cannot complete, NOTHING of it
+    is observable — no bytes, no size change, no region metadata."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "a"), replication=1,
+                region_size=32 * 1024)
+    fs = c.client()
+    with fs.open_file("/atom", "w") as f:
+        f.write(b"untouched")
+    before_entries = region_entries(c, fs, "/atom")
+    # every server crashes at its first batched store: no fallback exists
+    for sid in list(c.servers):
+        make_flaky_server(c, sid, {"create_slices": {1}}, crash=True)
+    other = c.client()
+    data = bytes(range(256)) * 512                         # 4 regions
+    with fs.open_file("/atom", "rw") as f:
+        with pytest.raises(StorageError):
+            f.pwritev([data[:64 * 1024], data[64 * 1024:]], 0)
+        assert f.tell() == 0, "fd state must be untouched by the failure"
+    for sid in c.servers:
+        c.servers[sid].recover()
+    assert read_file(other, "/atom") == b"untouched"
+    assert other.stat("/atom")["size"] == len(b"untouched")
+    assert region_entries(c, other, "/atom") == before_entries, \
+        "no partial extent of the failed batch may be visible"
+    c.close()
+
+
+def test_vectored_write_all_or_nothing_under_kv_aborts(cluster, fs):
+    """Mid-commit KV failures (FlakyKV) either replay invisibly or leave no
+    trace — combined with slice-before-metadata ordering this is the §2.6
+    half of batch atomicity."""
+    with fs.open_file("/kv", "w") as f:
+        f.write(b"base")
+    flaky = make_flaky_kv(cluster, fail_commits={2})
+    c2 = cluster.client()                   # created after install: flaky kv
+    with c2.open_file("/kv", "rw") as f:    # commit #1: open is harmless
+        f.pwritev([b"AB" * 50, b"CD" * 50], 0)   # commit #2 fails, replays
+    assert flaky.injected == 1
+    assert c2.stats.txn_retries >= 1
+    assert read_file(fs, "/kv") == b"AB" * 50 + b"CD" * 50
+
+
+# -------------------------------------------------------------------- replay
+def test_replayed_pwritev_reuses_its_slices(cluster, fs):
+    """§2.6: the op log records the batch's pointers — a replay must not
+    re-store the payload."""
+    with fs.open_file("/rp", "w") as f:
+        f.write(b"head")
+    other = cluster.client()
+    payload = [b"P" * 8_000, b"Q" * 8_000]
+
+    def srv_writes():
+        return sum(s.stats.bytes_written for s in cluster.servers.values())
+
+    with fs.transaction():
+        fd = fs.open("/rp", "rw")
+        fs.seek(fd, 0, 2)                   # SEEK_END, no app-visible value
+        fs.writev(fd, payload)
+        written_after_op = srv_writes()
+        ofd = other.open("/rp", "rw")
+        other.seek(ofd, 0, 2)
+        other.write(ofd, b"x")              # moves EOF → forces a replay
+        other.close(ofd)
+    assert fs.stats.txn_retries >= 1
+    assert srv_writes() - written_after_op <= 1
+    assert read_file(fs, "/rp") == b"head" + b"x" + b"".join(payload)
+
+
+# -------------------------------------------------------------- scalar mode
+def test_store_batching_disabled_same_contents_more_rounds(tmp_path):
+    datasets = [[b"a" * 100, b"b" * 100, b"c" * 100],
+                [bytes(range(256)) * 300]]                 # cross-region
+    results = {}
+    for batching in (True, False):
+        d = str(tmp_path / f"b{batching}")
+        c = Cluster(n_servers=4, data_dir=d, replication=1,
+                    region_size=64 * 1024, store_batching=batching)
+        fs = c.client()
+        with fs.open_file("/f", "w") as f:
+            for chunks in datasets:
+                f.writev(chunks)
+        results[batching] = (read_file(fs, "/f"), fs.stats.store_batches)
+        c.close()
+    assert results[True][0] == results[False][0]
+    assert results[True][1] < results[False][1], \
+        "batching must issue fewer store rounds than the scalar pipeline"
+
+
+def test_reset_io_stats_clears_degraded_and_wrapped_server_stats(tmp_path):
+    """``reset_io_stats`` must zero the cluster degraded counter and reach
+    THROUGH a ``FlakyStorageServer`` wrapper to the real server's stats —
+    post-reset accounting would otherwise be silently frozen/stale."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "rs"), replication=2,
+                region_size=64 * 1024)
+    fs = c.client()
+    c.servers[0].crash()
+    with fs.open_file("/pre", "w") as f:
+        f.writev([b"setup" * 100])            # degraded setup-phase store
+    c.servers[0].recover()
+    flaky = make_flaky_server(c, 1, {"create_slices": set()})
+    assert c.degraded_stores > 0
+    c.reset_io_stats()
+    assert c.total_stats()["degraded_stores"] == 0
+    with fs.open_file("/post", "w") as f:
+        f.writev([b"measured" * 100])
+    st = c.total_stats()["servers"]
+    assert st[1]["bytes_written"] > 0, \
+        "wrapped server's post-reset I/O must be visible"
+    assert flaky._inner.stats.slices_written > 0
+    c.close()
+
+
+def test_checkpoint_save_routes_through_write_scheduler(cluster, fs):
+    from repro.checkpoint.manager import CheckpointManager
+    import numpy as np
+
+    mgr = CheckpointManager(fs, root="/ck")
+    before = fs.stats.store_batches
+    mgr.save(1, {"w": np.arange(64 * 1024, dtype=np.int8)})
+    assert fs.stats.store_batches > before
+    got = mgr.restore({"w": np.zeros(64 * 1024, dtype=np.int8)})
+    assert (got["w"] == np.arange(64 * 1024, dtype=np.int8)).all()
