@@ -73,10 +73,11 @@ class Timer:
 
 
 @contextmanager
-def wtf_cluster(scale: Scale, replication: int = 1):
+def wtf_cluster(scale: Scale, replication: int = 1, **cluster_kw):
     d = tempfile.mkdtemp(prefix="wtf_bench_")
     c = Cluster(n_servers=scale.n_servers, data_dir=d,
-                replication=replication, region_size=scale.region_size)
+                replication=replication, region_size=scale.region_size,
+                **cluster_kw)
     try:
         yield c
     finally:

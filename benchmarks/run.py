@@ -26,6 +26,8 @@ BENCHES = {
              "benchmarks.read_bench"),
     "write_sched": ("write-path scheduler (scalar vs batched stores)",
                     "benchmarks.write_bench"),
+    "write_behind": ("write-behind buffer (many small ops per txn)",
+                     "benchmarks.write_bench", "run_smallops"),
     "scaling": ("Figs 13-14 (client scaling)", "benchmarks.scaling"),
     "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
     "append": ("§2.5 (concurrent relative appends)",
@@ -49,12 +51,12 @@ def main(argv=None):
     t0 = time.time()
     failures = []
     for name in names:
-        desc, mod_name = BENCHES[name]
+        desc, mod_name, *fn_name = BENCHES[name]
         print(f"\n=== {name}: {desc} ===", flush=True)
         try:
             import importlib
             mod = importlib.import_module(mod_name)
-            mod.run(scale)
+            getattr(mod, fn_name[0] if fn_name else "run")(scale)
         except Exception as e:                    # noqa: BLE001
             import traceback
             traceback.print_exc()

@@ -17,7 +17,18 @@ The acceptance gauge of the write scheduler: a batched run must issue
 FEWER per-server store round-trips than the scalar run over identical
 chunks (``store_batches`` < scalar ``slices_written``).
 
-Usage: ``python -m benchmarks.write_bench [smoke|quick|full]``.
+A second scenario, **many-small-ops**, measures the write-behind buffer:
+each client issues many small ``pwrite`` ops under ONE transaction — a
+directory-entry-append / manifest / record-at-a-time shape where every op
+is its own store round without buffering.  The same sequence runs with
+``Cluster(write_behind=...)`` off and on; with the buffer the whole
+transaction flushes as one scheduled pass (``writeback_flushes``,
+``slices_cross_op_coalesced``) and MUST issue strictly fewer store rounds.
+
+Usage: ``python -m benchmarks.write_bench [smoke|quick|full]
+[vectored|smallops|all]`` (default: vectored, the original comparison).
+The small-ops scenario saves its counters to
+``results/write_bench_smallops.json``.
 """
 from __future__ import annotations
 
@@ -33,6 +44,8 @@ from .common import (Scale, fmt_bytes, lat_summary, save_result, wtf_cluster,
 
 WRITE_SIZES = [64 << 10, 256 << 10, 1 << 20]
 VEC_BATCH = 16                       # chunks per pwritev call
+SMALL_WRITE = 1 << 10                # many-small-ops scenario: 1 KiB ops
+SMALL_OPS = {"smoke": 48, "quick": 128, "full": 256}
 
 
 def _chunks(i: int, file_bytes: int, write_size: int) -> List[bytes]:
@@ -104,6 +117,64 @@ def _row_stats(cluster, clients) -> dict:
     }
 
 
+def _drive_small_ops(cluster, scale, n_ops):
+    """Each client: ONE transaction of ``n_ops`` small sequential pwrites —
+    the record-at-a-time / manifest shape the write-behind buffer targets."""
+    clients = [cluster.client() for _ in range(scale.n_clients)]
+    lats: List[List[float]] = [[] for _ in range(scale.n_clients)]
+
+    def work(i):
+        c = clients[i]
+        rng = np.random.RandomState(1000 + i)
+        fd = c.open(f"/s{i}", "w")
+        t0 = time.perf_counter()
+        with c.transaction():
+            off = 0
+            for _ in range(n_ops):
+                c.pwrite(fd, rng.bytes(SMALL_WRITE), off)
+                off += SMALL_WRITE
+        lats[i].append((time.perf_counter() - t0) / n_ops)
+        c.close(fd)
+
+    secs = _run_threads(work, scale.n_clients)
+    return clients, secs, [x for l in lats for x in l]
+
+
+def run_smallops(scale: Scale) -> dict:
+    """Write-behind on vs. off over identical many-small-op transactions."""
+    n_ops = SMALL_OPS.get(scale.name, 128)
+    logical = n_ops * SMALL_WRITE * scale.n_clients
+    row = {"n_ops": n_ops, "write_size": SMALL_WRITE}
+    for key, wb in (("wtf", False), ("wtf_writeback", True)):
+        with wtf_cluster(scale, write_behind=wb) as cluster:
+            clients, secs, lats = _drive_small_ops(cluster, scale, n_ops)
+            row[key] = {
+                "throughput_mbs": logical / secs / 1e6,
+                "writeback_flushes": sum(c.stats.writeback_flushes
+                                         for c in clients),
+                "slices_cross_op_coalesced": sum(
+                    c.stats.slices_cross_op_coalesced for c in clients),
+                **_row_stats(cluster, clients), **lat_summary(lats),
+            }
+    b, s = row["wtf_writeback"], row["wtf"]
+    row["writeback_vs_eager"] = (b["throughput_mbs"]
+                                 / max(s["throughput_mbs"], 1e-9))
+    row["rounds_saved"] = s["store_batches"] - b["store_batches"]
+    print(f"[write/smallops] {row['n_ops']}x{fmt_bytes(SMALL_WRITE)}/txn: "
+          f"eager {s['throughput_mbs']:.0f} MB/s "
+          f"({s['store_batches']} store rounds) | write-behind "
+          f"{b['throughput_mbs']:.0f} MB/s ({b['store_batches']} rounds, "
+          f"{b['writeback_flushes']} flushes, "
+          f"{b['slices_cross_op_coalesced']} cross-op coalesced) | "
+          f"{row['writeback_vs_eager']:.2f}x")
+    assert b["store_batches"] < s["store_batches"], (
+        "write-behind must issue strictly fewer store rounds than the "
+        "same per-op pipeline over identical transactions")
+    out = {"rows": [row], "scale": scale.name}
+    save_result("write_bench_smallops", out)
+    return out
+
+
 def run(scale: Scale) -> dict:
     out = {"rows": [], "scale": scale.name}
     file_bytes = scale.total_bytes // scale.n_clients
@@ -146,4 +217,12 @@ def run(scale: Scale) -> dict:
 
 
 if __name__ == "__main__":
-    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))
+    _scale = Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick")
+    _scenario = sys.argv[2] if len(sys.argv) > 2 else "vectored"
+    if _scenario not in ("vectored", "smallops", "all"):
+        raise ValueError(f"unknown scenario {_scenario!r}: "
+                         "choose vectored, smallops, or all")
+    if _scenario in ("vectored", "all"):
+        run(_scale)
+    if _scenario in ("smallops", "all"):
+        run_smallops(_scale)

@@ -76,52 +76,72 @@ class CheckpointManager:
 
         entries: Dict[str, dict] = {}
         stats = {"bytes_written": 0, "bytes_shared": 0, "leaves_shared": 0}
-        for name, leaf in flat.items():
-            data, meta = leaf_to_bytes(leaf)
-            shards = self._shards_for(meta, num_hosts)
-            meta["shards"] = shards
-            entries[name] = meta
-            prev = (prev_manifest or {}).get("leaves", {}).get(name)
-            if (prev is not None and prev["digest"] == meta["digest"]
-                    and prev["shards"] == shards):
-                # Incremental: identical content — share the old slices.
-                if host_id == 0:
-                    for s in range(shards):
-                        src = self._leaf_path(prev_step, name, s, shards)
-                        dst = self._leaf_path(step, name, s, shards)
-                        self.client.copy(src, dst)
-                    stats["bytes_shared"] += meta["nbytes"]
-                    stats["leaves_shared"] += 1
-                continue
-            for s in range(shards):
-                if s % num_hosts != host_id:
-                    continue               # not this host's shard
-                lo, hi = self._shard_range(meta["nbytes"], shards, s)
-                path = self._leaf_path(step, name, s, shards)
-                with self.client.open_file(path, "w") as f:
-                    # writev: the shard's stores are planned as one batch
-                    # and fanned out per region by the write scheduler
-                    # (wsched) instead of a single synchronous store round.
-                    f.writev([data[lo:hi]])
-                stats["bytes_written"] += hi - lo
+        # One transaction per host: the host's shard set publishes
+        # atomically, and with write-behind every leaf's stores (plus, for
+        # a single-host save, the manifest itself) flush through the write
+        # scheduler in ONE planning pass at this commit.
+        with self.client.transaction():
+            for name, leaf in flat.items():
+                data, meta = leaf_to_bytes(leaf)
+                shards = self._shards_for(meta, num_hosts)
+                meta["shards"] = shards
+                entries[name] = meta
+                prev = (prev_manifest or {}).get("leaves", {}).get(name)
+                if (prev is not None and prev["digest"] == meta["digest"]
+                        and prev["shards"] == shards):
+                    # Incremental: identical content — share the old slices.
+                    if host_id == 0:
+                        for s in range(shards):
+                            src = self._leaf_path(prev_step, name, s, shards)
+                            dst = self._leaf_path(step, name, s, shards)
+                            self.client.copy(src, dst)
+                        stats["bytes_shared"] += meta["nbytes"]
+                        stats["leaves_shared"] += 1
+                    continue
+                for s in range(shards):
+                    if s % num_hosts != host_id:
+                        continue           # not this host's shard
+                    lo, hi = self._shard_range(meta["nbytes"], shards, s)
+                    path = self._leaf_path(step, name, s, shards)
+                    with self.client.open_file(path, "w") as f:
+                        # writev: the shard's stores are planned as one
+                        # batch and fanned out per region by the write
+                        # scheduler (wsched) instead of a single
+                        # synchronous store round.
+                        f.writev([data[lo:hi]])
+                    stats["bytes_written"] += hi - lo
+            if host_id == 0 and num_hosts == 1:
+                # Single-host save: shards + manifest + ``latest`` flip
+                # commit (and flush) as one transaction.
+                self._commit(step, entries, extra or {})
 
         if host_id == 0:
-            self._commit(step, entries, extra or {})
+            if num_hosts > 1:
+                self._commit(step, entries, extra or {})
             if self.keep is not None:
                 self.retain(self.keep)
         return stats
 
     def _commit(self, step: int, entries: Dict[str, dict],
                 extra: dict) -> None:
-        """The atomic rendezvous: manifest + ``latest`` flip in one txn."""
+        """The atomic rendezvous: manifest + ``latest`` flip in one txn
+        (joins the caller's open transaction when there is one)."""
         c = self.client
+        if c._txn is not None:
+            self._commit_ops(step, entries, extra)
+            return
         with c.transaction():
-            with c.open_file(f"{self._step_dir(step)}/manifest", "w") as f:
-                f.write(encode_manifest(entries, {"step": step, **extra}))
-            latest = f"{self.root}/latest"
-            if c.exists(latest):
-                c.unlink(latest)
-            c.link(f"{self._step_dir(step)}/manifest", latest)
+            self._commit_ops(step, entries, extra)
+
+    def _commit_ops(self, step: int, entries: Dict[str, dict],
+                    extra: dict) -> None:
+        c = self.client
+        with c.open_file(f"{self._step_dir(step)}/manifest", "w") as f:
+            f.write(encode_manifest(entries, {"step": step, **extra}))
+        latest = f"{self.root}/latest"
+        if c.exists(latest):
+            c.unlink(latest)
+        c.link(f"{self._step_dir(step)}/manifest", latest)
 
     @staticmethod
     def _shards_for(meta: dict, num_hosts: int) -> int:

@@ -10,14 +10,15 @@ from .client import (SEEK_CUR, SEEK_END, SEEK_SET, Cluster, WtfClient,
                      WtfTransaction, normalize_path)
 from .client_runtime import ClientStats
 from .coordinator import ReplicatedCoordinator
-from .errors import (AlreadyExists, BadFileDescriptor, IsADirectory,
-                     KVConflict, NoQuorum, NotADirectory, NotFound,
-                     PreconditionFailed, StorageError, TransactionAborted,
-                     WtfError)
+from .errors import (AlreadyExists, BadFileDescriptor, InvalidOffset,
+                     IsADirectory, KVConflict, NoQuorum, NotADirectory,
+                     NotFound, NotOpenForWriting, PreconditionFailed,
+                     StorageError, TransactionAborted, WtfError)
 from .gc import GarbageCollector
 from .handle import WtfFile
 from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
 from .iosched import SliceScheduler
+from .wbuf import PendingPtr, WriteBehindBuffer
 from .wsched import StoreRequest, WriteScheduler
 from .metadata import CommutingOp, ListAppend, Transaction, WarpKV
 from .placement import HashRing, stable_hash
@@ -29,6 +30,7 @@ from .storage import StorageServer
 __all__ = [
     "Cluster", "WtfClient", "WtfTransaction", "WtfFile", "ClientStats",
     "SliceScheduler", "WriteScheduler", "StoreRequest",
+    "WriteBehindBuffer", "PendingPtr",
     "WarpKV", "StorageServer",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",
     "Extent", "SlicePointer", "Inode", "RegionData",
@@ -38,6 +40,7 @@ __all__ = [
     "SEEK_SET", "SEEK_CUR", "SEEK_END", "DEFAULT_REGION_SIZE",
     "WtfError", "TransactionAborted", "KVConflict", "PreconditionFailed",
     "NotFound", "AlreadyExists", "NotADirectory", "IsADirectory",
-    "BadFileDescriptor", "StorageError", "NoQuorum",
+    "BadFileDescriptor", "NotOpenForWriting", "InvalidOffset",
+    "StorageError", "NoQuorum",
     "CommutingOp", "ListAppend", "Transaction",
 ]

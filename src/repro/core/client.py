@@ -68,6 +68,8 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
     """
 
     def __init__(self, cluster: "Cluster", client_id: Optional[int] = None):
+        from .wbuf import WriteBehindBuffer
+
         self.cluster = cluster
         self.kv: WarpKV = cluster.kv
         self.stats = ClientStats()
@@ -77,6 +79,13 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         self._fds: Dict[int, Any] = {}
         self._id_counter = itertools.count(1)
         self._txn: Optional[WtfTransaction] = None
+        # Write-behind: slice stores deferred into ``_wb`` flush in one
+        # scheduled pass at the commit boundary (``wbuf``).  The client
+        # inherits the cluster knob; ``WtfFile(buffered=True)`` raises
+        # ``_op_buffered`` per call for handle-level opt-in.
+        self.write_behind = cluster.write_behind
+        self._op_buffered = False
+        self._wb = WriteBehindBuffer()
         self.time_fn: Callable[[], int] = lambda: int(time.time())
 
 
@@ -109,7 +118,8 @@ class Cluster:
                  fetch_gap_bytes: int = DEFAULT_MAX_GAP,
                  fetch_workers: Optional[int] = None,
                  store_coalesce_bytes: int = DEFAULT_MAX_COALESCE,
-                 store_batching: bool = True):
+                 store_batching: bool = True,
+                 write_behind: bool = False):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -137,6 +147,14 @@ class Cluster:
                          else min(8, max(1, n_servers))),
             max_gap=fetch_gap_bytes)
         self.store_batching = store_batching
+        # Write-behind (opt-in): clients defer slice stores into a
+        # transaction-scoped buffer and flush them through ``wsched`` as
+        # ONE planning pass at each commit boundary — cross-op chunks in a
+        # region coalesce into covering stores, regions fan out in
+        # parallel, and metadata commits only after every slice is durable
+        # (§2.1).  Measured by ``ClientStats.writeback_flushes`` /
+        # ``slices_cross_op_coalesced``.
+        self.write_behind = write_behind
         self.wsched = WriteScheduler(self, self.scheduler,
                                      max_coalesce=store_coalesce_bytes)
         self.degraded_stores = 0     # replica sets that came up short (§2.9)

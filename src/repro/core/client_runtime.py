@@ -24,8 +24,8 @@ import hashlib
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
-from .errors import (BadFileDescriptor, KVConflict, PreconditionFailed,
-                     TransactionAborted, WtfError)
+from .errors import (BadFileDescriptor, KVConflict, NotOpenForWriting,
+                     PreconditionFailed, TransactionAborted, WtfError)
 from .metadata import Transaction
 
 SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
@@ -59,6 +59,11 @@ class ClientStats:
     rounds issued vs. slice creations folded into a shared round.
     ``degraded_stores`` counts stores that achieved fewer than
     ``replication`` replicas (available but under-replicated, §2.9).
+    ``writeback_flushes`` counts write-behind buffer flushes (one per
+    commit scope that had deferred stores), and
+    ``slices_cross_op_coalesced`` counts slice creations that coalesced
+    into a covering store together with slices planned by a *different*
+    logged op — the cross-op batching only the write-behind buffer enables.
     """
 
     data_bytes_written: int = 0      # bytes physically sent to storage servers
@@ -73,6 +78,8 @@ class ClientStats:
     slices_store_coalesced: int = 0  # slice creations saved by coalescing
     degraded_stores: int = 0         # stores with fewer replicas than asked
     vectored_ops: int = 0            # readv/writev/yankv/pastev batches run
+    writeback_flushes: int = 0       # write-behind buffer flushes run
+    slices_cross_op_coalesced: int = 0  # creations coalesced across ops
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -165,6 +172,47 @@ class ClientRuntime:
             raise BadFileDescriptor(f"fd {fd}")
         return f
 
+    def _get_wfd(self, fd: int) -> _Fd:
+        """Like ``_get_fd`` but the fd must be open for writing: write-side
+        ops on an ``"r"`` fd raise instead of silently mutating the file."""
+        f = self._get_fd(fd)
+        if not f.writable:
+            raise NotOpenForWriting(
+                f"fd {fd} ({f.path!r}) is not open for writing")
+        return f
+
+    # ---------------------------------------------------- write-behind hooks
+    def _write_behind_active(self) -> bool:
+        """Whether slice creations of the op being executed should defer
+        into the write-behind buffer (client knob or buffered handle)."""
+        return self.write_behind or self._op_buffered
+
+    def _flush_writeback(self, ctx: "_Ctx", ops=()) -> None:
+        """Commit-boundary flush: store every deferred payload through the
+        write scheduler in one pass, then resolve the recorded pending
+        pointers everywhere they were captured — queued region commutes,
+        op artifacts (so §2.6 replays reuse the batch pointers verbatim)
+        and op digests.  Runs BEFORE the KV commit, preserving the
+        slices-before-metadata invariant (§2.1) for the whole batch."""
+        if not self._wb.pending:
+            return
+        from .inode import AppendExtents
+        from .wbuf import resolve_value
+        self._wb.flush(self.cluster, self.stats)
+
+        def fix(cop):
+            if isinstance(cop, AppendExtents):
+                new = tuple(resolve_value(e) for e in cop.extents)
+                if any(n is not o for n, o in zip(new, cop.extents)):
+                    return AppendExtents(new, relative=cop.relative,
+                                         bound=cop.bound)
+            return cop
+
+        ctx.txn.map_commutes(fix)
+        for op in ops:
+            op.artifacts = resolve_value(op.artifacts)
+            op.digest = resolve_value(op.digest)
+
     # -------------------------------------------------------- txn dispatch
     def transaction(self) -> "WtfTransaction":
         """Begin a fully general multi-file transaction (§2.6)."""
@@ -190,14 +238,28 @@ class ClientRuntime:
             ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
             try:
                 result = self._exec(op, ctx)
+                # Write-behind (auto-commit scope): stores the op deferred
+                # flush here, in one scheduler pass, before the metadata
+                # commits.  Retries hit the op's resolved artifacts and
+                # leave the buffer empty.
+                self._flush_writeback(ctx, (op,))
                 ctx.txn.commit()
                 return result
             except (KVConflict, PreconditionFailed) as e:
                 last = e
                 continue
+            except BaseException:
+                # Op body or flush failed outright: deferred payloads from
+                # the dead op must not leak into a later commit scope, and
+                # fd state the op advanced before failing rolls back.
+                self._wb.clear()
+                self._restore_fd_state(fd_snap)
+                raise
         self.stats.txn_aborts += 1
         # the aborted op leaves no trace — including fd offsets the op
-        # body advanced before its commit failed
+        # body advanced before its commit failed, and any deferred stores
+        # a never-flushed attempt left in the write-behind buffer
+        self._wb.clear()
         self._restore_fd_state(fd_snap)
         raise TransactionAborted(
             f"auto-commit op {name} failed after {self.MAX_RETRIES} "
@@ -261,6 +323,12 @@ class WtfTransaction:
     def commit(self) -> None:
         if self._done:
             raise WtfError("transaction already finished")
+        # Write-behind: every op's deferred stores flush as ONE scheduler
+        # planning pass (cross-op coalescing + per-region fan-out); the
+        # metadata commit only proceeds once every slice is durable
+        # (§2.1).  Replays reuse the resolved artifacts, so retries never
+        # re-store data.
+        self._flush_or_abort()
         last: Optional[Exception] = None
         for attempt in range(self.MAX_RETRIES):
             if attempt:
@@ -270,6 +338,10 @@ class WtfTransaction:
                 except (KVConflict, PreconditionFailed) as e:
                     last = e
                     continue
+                # Normally a no-op: replays hit the resolved artifact
+                # cache.  If a replayed op took a branch that planned a
+                # NEW store, it must flush before the commit too.
+                self._flush_or_abort()
             try:
                 self._ctx.txn.commit()
                 self._done = True
@@ -278,20 +350,49 @@ class WtfTransaction:
                 last = e
         self._done = True
         self.client.stats.txn_aborts += 1
+        self.client._wb.clear()
         self.client._restore_fd_state(self._fd_snap)
         raise TransactionAborted(
             f"gave up after {self.MAX_RETRIES} replays: {last}")
+
+    def _flush_or_abort(self) -> None:
+        """Run the write-behind flush; on ANY failure (e.g. StorageError
+        when every replica candidate refused) abort the transaction
+        wholesale: the KV transaction never commits, so nothing becomes
+        visible and partially created slices are unreferenced garbage for
+        the tier-3 GC."""
+        try:
+            self.client._flush_writeback(self._ctx, self._ops)
+        except BaseException:
+            self._done = True
+            self.client._wb.clear()
+            self.client.stats.txn_aborts += 1
+            try:
+                self._ctx.txn.abort()
+            finally:
+                self.client._restore_fd_state(self._fd_snap)
+            raise
 
     def _replay(self) -> None:
         """Re-execute the op log against a fresh KV transaction (§2.6)."""
         self.client._restore_fd_state(self._fd_snap)
         self._ctx = _Ctx(self.client.kv.begin(), first=False)
         for op in self._ops:
-            result = self.client._exec(op, self._ctx)
+            try:
+                result = self.client._exec(op, self._ctx)
+            except (KVConflict, PreconditionFailed):
+                raise
+            except WtfError as e:
+                # The op succeeded on first execution but errors on replay
+                # (e.g. a validity check now fails against changed state):
+                # that is a divergent application-visible outcome (§2.6).
+                result = e
             if _digest(result) != op.digest:
                 self._done = True
                 self.client.stats.txn_aborts += 1
                 # the transaction leaves no trace — including fd offsets
+                # and deferred stores replayed ops queued before diverging
+                self.client._wb.clear()
                 self.client._restore_fd_state(self._fd_snap)
                 raise TransactionAborted(
                     f"replayed {op.name} produced a different "
@@ -299,5 +400,8 @@ class WtfTransaction:
 
     def abort(self) -> None:
         self._ctx.txn.abort()
+        # Deferred stores were never dispatched: aborting a write-behind
+        # transaction leaves zero storage-server garbage.
+        self.client._wb.clear()
         self.client._restore_fd_state(self._fd_snap)
         self._done = True

@@ -47,6 +47,16 @@ class BadFileDescriptor(WtfError):
     """Operation on a closed or invalid fd."""
 
 
+class NotOpenForWriting(BadFileDescriptor):
+    """Write-side operation on an fd opened read-only (EBADF-style: POSIX
+    write(2) reports EBADF for fds not open for writing)."""
+
+
+class InvalidOffset(WtfError):
+    """A file offset resolved to a negative position (EINVAL-style, matching
+    lseek(2)/pread(2) on negative offsets)."""
+
+
 class StorageError(WtfError):
     """A storage server failed to create or retrieve a slice."""
 

@@ -11,6 +11,13 @@ The handle adds no transactional semantics of its own: every method
 delegates to the owning client, so a handle used inside
 ``client.transaction()`` participates in that transaction like any other
 call.
+
+``buffered=True`` (``open_file(path, mode, buffered=True)``) opts the
+handle's data-writing calls into the client's write-behind buffer even when
+the ``Cluster(write_behind=...)`` knob is off: payloads are recorded as
+pending stores and flush in one scheduled pass at the enclosing commit
+boundary — the surrounding ``WtfTransaction``'s commit, or the auto-commit
+of each op.
 """
 from __future__ import annotations
 
@@ -23,14 +30,29 @@ class WtfFile:
     """A file handle bound to one ``WtfClient`` fd.  Not thread-safe (one
     client per thread, per the client library's contract)."""
 
-    __slots__ = ("client", "fd", "path", "mode", "_closed")
+    __slots__ = ("client", "fd", "path", "mode", "buffered", "_closed")
 
-    def __init__(self, client, fd: int, path: str, mode: str):
+    def __init__(self, client, fd: int, path: str, mode: str,
+                 buffered: bool = False):
         self.client = client
         self.fd = fd
         self.path = path
         self.mode = mode
+        self.buffered = buffered
         self._closed = False
+
+    def _buffered_call(self, fn, *args):
+        """Run a data-writing client call with the write-behind flag raised
+        when this handle opted in (restores the client's flag after)."""
+        if not self.buffered:
+            return fn(*args)
+        c = self.client
+        prev = c._op_buffered
+        c._op_buffered = True
+        try:
+            return fn(*args)
+        finally:
+            c._op_buffered = prev
 
     # ------------------------------------------------------------- lifecycle
     def __enter__(self) -> "WtfFile":
@@ -51,7 +73,8 @@ class WtfFile:
 
     def __repr__(self) -> str:
         state = "closed" if self._closed else f"fd={self.fd}"
-        return f"<WtfFile {self.path!r} mode={self.mode!r} {state}>"
+        buf = " buffered" if self.buffered else ""
+        return f"<WtfFile {self.path!r} mode={self.mode!r} {state}{buf}>"
 
     # ------------------------------------------------------------ scalar I/O
     def read(self, size: int = -1) -> bytes:
@@ -61,13 +84,14 @@ class WtfFile:
         return self.client.pread(self.fd, size, offset)
 
     def write(self, data: bytes) -> int:
-        return self.client.write(self.fd, data)
+        return self._buffered_call(self.client.write, self.fd, data)
 
     def pwrite(self, data: bytes, offset: int) -> int:
-        return self.client.pwrite(self.fd, data, offset)
+        return self._buffered_call(self.client.pwrite, self.fd, data,
+                                   offset)
 
     def append(self, data: bytes) -> int:
-        return self.client.append(self.fd, data)
+        return self._buffered_call(self.client.append, self.fd, data)
 
     def seek(self, offset: int, whence: int = 0):
         return self.client.seek(self.fd, offset, whence)
@@ -89,10 +113,11 @@ class WtfFile:
         return self.client.preadv(self.fd, sizes, offset)
 
     def writev(self, chunks: Sequence[bytes]) -> int:
-        return self.client.writev(self.fd, chunks)
+        return self._buffered_call(self.client.writev, self.fd, chunks)
 
     def pwritev(self, chunks: Sequence[bytes], offset: int) -> int:
-        return self.client.pwritev(self.fd, chunks, offset)
+        return self._buffered_call(self.client.pwritev, self.fd, chunks,
+                                   offset)
 
     # --------------------------------------------------------------- slicing
     def yank(self, size: int, want_data: bool = False):

@@ -110,6 +110,39 @@ class AppendExtents(CommutingOp):
                              relative=self.relative, bound=self.bound)
 
 
+class ClearRegion(CommutingOp):
+    """Commit-time region wipe (truncate-to-zero).
+
+    Queued as a commutative op — NOT a raw ``delete`` — so it composes with
+    appends queued in the same transaction in queue order: extents queued
+    *before* the truncate are wiped with the region, extents queued *after*
+    survive.  A raw delete was applied before all commutes at commit,
+    resurrecting earlier in-txn writes.  The ``None`` result value is the
+    same tombstone a delete leaves.
+    """
+
+    def apply(self, value):
+        return None, None
+
+
+class ResetInode(CommutingOp):
+    """Truncate-to-zero's inode half: reset ``max_region`` in queue order
+    (earlier in-txn bumps are cancelled, later ones re-raise it), merging
+    ``mtime`` and leaving the link count untouched."""
+
+    def __init__(self, mtime: int):
+        self.mtime = mtime
+
+    def precondition(self, value) -> bool:
+        return value is not None        # file must still exist
+
+    def apply(self, value: Inode):
+        kw = {"max_region": -1}
+        if self.mtime > value.mtime:
+            kw["mtime"] = self.mtime
+        return value.replace(**kw), None
+
+
 class BumpInode(CommutingOp):
     """Monotone inode update: ``max_region``/``mtime`` merge by max.
 

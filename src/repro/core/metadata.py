@@ -128,6 +128,18 @@ class Transaction:
         per_key.append(entry)
         return _Deferred(entry[3])
 
+    def map_commutes(self, fn: Callable[[CommutingOp],
+                                        Optional[CommutingOp]]) -> None:
+        """Rewrite queued commutative ops in place: ``fn(op)`` returns a
+        replacement op (or None / the same op to keep it).  Deferred result
+        cells and queue order are preserved.  Used by the write-behind
+        buffer to swap pending slice pointers for real ones after its
+        commit-time flush, before this transaction commits."""
+        for entry in self._commutes:
+            new = fn(entry[2])
+            if new is not None and new is not entry[2]:
+                entry[2] = new
+
     def get_view(self, space: str, key: Any, default: Any = None) -> Any:
         """Read-your-writes view: the committed value (read dependency is
         recorded) with this transaction's queued commutative ops applied.

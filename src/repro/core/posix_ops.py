@@ -34,8 +34,8 @@ from repro.util import jsonio
 
 from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET, _Ctx, _Fd, _Op,
                              basename_of, normalize_path, parent_of)
-from .errors import (AlreadyExists, DirectoryNotEmpty, IsADirectory,
-                     NotADirectory, NotFound, WtfError)
+from .errors import (AlreadyExists, DirectoryNotEmpty, InvalidOffset,
+                     IsADirectory, NotADirectory, NotFound, WtfError)
 from .inode import AppendExtents, Inode, region_key
 from .slicing import Extent
 
@@ -65,12 +65,17 @@ class PosixOps:
         return self._run("open", normalize_path(path), mode, region_size)
 
     def open_file(self, path: str, mode: str = "r",
-                  region_size: Optional[int] = None):
+                  region_size: Optional[int] = None,
+                  buffered: bool = False):
         """Open ``path`` as a first-class ``WtfFile`` handle (context
-        manager) — the preferred surface over raw integer fds."""
+        manager) — the preferred surface over raw integer fds.
+        ``buffered=True`` opts this handle's writes into the write-behind
+        buffer even when the client/cluster knob is off (they flush at the
+        enclosing commit boundary)."""
         from .handle import WtfFile
         fd = self.open(path, mode, region_size)
-        return WtfFile(self, fd, normalize_path(path), mode)
+        return WtfFile(self, fd, normalize_path(path), mode,
+                       buffered=buffered)
 
     def close(self, fd: int) -> None:
         self._get_fd(fd)
@@ -188,7 +193,9 @@ class PosixOps:
             if ino.kind == "dir" and ("w" in mode or "a" in mode):
                 raise IsADirectory(path)
             if mode == "w":                       # truncate semantics
-                self._truncate_inode(ctx, ino, 0)
+                # view inode: regions grown by writes queued earlier in
+                # THIS transaction must be truncated too
+                self._truncate_inode(ctx, self._inode(ctx, ino_id), 0)
         f = _Fd(op.artifacts.setdefault("fd", next(self._fd_counter)),
                 ino_id, path, writable=("r" != mode))
         if "a" in mode:
@@ -230,7 +237,9 @@ class PosixOps:
 
     def _op_pread(self, ctx: _Ctx, op: _Op, fd: int, size: int,
                   offset: int) -> bytes:
-        f = self._get_fd(fd)
+        f = self._get_fd(fd)          # EBADF before EINVAL, like POSIX
+        if offset < 0:
+            raise InvalidOffset(f"pread at negative offset {offset}")
         ino = self._inode(ctx, f.inode_id)
         length = self._file_length(ctx, ino)
         size = min(size, max(0, length - offset))
@@ -247,19 +256,21 @@ class PosixOps:
         return out
 
     def _op_write(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         n = self._write_at(ctx, op, f.inode_id, f.offset, data, key="w")
         f.offset += n
         return n
 
     def _op_pwrite(self, ctx: _Ctx, op: _Op, fd: int, data: bytes,
                    offset: int) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)         # EBADF before EINVAL, like POSIX
+        if offset < 0:
+            raise InvalidOffset(f"pwrite at negative offset {offset}")
         return self._write_at(ctx, op, f.inode_id, offset, data, key="w")
 
     def _op_writev(self, ctx: _Ctx, op: _Op, fd: int,
                    chunks: Tuple[bytes, ...]) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         n = self._writev_at(ctx, op, f.inode_id, f.offset, chunks, key="wv")
         f.offset += n
         self.stats.vectored_ops += 1
@@ -267,7 +278,9 @@ class PosixOps:
 
     def _op_pwritev(self, ctx: _Ctx, op: _Op, fd: int,
                     chunks: Tuple[bytes, ...], offset: int) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)         # EBADF before EINVAL, like POSIX
+        if offset < 0:
+            raise InvalidOffset(f"pwritev at negative offset {offset}")
         n = self._writev_at(ctx, op, f.inode_id, offset, chunks, key="wv")
         self.stats.vectored_ops += 1
         return n
@@ -276,14 +289,22 @@ class PosixOps:
                  whence: int):
         f = self._get_fd(fd)
         if whence == SEEK_SET:
+            if offset < 0:
+                raise InvalidOffset(f"seek to negative offset {offset}")
             f.offset = offset
             return f.offset
         if whence == SEEK_CUR:
+            if f.offset + offset < 0:
+                raise InvalidOffset(
+                    f"seek to negative offset {f.offset + offset}")
             f.offset += offset
             return f.offset
         if whence == SEEK_END:
             ino = self._inode(ctx, f.inode_id)
-            f.offset = self._file_length(ctx, ino) + offset
+            new = self._file_length(ctx, ino) + offset
+            if new < 0:
+                raise InvalidOffset(f"seek to negative offset {new}")
+            f.offset = new
             # The application never observes the end-of-file offset through
             # seek — that's precisely what makes seek(END)+write retryable
             # without an application-visible conflict (§2.6).
@@ -291,7 +312,7 @@ class PosixOps:
         raise WtfError(f"bad whence {whence}")
 
     def _op_truncate(self, ctx: _Ctx, op: _Op, fd: int, length: int) -> None:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         ino = self._inode(ctx, f.inode_id)
         self._truncate_inode(ctx, ino, length)
 
@@ -385,10 +406,22 @@ class PosixOps:
             raise NotFound(old)
         if ctx.txn.get("paths", new) is not None:
             raise AlreadyExists(new)
+        ino = ctx.txn.get("inodes", ino_id)
+        if ino.kind == "dir" and (new + "/").startswith(old + "/"):
+            # Renaming a directory into its own subtree would orphan the
+            # whole subtree behind an unreachable path (a cycle in POSIX
+            # terms: rename(2) reports EINVAL for this).
+            raise WtfError(
+                f"cannot rename directory {old} into its own subtree {new}")
         old_pid = ctx.txn.get("paths", parent_of(old))
         new_pid = ctx.txn.get("paths", parent_of(new))
         if new_pid is None:
             raise NotFound(parent_of(new))
+        new_pino = ctx.txn.get("inodes", new_pid)
+        if new_pino is None or new_pino.kind != "dir":
+            # e.g. rename into "/some/file.txt/x": the dirent must never be
+            # appended into a regular file's data (ENOTDIR).
+            raise NotADirectory(parent_of(new))
         ctx.txn.delete("paths", old)
         ctx.txn.put("paths", new, ino_id)
         self._dir_append(ctx, op, ctx.txn.get("inodes", old_pid),

@@ -24,11 +24,14 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple
 
 from .client_runtime import _Ctx, _Op
-from .errors import NotFound, WtfError
-from .inode import AppendExtents, BumpInode, Inode, RegionData, region_key
+from .errors import InvalidOffset, NotFound, WtfError
+from .inode import (AppendExtents, BumpInode, ClearRegion, Inode, RegionData,
+                    ResetInode, region_key)
 from .placement import region_placement_key, stable_hash
 from .slicing import (Extent, decode_extents, merge_adjacent, overlay_cached,
                       shift, slice_range, slice_resolved, split_by_regions)
+from .wbuf import (extent_is_pending, extent_is_resolved,
+                   pending_extent_bytes, resolve_extent)
 from .wsched import StoreRequest
 
 
@@ -110,8 +113,13 @@ class SliceOps:
                        ranges: Sequence[Tuple[int, int]]):
         """Shared readv/yankv prologue: EOF-clamp every range exactly like
         scalar ``pread``, then plan them all with one overlay resolution
-        per region.  Returns (fd record, plans)."""
-        f = self._get_fd(fd)
+        per region.  Rejects negative offsets/sizes (EINVAL-style) instead
+        of producing undefined plans.  Returns (fd record, plans)."""
+        f = self._get_fd(fd)          # EBADF before EINVAL, like POSIX
+        for off, size in ranges:
+            if off < 0 or size < 0:
+                raise InvalidOffset(
+                    f"negative range ({off}, {size}) in vectored read plan")
         ino = self._inode(ctx, f.inode_id)
         length = self._file_length(ctx, ino)
         clamped = [(off, min(size, max(0, length - off)))
@@ -120,24 +128,26 @@ class SliceOps:
 
     def _op_paste(self, ctx: _Ctx, op: _Op, fd: int,
                   extents: Tuple[Extent, ...]) -> int:
-        f = self._get_fd(fd)
-        n = self._paste_at(ctx, f.inode_id, f.offset, extents)
+        f = self._get_wfd(fd)
+        n = self._paste_at(ctx, f.inode_id, f.offset,
+                           self._realize_app_extents(extents))
         f.offset += n
         self.stats.logical_bytes_written += n
         return n
 
     def _op_pastev(self, ctx: _Ctx, op: _Op, fd: int,
                    batches: Tuple[Tuple[Extent, ...], ...]) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         flat = [e for batch in batches for e in batch]
-        n = self._paste_at(ctx, f.inode_id, f.offset, flat)
+        n = self._paste_at(ctx, f.inode_id, f.offset,
+                           self._realize_app_extents(flat))
         f.offset += n
         self.stats.logical_bytes_written += n
         self.stats.vectored_ops += 1
         return n
 
     def _op_punch(self, ctx: _Ctx, op: _Op, fd: int, amount: int) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         ino = self._inode(ctx, f.inode_id)
         max_r = -1
         for r, rel, _, ln in split_by_regions(f.offset, amount,
@@ -150,7 +160,7 @@ class SliceOps:
         return amount
 
     def _op_append(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         ino = self._inode(ctx, f.inode_id)
         last = max(ino.max_region, 0)
         # Unvalidated fit check: the commit-time bound precondition is the
@@ -178,10 +188,11 @@ class SliceOps:
 
     def _op_append_slices(self, ctx: _Ctx, op: _Op, fd: int,
                           extents: Tuple[Extent, ...]) -> int:
-        f = self._get_fd(fd)
+        f = self._get_wfd(fd)
         ino = self._inode(ctx, f.inode_id)
         eof = self._file_length(ctx, ino)
-        n = self._paste_at(ctx, f.inode_id, eof, extents)
+        n = self._paste_at(ctx, f.inode_id, eof,
+                           self._realize_app_extents(extents))
         self.stats.logical_bytes_written += n
         return n
 
@@ -287,13 +298,55 @@ class SliceOps:
 
     def _fetch(self, extents: Sequence[Extent]) -> bytes:
         """Dereference pointers through the batched scheduler (replica-
-        failover aware, §2.9)."""
-        return self.cluster.scheduler.fetch(extents, stats=self.stats)
+        failover aware, §2.9); pending write-behind extents are served from
+        the buffer's memory (read-your-buffered-writes)."""
+        return self._fetch_many([extents])[0]
 
     def _fetch_many(self, plans: Sequence[Sequence[Extent]]) -> List[bytes]:
         """Dereference many plans in one scheduler pass: cross-plan
-        coalescing plus per-server fan-out."""
-        return self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+        coalescing plus per-server fan-out.
+
+        Pending-write overlay: while the write-behind buffer holds deferred
+        stores, plan extents whose pointers are still pending never reach
+        the scheduler — their bytes come straight from the buffered
+        payloads, so reads inside the transaction observe its own writes."""
+        if not self._wb.pending:
+            return self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+        parts: List[List[bytes]] = [[b""] * len(p) for p in plans]
+        sched_plans: List[List[Extent]] = []
+        slots: List[tuple] = []
+        for pi, plan in enumerate(plans):
+            for ci, e in enumerate(plan):
+                if extent_is_pending(e):
+                    parts[pi][ci] = pending_extent_bytes(e)
+                else:
+                    sched_plans.append([e])
+                    slots.append((pi, ci))
+        if sched_plans:
+            datas = self.cluster.scheduler.fetch_many(sched_plans,
+                                                      stats=self.stats)
+            for (pi, ci), data in zip(slots, datas):
+                parts[pi][ci] = data
+        return [b"".join(p) for p in parts]
+
+    def _realize_app_extents(self, extents: Sequence[Extent]) -> list:
+        """Normalize application-supplied extents (paste/append_slices):
+        pending pointers that already flushed become their real replicated
+        pointers; unresolved ones are legal only while this client's buffer
+        is still open (they will be rewritten at the commit flush)."""
+        out = []
+        for e in extents:
+            if extent_is_pending(e):
+                if extent_is_resolved(e):
+                    e = resolve_extent(e)
+                elif not self._wb.owns(e):
+                    # a dead pointer (aborted scope, or another client's
+                    # buffer) must fail HERE, not poison this commit's flush
+                    raise WtfError(
+                        "extent references an unflushed write-behind "
+                        "buffer from another commit scope")
+            out.append(e)
+        return out
 
     def _data_slice(self, ctx: _Ctx, op: _Op, ino: Inode, region: int,
                     data: bytes, key: str) -> Extent:
@@ -307,6 +360,13 @@ class SliceOps:
         cached = op.artifacts.get(key)
         if cached is not None:
             return cached
+        if self._write_behind_active():
+            # Deferred: record the payload; the store happens at the commit
+            # flush, batched with every other op in this commit scope.
+            pk = region_placement_key(ino.inode_id, region)
+            ext = self._wb.add(pk, stable_hash(pk), data, op_tag=id(op))
+            op.artifacts[key] = ext
+            return ext
         hint = stable_hash(region_placement_key(ino.inode_id, region))
         ptrs = self.cluster.store_slice(
             data, region_placement_key(ino.inode_id, region), hint)
@@ -331,6 +391,15 @@ class SliceOps:
         cached = op.artifacts.get(key)
         if cached is not None:
             return cached
+        if self._write_behind_active():
+            exts = []
+            for region, data in pieces:
+                pk = region_placement_key(ino.inode_id, region)
+                exts.append(self._wb.add(pk, stable_hash(pk), data,
+                                         op_tag=id(op)))
+            exts = tuple(exts)
+            op.artifacts[key] = exts
+            return exts
         requests = []
         for i, (region, data) in enumerate(pieces):
             pk = region_placement_key(ino.inode_id, region)
@@ -419,9 +488,14 @@ class SliceOps:
         return cursor - offset
 
     def _truncate_inode(self, ctx: _Ctx, ino: Inode, length: int) -> None:
+        """Truncate to zero via commit-time commutes (``ClearRegion`` /
+        ``ResetInode``) so queue order decides what survives: writes queued
+        earlier in the same transaction are wiped, later ones kept.  The
+        caller must pass the *view* inode (``_inode``) so regions grown by
+        this transaction's own queued writes are cleared too."""
         if length != 0:
             raise WtfError("only truncate-to-zero is supported")
         for r in range(ino.max_region + 1):
-            ctx.txn.delete("regions", region_key(ino.inode_id, r))
-        ctx.txn.put("inodes", ino.inode_id,
-                    ino.replace(max_region=-1, mtime=self.time_fn()))
+            ctx.txn.commute("regions", region_key(ino.inode_id, r),
+                            ClearRegion())
+        ctx.txn.commute("inodes", ino.inode_id, ResetInode(self.time_fn()))

@@ -184,8 +184,15 @@ except Exception:                                   # pragma: no cover
 def overlay_cached(entries: Sequence[Extent]) -> list[Extent]:
     """`overlay` memoized on the (immutable) entries tuple — region lists
     are read far more often than they change (every read/yank plans against
-    the same committed RegionData), so repeated resolution is pure waste."""
-    if not isinstance(entries, tuple):
+    the same committed RegionData), so repeated resolution is pure waste.
+
+    Entries holding non-``SlicePointer`` pointers (the write-behind
+    buffer's pending placeholders, which carry the full payload bytes) are
+    never memoized: caching them would pin dead payloads in this
+    process-global LRU long after their transaction ended, and such lists
+    are transaction-transient anyway."""
+    if not isinstance(entries, tuple) or any(
+            type(p) is not SlicePointer for e in entries for p in e.ptrs):
         return overlay(entries)
     return list(_overlay_cached_impl(entries))
 

@@ -54,15 +54,20 @@ DEFAULT_MAX_COALESCE = 32 << 10
 class StoreRequest:
     """One planned slice creation: ``data`` placed for ``placement_key``
     (ring lookup) with ``hint`` (server-local backing-file lookup).  ``key``
-    identifies the request in the result map."""
+    identifies the request in the result map.  ``op_tag``, when set, names
+    the logged op that planned the request — the write-behind buffer tags
+    each pending store so cross-op coalescing is measurable
+    (``ClientStats.slices_cross_op_coalesced``)."""
 
-    __slots__ = ("key", "data", "placement_key", "hint")
+    __slots__ = ("key", "data", "placement_key", "hint", "op_tag")
 
-    def __init__(self, key: Any, data: bytes, placement_key: Any, hint: int):
+    def __init__(self, key: Any, data: bytes, placement_key: Any, hint: int,
+                 op_tag: Any = None):
         self.key = key
         self.data = data
         self.placement_key = placement_key
         self.hint = hint
+        self.op_tag = op_tag
 
 
 class _Unit:
@@ -170,6 +175,18 @@ class WriteScheduler:
         want = max(1, cluster.replication)
         groups = plan_store_groups(requests, cluster._ring,
                                    len(cluster.servers), self.max_coalesce)
+        # Cross-op coalescing: requests packed into one covering unit whose
+        # op tag differs from the unit's first request came from *another*
+        # logged op — the win the write-behind buffer exists for.  Counted
+        # once per unit at plan time (replica rounds reuse the same packing).
+        cross_op = 0
+        for g in groups:
+            for unit in g.units:
+                if len(unit.spans) > 1:
+                    first = unit.spans[0][0].op_tag
+                    cross_op += sum(
+                        1 for r, _, _ in unit.spans[1:]
+                        if r.op_tag is not None and r.op_tag != first)
         tasks = [(g, rank) for g in groups for rank in range(want)]
         if len(tasks) > 1:
             results = list(self.io_scheduler.pool().map(
@@ -204,6 +221,7 @@ class WriteScheduler:
         if stats is not None:
             stats.store_batches += rounds
             stats.slices_store_coalesced += coalesced
+            stats.slices_cross_op_coalesced += cross_op
             stats.data_bytes_written += physical
             stats.degraded_stores += degraded
         return out

@@ -3,8 +3,10 @@ import os
 
 import pytest
 
-from repro.core import (SEEK_CUR, SEEK_END, SEEK_SET, AlreadyExists, Cluster,
-                        IsADirectory, NotADirectory, NotFound)
+from repro.core import (SEEK_CUR, SEEK_END, SEEK_SET, AlreadyExists,
+                        BadFileDescriptor, Cluster, InvalidOffset,
+                        IsADirectory, NotADirectory, NotFound,
+                        NotOpenForWriting, WtfError)
 
 
 @pytest.fixture()
@@ -199,3 +201,127 @@ def test_multiple_clients_see_writes_on_completion(cluster):
     c1.write(fd1, b"visible")
     fd2 = c2.open("/shared", "r")
     assert c2.read(fd2) == b"visible"
+
+
+# ----------------------------------------------------- fd write-mode matrix
+def test_read_only_fd_rejects_write_ops(fs):
+    """``_Fd.writable`` is enforced: every mutating op on an ``"r"`` fd
+    raises an EBADF-style error instead of silently mutating the file."""
+    fd = fs.open("/ro", "w"); fs.write(fd, b"immutable"); fs.close(fd)
+    rd = fs.open("/ro", "r")
+    for call in (lambda: fs.write(rd, b"x"),
+                 lambda: fs.pwrite(rd, b"x", 0),
+                 lambda: fs.writev(rd, [b"x", b"y"]),
+                 lambda: fs.pwritev(rd, [b"x"], 0),
+                 lambda: fs.append(rd, b"x"),
+                 lambda: fs.truncate(rd, 0),
+                 lambda: fs.punch(rd, 1)):
+        with pytest.raises(NotOpenForWriting):
+            call()
+    # the EBADF-style error is a BadFileDescriptor subclass
+    with pytest.raises(BadFileDescriptor):
+        fs.write(rd, b"x")
+    # reads and yanks stay legal on a read-only fd
+    assert fs.pread(rd, 9, 0) == b"immutable"
+    assert sum(e.length for e in fs.yank(rd, 4)) == 4
+    fs.close(rd)
+    assert fs.stat("/ro")["size"] == 9
+
+
+def test_read_only_fd_rejects_slice_writes(fs):
+    fd = fs.open("/src0", "w"); fs.write(fd, b"payload"); fs.close(fd)
+    rd = fs.open("/src0", "r")
+    exts = fs.yank(rd, 7)
+    fs.seek(rd, 0)
+    for call in (lambda: fs.paste(rd, exts),
+                 lambda: fs.pastev(rd, [exts]),
+                 lambda: fs.append_slices(rd, exts)):
+        with pytest.raises(NotOpenForWriting):
+            call()
+    fs.close(rd)
+
+
+@pytest.mark.parametrize("mode", ["w", "a", "rw"])
+def test_writable_modes_accept_writes(fs, mode):
+    fd = fs.open("/wm", "w"); fs.write(fd, b"seed"); fs.close(fd)
+    fd = fs.open("/wm", mode)
+    assert fs.write(fd, b"ok") == 2
+    fs.truncate(fd, 0)
+    fs.close(fd)
+
+
+def test_handle_repr_surfaces_mode(fs):
+    with fs.open_file("/reprd", "w") as f:
+        assert "mode='w'" in repr(f)
+        assert f"fd={f.fd}" in repr(f)
+    assert "closed" in repr(f)
+    with fs.open_file("/reprd", "r") as f:
+        assert "mode='r'" in repr(f)
+
+
+# ------------------------------------------------------- rename edge cases
+def test_rename_into_file_component_rejected(fs):
+    """The destination parent must be a directory — never append a dirent
+    into a regular file's data."""
+    fd = fs.open("/plain.txt", "w"); fs.write(fd, b"data"); fs.close(fd)
+    fd = fs.open("/mv", "w"); fs.write(fd, b"m"); fs.close(fd)
+    size_before = fs.stat("/plain.txt")["size"]
+    with pytest.raises(NotADirectory):
+        fs.rename("/mv", "/plain.txt/x")
+    assert fs.stat("/plain.txt")["size"] == size_before, \
+        "the file's data must be untouched by the failed rename"
+    assert fs.exists("/mv")
+
+
+def test_rename_dir_into_own_subtree_rejected(fs):
+    fs.mkdir("/tree"); fs.mkdir("/tree/sub")
+    with pytest.raises(WtfError):
+        fs.rename("/tree", "/tree/sub/cycle")
+    # prefix similarity alone is NOT a cycle
+    fs.mkdir("/treeish")
+    fs.rename("/treeish", "/tree/sub/ok")
+    assert fs.listdir("/tree/sub") == ["ok"]
+    # a FILE named like a prefix moves freely into a sibling dir
+    fd = fs.open("/tr", "w"); fs.write(fd, b"f"); fs.close(fd)
+    fs.rename("/tr", "/tree/tr2")
+    assert fs.exists("/tree/tr2")
+
+
+def test_rename_missing_dest_parent_still_notfound(fs):
+    fd = fs.open("/m", "w"); fs.write(fd, b"m"); fs.close(fd)
+    with pytest.raises(NotFound):
+        fs.rename("/m", "/nodir/m")
+
+
+# ------------------------------------------------------- negative offsets
+def test_negative_offsets_rejected(fs):
+    fd = fs.open("/neg", "w")
+    fs.write(fd, b"0123456789")
+    with pytest.raises(InvalidOffset):
+        fs.seek(fd, -1)
+    with pytest.raises(InvalidOffset):
+        fs.seek(fd, -100, SEEK_CUR)
+    with pytest.raises(InvalidOffset):
+        fs.seek(fd, -11, SEEK_END)
+    assert fs.tell(fd) == 10, "failed seeks must not move the offset"
+    with pytest.raises(InvalidOffset):
+        fs.pread(fd, 4, -1)
+    with pytest.raises(InvalidOffset):
+        fs.preadv(fd, [4], -2)
+    with pytest.raises(InvalidOffset):
+        fs.readv(fd, [(0, 4), (-3, 4)])
+    with pytest.raises(InvalidOffset):
+        fs.readv(fd, [(0, -4)])
+    with pytest.raises(InvalidOffset):
+        fs.yankv(fd, [(-1, 4)])
+    with pytest.raises(InvalidOffset):
+        fs.pwrite(fd, b"x", -1)
+    with pytest.raises(InvalidOffset):
+        fs.pwritev(fd, [b"x"], -1)
+    # InvalidOffset is a WtfError (EINVAL-style), and legal seeks still work
+    assert issubclass(InvalidOffset, WtfError)
+    assert fs.seek(fd, 3) == 3
+    assert fs.seek(fd, -2, SEEK_CUR) == 1
+    fs.seek(fd, -10, SEEK_END)
+    assert fs.read(fd, 2) == b"01"
+    fs.close(fd)

@@ -274,7 +274,7 @@ def test_overlapping_pwritev_batches_serialize_all_or_nothing(tmp_path,
 
 def test_fd_state_restored_after_failed_txn(cluster, fs):
     make_file(fs, "/f", b"0123456789")
-    fd0 = fs.open("/f", "r")
+    fd0 = fs.open("/f", "rw")
     fs.seek(fd0, 4)
     other = cluster.client()
     with pytest.raises(TransactionAborted):
@@ -285,3 +285,41 @@ def test_fd_state_restored_after_failed_txn(cluster, fs):
             other.close(ofd)
             fs.pwrite(fd0, data, 8)
     assert fs.tell(fd0) == 4, "fd offset must roll back with the txn"
+
+
+def test_truncate_after_write_in_same_txn(cluster, fs):
+    """Truncate composes with the txn's own queued writes in queue order:
+    writes BEFORE the truncate are wiped, writes AFTER survive — a raw
+    region delete used to resurrect the earlier writes at commit."""
+    make_file(fs, "/t1", b"persisted")
+    fd = fs.open("/t1", "rw")
+    with fs.transaction():
+        fs.pwrite(fd, b"X" * 100, 0)
+        fs.truncate(fd, 0)
+        assert fs.stat("/t1")["size"] == 0
+    assert fs.stat("/t1")["size"] == 0
+    assert read_file(fs, "/t1") == b""
+
+    make_file(fs, "/t2", b"persisted")
+    fd2 = fs.open("/t2", "rw")
+    with fs.transaction():
+        fs.pwrite(fd2, b"wiped out!", 0)
+        fs.truncate(fd2, 0)
+        fs.pwrite(fd2, b"kept", 0)
+        assert fs.stat("/t2")["size"] == 4
+    assert read_file(fs, "/t2") == b"kept"
+
+
+def test_open_w_truncates_same_txn_writes(cluster, fs):
+    """open(path, 'w') truncate semantics inside a transaction must also
+    wipe regions grown by the SAME transaction's earlier writes."""
+    make_file(fs, "/t3", b"persisted")
+    with fs.transaction():
+        fd = fs.open("/t3", "rw")
+        fs.pwrite(fd, b"A" * 70_000, 0)    # grows past region 0 (64 KiB)
+        fs.close(fd)
+        fd = fs.open("/t3", "w")           # truncate semantics
+        fs.write(fd, b"fresh")
+        fs.close(fd)
+    assert fs.stat("/t3")["size"] == 5
+    assert read_file(fs, "/t3") == b"fresh"

@@ -1,0 +1,343 @@
+"""Transaction-scoped write-behind buffer (``wbuf``).
+
+Covers the tentpole guarantees:
+
+  * batching: many small write ops under one transaction flush through the
+    write scheduler as ONE planning pass — strictly fewer store rounds than
+    the same ops with the buffer off, with cross-op coalescing measured in
+    ``ClientStats.slices_cross_op_coalesced`` / ``writeback_flushes``;
+  * read-your-buffered-writes: reads (and yanks, directory listings, EOF
+    arithmetic) inside the transaction observe buffered writes via the
+    pending-extent overlay, before any store was dispatched;
+  * abort: discarding the buffer leaves ZERO storage-server garbage — no
+    store round was ever issued;
+  * durability order: a storage failure mid-flush fails the commit and
+    nothing becomes visible (slices-before-metadata, §2.1);
+  * replay: a KV-level abort after the flush replays the op log against the
+    recorded (resolved) batch pointers — data is never stored twice (§2.6);
+  * opt-in surfaces: ``Cluster(write_behind=True)`` and
+    ``WtfFile(buffered=True)``.
+"""
+import pytest
+
+from repro.core import (Cluster, NotOpenForWriting, StorageError,
+                        TransactionAborted, WtfError)
+from repro.core.testing import make_flaky_kv, make_flaky_server
+
+REGION = 64 * 1024
+
+
+def make_cluster(tmp_path, tag, write_behind, n_servers=3, replication=1):
+    return Cluster(n_servers=n_servers, data_dir=str(tmp_path / tag),
+                   replication=replication, region_size=REGION,
+                   write_behind=write_behind)
+
+
+def read_file(fs, path):
+    with fs.open_file(path) as f:
+        return f.read()
+
+
+def server_slices_written(cluster):
+    return sum(s.stats.slices_written for s in cluster.servers.values())
+
+
+def small_ops_txn(fs, path, n_ops=24, size=128):
+    """N small pwrites under one transaction; returns the expected bytes."""
+    fd = fs.open(path, "w")
+    with fs.transaction():
+        off = 0
+        for i in range(n_ops):
+            fs.pwrite(fd, bytes([i % 251]) * size, off)
+            off += size
+    fs.close(fd)
+    return b"".join(bytes([i % 251]) * size for i in range(n_ops))
+
+
+# ------------------------------------------------------------------ batching
+def test_txn_of_small_writes_flushes_once_with_fewer_rounds(tmp_path):
+    runs = {}
+    for wb in (True, False):
+        cluster = make_cluster(tmp_path, f"wb{wb}", wb)
+        fs = cluster.client()
+        expect = small_ops_txn(fs, "/log")
+        assert read_file(fs, "/log") == expect
+        runs[wb] = fs.stats
+        cluster.close()
+    on, off = runs[True], runs[False]
+    assert on.store_batches < off.store_batches, \
+        "write-behind must issue strictly fewer store rounds"
+    assert on.writeback_flushes >= 1
+    assert on.slices_cross_op_coalesced > 0, \
+        "small cross-op chunks in one region must coalesce"
+    assert off.writeback_flushes == 0
+    assert on.logical_bytes_written == off.logical_bytes_written
+
+
+def test_cross_region_buffered_writes_fan_out_but_batch(tmp_path):
+    """Buffered ops spanning several regions: one flush, one round per
+    region placement group, contents exact."""
+    cluster = make_cluster(tmp_path, "span", True)
+    fs = cluster.client()
+    fd = fs.open("/wide", "w")
+    payload = {}
+    flushes0 = fs.stats.writeback_flushes
+    with fs.transaction():
+        for r in range(3):                    # one small write per region
+            data = bytes([r + 1]) * 512
+            fs.pwrite(fd, data, r * REGION)
+            payload[r] = data
+    for r, data in payload.items():
+        assert fs.pread(fd, 512, r * REGION) == data
+    assert fs.stats.writeback_flushes == flushes0 + 1
+    fs.close(fd)
+    cluster.close()
+
+
+def test_buffered_handle_opt_in_without_cluster_knob(tmp_path):
+    """``open_file(..., buffered=True)`` defers stores even when the
+    cluster-level knob is off; an unbuffered sibling on the same client
+    still stores eagerly."""
+    cluster = make_cluster(tmp_path, "handle", False)
+    fs = cluster.client()
+    with fs.open_file("/buf", "w", buffered=True) as f:
+        assert "buffered" in repr(f)
+        with fs.transaction():
+            for i in range(8):
+                f.pwrite(b"%d" % i * 64, i * 64)
+        flushes = fs.stats.writeback_flushes
+        assert flushes == 1
+    assert read_file(fs, "/buf")[:64] == b"0" * 64
+    # unbuffered handle on the same client: no new flushes
+    with fs.open_file("/plain", "w") as f:
+        f.write(b"eager")
+    assert fs.stats.writeback_flushes == flushes
+    assert read_file(fs, "/plain") == b"eager"
+    cluster.close()
+
+
+# ------------------------------------------- read-your-buffered-writes (RYW)
+def test_reads_inside_txn_observe_buffered_writes(tmp_path):
+    cluster = make_cluster(tmp_path, "ryw", True)
+    fs = cluster.client()
+    fd = fs.open("/f", "w")
+    with fs.transaction():
+        fs.pwrite(fd, b"A" * 100, 0)
+        fs.pwrite(fd, b"B" * 100, 100)
+        # scalar + vectored reads see the buffer before any store happened
+        assert fs.pread(fd, 200, 0) == b"A" * 100 + b"B" * 100
+        assert fs.readv(fd, [(50, 100)]) == [b"A" * 50 + b"B" * 50]
+        # EOF arithmetic sees buffered length
+        assert fs.stat("/f")["size"] == 200
+        # overwrite inside the txn: later buffered layer wins
+        fs.pwrite(fd, b"C" * 50, 75)
+        assert fs.pread(fd, 200, 0) == b"A" * 75 + b"C" * 50 + b"B" * 75
+    assert read_file(fs, "/f") == b"A" * 75 + b"C" * 50 + b"B" * 75
+    fs.close(fd)
+    cluster.close()
+
+
+def test_dir_entries_and_appends_observe_buffer(tmp_path):
+    """Directory machinery runs on the same buffered append path: files
+    created inside the transaction are listable inside it."""
+    cluster = make_cluster(tmp_path, "dir", True)
+    fs = cluster.client()
+    with fs.transaction():
+        fs.mkdir("/d")
+        fd = fs.open("/d/x", "w")
+        fs.write(fd, b"payload")
+        fs.close(fd)
+        assert fs.listdir("/d") == ["x"]
+        a = fs.open("/d/x", "a")          # append lands at buffered EOF
+        fs.append(a, b"-tail")
+        fs.close(a)
+    assert read_file(fs, "/d/x") == b"payload-tail"
+    cluster.close()
+
+
+def test_yank_paste_of_buffered_data_within_txn(tmp_path):
+    cluster = make_cluster(tmp_path, "yank", True)
+    fs = cluster.client()
+    fd = fs.open("/y", "w")
+    with fs.transaction():
+        fs.pwrite(fd, b"0123456789" * 10, 0)
+        fs.seek(fd, 20)
+        exts = fs.yank(fd, 30)            # pending pointers
+        fs.seek(fd, 100)
+        fs.paste(fd, exts)                # pasted back while still pending
+        assert fs.pread(fd, 30, 100) == (b"0123456789" * 10)[20:50]
+    assert read_file(fs, "/y")[100:130] == (b"0123456789" * 10)[20:50]
+    fs.close(fd)
+    cluster.close()
+
+
+def test_yanked_pending_extents_resolve_after_commit(tmp_path):
+    """Extents yanked inside a buffered txn resolve to real pointers at the
+    flush; pasting them in a LATER transaction is pure metadata."""
+    cluster = make_cluster(tmp_path, "resolve", True)
+    fs = cluster.client()
+    fd = fs.open("/src", "w")
+    with fs.transaction():
+        fs.write(fd, b"precious" * 8)
+        fs.seek(fd, 0)
+        exts = fs.yank(fd, 64)
+    dst = fs.open("/dst", "w")
+    writes_before = sum(s.stats.bytes_written
+                        for s in cluster.servers.values())
+    fs.paste(dst, exts)                   # resolved now: metadata only
+    assert sum(s.stats.bytes_written
+               for s in cluster.servers.values()) == writes_before
+    assert read_file(fs, "/dst") == b"precious" * 8
+    fs.close(fd); fs.close(dst)
+    cluster.close()
+
+
+def test_pasting_discarded_pending_extents_rejected(tmp_path):
+    """Pending extents from an ABORTED buffer are dead: pasting them later
+    must raise instead of committing dangling pointers."""
+    cluster = make_cluster(tmp_path, "dead", True)
+    fs = cluster.client()
+    fd = fs.open("/src", "w")
+    with fs.transaction() as t:
+        fs.write(fd, b"doomed data!")
+        fs.seek(fd, 0)
+        exts = fs.yank(fd, 12)
+        t.abort()
+    dst = fs.open("/dst2", "w")
+    with pytest.raises(WtfError):
+        fs.paste(dst, exts)
+    # ...and a LIVE buffer must not launder them either: the paste fails
+    # immediately, and the surrounding transaction's own writes survive.
+    with fs.transaction():
+        fs.pwrite(dst, b"legit", 0)
+        with pytest.raises(WtfError):
+            fs.paste(dst, exts)
+    assert read_file(fs, "/dst2") == b"legit"
+    cluster.close()
+
+
+# ------------------------------------------------------------- abort / crash
+def test_abort_discards_buffer_and_leaves_no_garbage(tmp_path):
+    cluster = make_cluster(tmp_path, "abort", True)
+    fs = cluster.client()
+    fd = fs.open("/keep", "w")
+    fs.write(fd, b"committed")
+    written_before = server_slices_written(cluster)
+    with fs.transaction() as t:
+        fs.pwrite(fd, b"X" * 1000, 0)
+        fs.pwrite(fd, b"Y" * 1000, 1000)
+        assert fs.pread(fd, 4, 0) == b"XXXX"
+        t.abort()
+    assert not fs._wb.pending
+    assert server_slices_written(cluster) == written_before, \
+        "an aborted write-behind txn must never have stored a slice"
+    assert read_file(fs, "/keep") == b"committed"
+    fs.close(fd)
+    cluster.close()
+
+
+def test_mid_flush_storage_failure_leaves_nothing_visible(tmp_path):
+    """Every replica candidate refuses the flush round: the commit fails
+    with ``StorageError`` and neither file contents nor namespace changes
+    are observable (slices-before-metadata, §2.1)."""
+    cluster = make_cluster(tmp_path, "crash", True, n_servers=2)
+    fs = cluster.client()
+    fd = fs.open("/victim", "w")
+    fs.write(fd, b"old-contents")
+    for sid in list(cluster.servers):
+        make_flaky_server(cluster, sid, fail_on={"create_slices": {1},
+                                                 "create_slice": {1}})
+    with pytest.raises(StorageError):
+        with fs.transaction():
+            fs.pwrite(fd, b"NEW" * 100, 0)
+            fs.open(fd2 := "/brand-new", "w")
+    reader = cluster.client()
+    assert read_file(reader, "/victim") == b"old-contents"
+    assert not reader.exists(fd2)
+    assert not fs._wb.pending
+    cluster.close()
+
+
+def test_partial_flush_then_failure_still_invisible(tmp_path):
+    """Some placement groups store before another group exhausts its
+    candidates: the commit still fails wholesale and no partial state is
+    visible — stored slices are unreferenced garbage for the GC."""
+    cluster = make_cluster(tmp_path, "partial", True, n_servers=2)
+    fs = cluster.client()
+    fd = fs.open("/span", "w")
+    fs.write(fd, b"base")
+    # Server 0 accepts exactly ONE store round, server 1 none: with three
+    # placement groups (three regions) at most one group lands and at
+    # least two exhaust every candidate — the flush must raise after a
+    # partial store.
+    everything = set(range(1, 32))
+    make_flaky_server(cluster, 0, fail_on={"create_slices": everything - {1},
+                                           "create_slice": everything - {1}})
+    make_flaky_server(cluster, 1, fail_on={"create_slices": everything,
+                                           "create_slice": everything})
+    with pytest.raises(StorageError):
+        with fs.transaction():
+            fs.pwrite(fd, b"R0" * 64, 0)
+            fs.pwrite(fd, b"R1" * 64, REGION)
+            fs.pwrite(fd, b"R2" * 64, 2 * REGION)
+    reader = cluster.client()
+    assert read_file(reader, "/span") == b"base"
+    assert reader.stat("/span")["size"] == 4
+    cluster.close()
+
+
+# ------------------------------------------------------------------- replay
+def test_replay_reuses_recorded_batch_pointers(tmp_path):
+    """KV abort after the flush: the §2.6 replay reuses the resolved batch
+    pointers — identical contents, no second store of any byte."""
+    results = {}
+    for inject in (False, True):
+        cluster = make_cluster(tmp_path, f"replay{inject}", True)
+        if inject:
+            flaky = make_flaky_kv(cluster, fail_commits={2})
+        fs = cluster.client()
+        fd = fs.open("/r", "w")           # auto-commit: KV commit #1
+        with fs.transaction():            # txn commit: KV commit #2
+            off = 0
+            for i in range(12):
+                fs.pwrite(fd, bytes([i + 1]) * 200, off)
+                off += 200
+        results[inject] = {
+            "data": read_file(fs, "/r"),
+            "slices": server_slices_written(cluster),
+            "bytes": sum(s.stats.bytes_written
+                         for s in cluster.servers.values()),
+            "flushes": fs.stats.writeback_flushes,
+            "retries": fs.stats.txn_retries,
+        }
+        if inject:
+            assert flaky.injected == 1
+        fs.close(fd)
+        cluster.close()
+    clean, replayed = results[False], results[True]
+    assert replayed["data"] == clean["data"]
+    assert replayed["retries"] == clean["retries"] + 1
+    # one flush for the auto-commit open, one for the txn — and the replay
+    # added NO extra flush (artifacts were already resolved)
+    assert replayed["flushes"] == clean["flushes"] == 2
+    assert replayed["slices"] == clean["slices"], \
+        "replay must reuse the recorded pointers, not re-store"
+    assert replayed["bytes"] == clean["bytes"]
+
+
+def test_auto_commit_write_behind_roundtrip(tmp_path):
+    """With the cluster knob on, plain auto-commit ops buffer and flush at
+    their own commit — semantics identical to eager stores."""
+    cluster = make_cluster(tmp_path, "auto", True)
+    fs = cluster.client()
+    fd = fs.open("/a", "w")
+    fs.write(fd, b"hello ")
+    fs.write(fd, b"world")
+    assert read_file(fs, "/a") == b"hello world"
+    assert fs.stats.writeback_flushes >= 2
+    fs.close(fd)
+    # enforcement still applies under buffering
+    rd = fs.open("/a", "r")
+    with pytest.raises(NotOpenForWriting):
+        fs.write(rd, b"nope")
+    cluster.close()

@@ -1,16 +1,21 @@
 """Property test: random interleavings of scalar writes, vectored writes and
 yank/paste against an in-memory reference file, with the write scheduler ON
-and OFF.
+and OFF — and with the write-behind buffer ON (the whole sequence under one
+transaction, reads served from the pending overlay until the commit flush).
 
 For every generated op sequence the WTF file's contents must equal the
 reference bytearray's, *regardless of batching*, and the client's stats must
 satisfy the scheduler's invariants:
 
-  * ``logical_bytes_written`` is identical in both modes (batching is
+  * ``logical_bytes_written`` is identical in all modes (batching is
     invisible to the application);
-  * the batched run never issues MORE store rounds than the scalar run;
+  * the batched run never issues MORE store rounds than the scalar run,
+    and the write-behind run never more than the batched run's scalar
+    baseline;
   * the scalar pipeline never reports coalescing (it has none);
-  * no ``degraded_stores`` without injected failures.
+  * no ``degraded_stores`` without injected failures;
+  * in the write-behind run, the contents observed INSIDE the transaction
+    (pre-flush, straight from the buffer) already equal the model.
 
 Runs with seeded ``random`` always; when hypothesis is installed (CI) the
 same driver is additionally fuzzed with generated op lists.
@@ -54,52 +59,76 @@ def splice(buf: bytearray, off: int, data: bytes) -> None:
     buf[off:off + len(data)] = data
 
 
-def apply_ops(cluster: Cluster, ops: list) -> tuple:
+def apply_ops(cluster: Cluster, ops: list, in_txn: bool = False) -> tuple:
     """Apply ``ops`` to a WTF file and the reference model; return
-    (final file contents, reference contents, client stats)."""
+    (final file contents, reference contents, client stats, pre-commit
+    contents — None unless ``in_txn``)."""
     fs = cluster.client()
     ref = bytearray()
     fd = fs.open("/prop", "w")
-    for op in ops:
-        if op[0] == "pwrite":
-            _, off, data = op
-            fs.pwrite(fd, data, off)
-            splice(ref, off, data)
-        elif op[0] == "pwritev":
-            _, off, chunks = op
-            fs.pwritev(fd, chunks, off)
-            splice(ref, off, b"".join(chunks))
-        elif op[0] == "append":
-            fs.append(fd, op[1])
-            ref.extend(op[1])
-        else:
-            _, src, n, dst = op
-            extents = fs.yankv(fd, [(src, n)])[0]
-            fs.seek(fd, dst)
-            fs.paste(fd, extents)
-            splice(ref, dst, bytes(ref[src:src + n]))   # EOF-clamped copy
+    buffered = None
+
+    def drive():
+        nonlocal buffered
+        for op in ops:
+            if op[0] == "pwrite":
+                _, off, data = op
+                fs.pwrite(fd, data, off)
+                splice(ref, off, data)
+            elif op[0] == "pwritev":
+                _, off, chunks = op
+                fs.pwritev(fd, chunks, off)
+                splice(ref, off, b"".join(chunks))
+            elif op[0] == "append":
+                fs.append(fd, op[1])
+                ref.extend(op[1])
+            else:
+                _, src, n, dst = op
+                extents = fs.yankv(fd, [(src, n)])[0]
+                fs.seek(fd, dst)
+                fs.paste(fd, extents)
+                splice(ref, dst, bytes(ref[src:src + n]))  # EOF-clamped copy
+        if in_txn:
+            # read-your-buffered-writes: the model must already hold
+            buffered = fs.pread(fd, len(ref) + 1024, 0)
+
+    if in_txn:
+        with fs.transaction():    # aborts (not commits) if drive() raises
+            drive()
+    else:
+        drive()
     got = fs.pread(fd, len(ref) + 1024, 0)
     fs.close(fd)
-    return got, bytes(ref), fs.stats
+    return got, bytes(ref), fs.stats, buffered
 
 
 def check_interleaving(tmp_path, ops) -> None:
     runs = {}
-    for batching in (True, False):
-        d = str(tmp_path / f"run{batching}")
+    # (key, store_batching, write_behind)
+    for key, batching, wb in (("batched", True, False),
+                              ("scalar", False, False),
+                              ("writeback", True, True)):
+        d = str(tmp_path / f"run_{key}")
         cluster = Cluster(n_servers=3, data_dir=d, replication=1,
                           region_size=REGION, num_backing_files=2,
-                          store_batching=batching)
+                          store_batching=batching, write_behind=wb)
         try:
-            runs[batching] = apply_ops(cluster, ops)
+            runs[key] = apply_ops(cluster, ops, in_txn=wb)
         finally:
             cluster.close()
-    for batching, (got, ref, stats) in runs.items():
-        assert got == ref, f"contents diverged from model (batching={batching})"
+    for key, (got, ref, stats, buffered) in runs.items():
+        assert got == ref, f"contents diverged from model ({key})"
         assert stats.degraded_stores == 0
-    batched, scalar = runs[True][2], runs[False][2]
+        if buffered is not None:
+            assert buffered == ref, \
+                "buffered reads inside the txn diverged from model"
+    batched, scalar = runs["batched"][2], runs["scalar"][2]
+    writeback = runs["writeback"][2]
     assert batched.logical_bytes_written == scalar.logical_bytes_written
+    assert writeback.logical_bytes_written == scalar.logical_bytes_written
     assert batched.store_batches <= scalar.store_batches
+    assert writeback.store_batches <= scalar.store_batches
+    assert writeback.writeback_flushes >= 1
     assert scalar.slices_store_coalesced == 0
 
 
