@@ -19,8 +19,14 @@ from typing import Callable, Dict, List, Optional
 
 from repro.baselines import HdfsLikeCluster
 from repro.core import Cluster
+from repro.core.iosched import DEFAULT_MAX_GAP
+from repro.core.wsched import DEFAULT_MAX_COALESCE
 
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
+
+# Results schema: bump when a benchmark's JSON shape changes so trajectory
+# tooling can evolve without guessing.  v2 added the field itself.
+RESULTS_SCHEMA_VERSION = 2
 
 
 @dataclass
@@ -75,6 +81,13 @@ class Timer:
 @contextmanager
 def wtf_cluster(scale: Scale, replication: int = 1, **cluster_kw):
     d = tempfile.mkdtemp(prefix="wtf_bench_")
+    # Benchmarks PIN the historical 32 KiB gap/pack thresholds (the
+    # library default is now adaptive): the paper-reproduction accounting
+    # — e.g. the sort benchmark's premise that key-only reads of 64 KiB
+    # records never coalesce across records — must stay comparable run
+    # over run and PR over PR.  Pass explicit knobs to override.
+    cluster_kw.setdefault("fetch_gap_bytes", DEFAULT_MAX_GAP)
+    cluster_kw.setdefault("store_coalesce_bytes", DEFAULT_MAX_COALESCE)
     c = Cluster(n_servers=scale.n_servers, data_dir=d,
                 replication=replication, region_size=scale.region_size,
                 **cluster_kw)
@@ -126,6 +139,7 @@ def lat_summary(lat_s: List[float]) -> dict:
 def save_result(name: str, payload: dict) -> Path:
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.json"
+    payload = {"schema_version": RESULTS_SCHEMA_VERSION, **payload}
     path.write_text(json.dumps(payload, indent=1, default=str))
     return path
 

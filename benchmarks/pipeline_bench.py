@@ -3,10 +3,14 @@
   * zero-copy global shuffle of a token dataset (epoch files) vs a naive
     read-everything/rewrite shuffle;
   * incremental checkpointing (slice sharing) and zero-copy RESHARD
-    (256→512-host style re-partition) vs full rewrite.
+    (256→512-host style re-partition) vs full rewrite;
+  * the **overlap scenario** (``run_overlap`` / ``pipeline_overlap``):
+    sync vs async prefetch over identical batch streams — the unified
+    I/O runtime's futures surface hiding storage rounds behind compute.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
@@ -93,5 +97,154 @@ def run(scale: Scale) -> dict:
     return out
 
 
+def run_overlap(scale: Scale) -> dict:
+    """Sync vs async prefetch over identical pipeline batch streams.
+
+    Two comparisons, both against the same shuffled epoch file:
+
+    1. **End-to-end pipeline.**  ``DataPipeline`` consumed with a small
+       simulated compute step per batch, once with ``async_prefetch=False``
+       (each window's plan+fetch serializes with consumption — one blocked
+       wait per window) and once with the issue-ahead async prefetcher.
+       Asserts the streams are byte-identical (zero stale reads) and that
+       async blocks strictly fewer times.
+    2. **Fixed window list.**  The pipeline's exact window access pattern
+       driven directly through ``RecordFile`` so the window count is
+       deterministic: async must issue NO more storage rounds than sync
+       over the same windows, while blocking strictly less.  A second
+       async pass over the same windows must hit the read-plan cache.
+    """
+    import dataclasses
+
+    from repro.data.pipeline import (DataPipeline, PipelineConfig,
+                                     PipelineState)
+
+    block_tokens = 128
+    n_tokens = min(scale.total_bytes // 16, 1 << 18)
+    compute_s = 0.005                      # simulated per-batch step time
+    n_batches = 24
+    out = {"scale": scale.name}
+    with wtf_cluster(scale) as cluster:
+        fs = cluster.client()
+        fs.mkdir("/data")
+        rng = np.random.RandomState(0)
+        write_token_shard(fs, "/data/shard0",
+                          iter(rng.randint(0, 50000, n_tokens)),
+                          block_tokens)
+        base_cfg = PipelineConfig(
+            src_paths=("/data/shard0",), work_dir="/data/epochs",
+            block_tokens=block_tokens, global_batch=8, seed=1,
+            prefetch=4, async_prefetch=False)
+
+        # ---- 1. end-to-end DataPipeline, sync vs async prefetch
+        streams, results = {}, {}
+        for key, async_on in (("sync", False), ("async", True)):
+            cfg = dataclasses.replace(base_cfg, async_prefetch=async_on)
+            pipe = DataPipeline(fs, cfg, state=PipelineState(0, 0))
+            it = iter(pipe)
+            before = fs.stats.snapshot()
+            t0 = time.perf_counter()
+            toks = []
+            for _ in range(n_batches):
+                batch = next(it)
+                toks.append(np.array(batch["tokens"]))
+                time.sleep(compute_s)
+            secs = time.perf_counter() - t0
+            it.close()                     # joins the producer: quiescent
+            after = fs.stats.snapshot()
+            streams[key] = toks
+            results[key] = {
+                "wall_s": secs,
+                "blocked_waits":
+                    after["blocked_waits"] - before["blocked_waits"],
+                "fetch_batches":
+                    after["fetch_batches"] - before["fetch_batches"],
+            }
+        assert all(np.array_equal(a, b) for a, b in
+                   zip(streams["sync"], streams["async"])), \
+            "async prefetch must deliver the identical batch stream"
+        s, a = results["sync"], results["async"]
+        assert a["blocked_waits"] < s["blocked_waits"], (
+            f"async prefetch must block strictly less: "
+            f"{a['blocked_waits']} vs {s['blocked_waits']}")
+        out["pipeline"] = {"sync": s, "async": a,
+                           "overlap_speedup": s["wall_s"]
+                           / max(a["wall_s"], 1e-9)}
+        print(f"[pipeline/overlap] {n_batches} batches: sync "
+              f"{s['wall_s'] * 1e3:.0f} ms ({s['blocked_waits']} blocked "
+              f"waits) | async {a['wall_s'] * 1e3:.0f} ms "
+              f"({a['blocked_waits']} blocked waits) | "
+              f"{out['pipeline']['overlap_speedup']:.2f}x")
+
+        # ---- 2. deterministic window list through RecordFile
+        f = RecordFile(fs, "/data/epochs/epoch-00000", block_tokens * 4)
+        window = 4
+        per_batch = base_cfg.global_batch
+        n_windows = n_batches // window
+        windows = [[(w * window * per_batch + i * per_batch, per_batch)
+                    for i in range(window)] for w in range(n_windows)]
+
+        def consume(raws):
+            time.sleep(compute_s)
+            return sum(len(r) for r in raws)
+
+        before = fs.stats.snapshot()
+        sync_bytes = sum(consume(f.read_record_runs(w)) for w in windows)
+        mid = fs.stats.snapshot()
+        # async issue-ahead: window W+1 in flight while W is consumed
+        futs = f.read_record_runs_async(windows[0])
+        async_bytes = 0
+        for w in windows[1:]:
+            nxt = f.read_record_runs_async(w)
+            async_bytes += consume(futs.result())
+            futs = nxt
+        async_bytes += consume(futs.result())
+        after = fs.stats.snapshot()
+        # hot re-read: same windows again → the plan cache must serve them
+        rehit = [f.read_record_runs_async(w).result() for w in windows]
+        final = fs.stats.snapshot()
+
+        assert async_bytes == sync_bytes
+        sync_rounds = mid["fetch_batches"] - before["fetch_batches"]
+        async_rounds = after["fetch_batches"] - mid["fetch_batches"]
+        sync_blocked = mid["blocked_waits"] - before["blocked_waits"]
+        async_blocked = after["blocked_waits"] - mid["blocked_waits"]
+        cache_hits = final["plan_cache_hits"] - after["plan_cache_hits"]
+        assert async_rounds <= sync_rounds, (
+            f"async prefetch must not add storage rounds: "
+            f"{async_rounds} vs {sync_rounds}")
+        assert async_blocked < sync_blocked, (
+            f"issue-ahead must block strictly less: "
+            f"{async_blocked} vs {sync_blocked}")
+        assert cache_hits > 0, "hot re-read must hit the plan cache"
+        assert all(got == f.read_record_runs(w)
+                   for got, w in zip(rehit, windows)), \
+            "plan-cache hits must serve the identical bytes (no staleness)"
+        f.close()
+        out["windows"] = {
+            "n_windows": n_windows,
+            "sync": {"fetch_batches": sync_rounds,
+                     "blocked_waits": sync_blocked},
+            "async": {"fetch_batches": async_rounds,
+                      "blocked_waits": async_blocked},
+            "reread_plan_cache_hits": cache_hits,
+        }
+        print(f"[pipeline/overlap] {n_windows} windows: rounds "
+              f"{sync_rounds}->{async_rounds} | blocked waits "
+              f"{sync_blocked}->{async_blocked} | re-read plan-cache "
+              f"hits {cache_hits}")
+        out["io_runtime"] = cluster.total_stats()["io_runtime"]
+    save_result("pipeline_overlap", out)
+    return out
+
+
 if __name__ == "__main__":
-    run(Scale.of("quick"))
+    _scale = Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick")
+    _scenario = sys.argv[2] if len(sys.argv) > 2 else "pipeline"
+    if _scenario not in ("pipeline", "overlap", "all"):
+        raise ValueError(f"unknown scenario {_scenario!r}: "
+                         "choose pipeline, overlap, or all")
+    if _scenario in ("pipeline", "all"):
+        run(_scale)
+    if _scenario in ("overlap", "all"):
+        run_overlap(_scale)

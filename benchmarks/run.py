@@ -34,6 +34,9 @@ BENCHES = {
                "benchmarks.append_bench"),
     "pipeline": ("beyond-paper (shuffle/checkpoint/reshard zero-copy)",
                  "benchmarks.pipeline_bench"),
+    "pipeline_overlap": ("async I/O runtime (sync vs async prefetch "
+                         "overlap, plan-cache re-reads)",
+                         "benchmarks.pipeline_bench", "run_overlap"),
 }
 
 
@@ -47,6 +50,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     scale = Scale.of(args.scale)
     names = (args.only.split(",") if args.only else list(BENCHES))
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark name(s) {', '.join(unknown)}; "
+                 f"valid names: {', '.join(sorted(BENCHES))}")
 
     t0 = time.time()
     failures = []

@@ -39,4 +39,10 @@ echo "== smoke: write benchmark (many small ops, write-behind on/off) =="
 # asserts strictly fewer store rounds with the write-behind buffer on
 timeout "${WRITE_BENCH_TIMEOUT:-300}" python -m benchmarks.write_bench smoke smallops
 
+echo "== smoke: pipeline overlap (sync vs async prefetch) =="
+# asserts async prefetch blocks strictly less, issues no more storage
+# rounds over deterministic windows, and hits the plan cache on re-reads;
+# leaves pipeline_overlap.json in benchmarks/results/ for CI to upload
+timeout "${PIPELINE_BENCH_TIMEOUT:-300}" python -m benchmarks.pipeline_bench smoke overlap
+
 echo "CI OK"

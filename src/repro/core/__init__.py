@@ -17,6 +17,7 @@ from .errors import (AlreadyExists, BadFileDescriptor, InvalidOffset,
 from .gc import GarbageCollector
 from .handle import WtfFile
 from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
+from .iort import IoFuture, IoRuntime, IoTask, PlanCache
 from .iosched import SliceScheduler
 from .wbuf import PendingPtr, WriteBehindBuffer
 from .wsched import StoreRequest, WriteScheduler
@@ -30,6 +31,7 @@ from .storage import StorageServer
 __all__ = [
     "Cluster", "WtfClient", "WtfTransaction", "WtfFile", "ClientStats",
     "SliceScheduler", "WriteScheduler", "StoreRequest",
+    "IoRuntime", "IoFuture", "IoTask", "PlanCache",
     "WriteBehindBuffer", "PendingPtr",
     "WarpKV", "StorageServer",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",

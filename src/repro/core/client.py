@@ -37,6 +37,7 @@ from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET,  # noqa: F401
 from .errors import StorageError
 from .handle import WtfFile  # noqa: F401  (re-export)
 from .inode import DEFAULT_REGION_SIZE
+from .iort import IoRuntime, PlanCache, run_with_failover
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
 from .wsched import DEFAULT_MAX_COALESCE, StoreRequest, WriteScheduler
 from .metadata import WarpKV
@@ -86,6 +87,12 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         self.write_behind = cluster.write_behind
         self._op_buffered = False
         self._wb = WriteBehindBuffer()
+        # Read-plan cache (``iort.PlanCache``): hot re-reads skip overlay
+        # resolution when the touched regions' KV versions are unchanged —
+        # the commutes a commit applies bump them, which is the whole
+        # invalidation story.  Per-client: validation records the same read
+        # dependencies a fresh plan would.
+        self._plan_cache = PlanCache()
         self.time_fn: Callable[[], int] = lambda: int(time.time())
 
 
@@ -115,15 +122,41 @@ class Cluster:
                  region_size: int = DEFAULT_REGION_SIZE,
                  coordinator_replicas: int = 3,
                  num_backing_files: int = 8,
-                 fetch_gap_bytes: int = DEFAULT_MAX_GAP,
+                 fetch_gap_bytes: Optional[int] = None,
                  fetch_workers: Optional[int] = None,
-                 store_coalesce_bytes: int = DEFAULT_MAX_COALESCE,
+                 store_coalesce_bytes: Optional[int] = None,
                  store_batching: bool = True,
                  write_behind: bool = False):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
         import os
+
+        # Knob validation up front: a bad threshold or an unachievable
+        # replica count must fail HERE, not misbehave mid-op (a negative
+        # gap silently disables coalescing; replication > n_servers makes
+        # every store degraded from the first write on).
+        if n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1, got {n_servers}")
+        if replication < 1:
+            raise ValueError(f"replication must be >= 1, got {replication}")
+        if replication > n_servers:
+            raise ValueError(
+                f"replication={replication} exceeds n_servers={n_servers}: "
+                f"replicas must land on distinct servers (§2.9)")
+        if region_size <= 0:
+            raise ValueError(f"region_size must be > 0, got {region_size}")
+        if fetch_gap_bytes is not None and fetch_gap_bytes <= 0:
+            raise ValueError(
+                f"fetch_gap_bytes must be > 0 (or None for adaptive), "
+                f"got {fetch_gap_bytes}")
+        if store_coalesce_bytes is not None and store_coalesce_bytes <= 0:
+            raise ValueError(
+                f"store_coalesce_bytes must be > 0 (or None for adaptive), "
+                f"got {store_coalesce_bytes}")
+        if fetch_workers is not None and fetch_workers < 1:
+            raise ValueError(
+                f"fetch_workers must be >= 1, got {fetch_workers}")
 
         self.kv = WarpKV()
         self.region_size = region_size
@@ -141,11 +174,17 @@ class Cluster:
             self.servers[sid] = srv
             self.coordinator.register_server(sid, root)
         self._refresh_ring()
-        self.scheduler = SliceScheduler(
-            self,
+        # The unified async I/O runtime (``iort``): the ONE thread pool and
+        # submission queue both scheduler strategy layers and the async
+        # client surface execute on, plus the adaptive-threshold cost
+        # model.  Explicit gap/coalesce knobs pin the thresholds; None
+        # (the default) sizes them from observed round-trip cost.
+        self.runtime = IoRuntime(
             max_workers=(fetch_workers if fetch_workers is not None
                          else min(8, max(1, n_servers))),
-            max_gap=fetch_gap_bytes)
+            gap_override=fetch_gap_bytes,
+            coalesce_override=store_coalesce_bytes)
+        self.scheduler = SliceScheduler(self, self.runtime)
         self.store_batching = store_batching
         # Write-behind (opt-in): clients defer slice stores into a
         # transaction-scoped buffer and flush them through ``wsched`` as
@@ -155,8 +194,7 @@ class Cluster:
         # (§2.1).  Measured by ``ClientStats.writeback_flushes`` /
         # ``slices_cross_op_coalesced``.
         self.write_behind = write_behind
-        self.wsched = WriteScheduler(self, self.scheduler,
-                                     max_coalesce=store_coalesce_bytes)
+        self.wsched = WriteScheduler(self, self.runtime)
         self.degraded_stores = 0     # replica sets that came up short (§2.9)
         self._root_client = WtfClient(self, client_id=0)
         self._root_client.mkfs()
@@ -226,10 +264,10 @@ class Cluster:
             ptrs = self.store_slice(r.data, r.placement_key, r.hint)
             out[r.key] = ptrs
             if stats is not None:
-                stats.store_batches += len(ptrs)
-                stats.data_bytes_written += len(r.data) * len(ptrs)
-                if len(ptrs) < self.replication:
-                    stats.degraded_stores += 1
+                stats.add(store_batches=len(ptrs),
+                          data_bytes_written=len(r.data) * len(ptrs),
+                          degraded_stores=(1 if len(ptrs) < self.replication
+                                           else 0))
         return out
 
     def note_degraded_stores(self, n: int) -> None:
@@ -237,18 +275,11 @@ class Cluster:
             self.degraded_stores += n
 
     def fetch_slice(self, ptrs: Sequence[SlicePointer]) -> bytes:
-        """Read any replica; fail over across them (§2.9)."""
-        last: Optional[Exception] = None
-        for p in ptrs:
-            srv = self.servers.get(p.server_id)
-            if srv is None or not srv.alive:
-                continue
-            try:
-                return srv.retrieve_slice(p)
-            except StorageError as e:
-                last = e
-                self._on_server_error(p.server_id)
-        raise StorageError(f"all replicas unavailable: {last}")
+        """Read any replica; fail over across them via the runtime's
+        unified candidate walk (§2.9)."""
+        return run_with_failover(
+            self, [(p.server_id, p) for p in ptrs],
+            lambda srv, p: srv.retrieve_slice(p))
 
     def _on_server_error(self, server_id: int) -> None:
         try:
@@ -273,6 +304,7 @@ class Cluster:
         agg["slices_written"] = sum(
             s["slices_written"] for s in agg["servers"].values())
         agg["degraded_stores"] = self.degraded_stores
+        agg["io_runtime"] = self.runtime.snapshot()
         return agg
 
     def reset_io_stats(self) -> None:
@@ -284,6 +316,8 @@ class Cluster:
             self.degraded_stores = 0
 
     def close(self) -> None:
-        self.scheduler.close()
+        # Drain the runtime first: every in-flight async future resolves
+        # and all pool threads exit before the servers go away.
+        self.runtime.close()
         for s in self.servers.values():
             s.close()

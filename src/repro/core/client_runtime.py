@@ -21,11 +21,13 @@ application — otherwise the replay commits invisibly.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+import threading
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
 from .errors import (BadFileDescriptor, KVConflict, NotOpenForWriting,
                      PreconditionFailed, TransactionAborted, WtfError)
+from .iort import AtomicStatsMixin
 from .metadata import Transaction
 
 SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
@@ -48,7 +50,7 @@ class _Fd:
 
 
 @dataclass
-class ClientStats:
+class ClientStats(AtomicStatsMixin):
     """Logical I/O accounting as seen by this client (drives Table 2).
 
     ``fetch_batches`` / ``slices_coalesced`` measure the batched slice-fetch
@@ -64,6 +66,17 @@ class ClientStats:
     ``slices_cross_op_coalesced`` counts slice creations that coalesced
     into a covering store together with slices planned by a *different*
     logged op — the cross-op batching only the write-behind buffer enables.
+
+    The async I/O runtime adds: ``async_ops`` (ops submitted through the
+    futures surface), ``blocked_waits`` (data-plane waits the application
+    actually blocked on — every synchronous fetch counts one; an async
+    ``result()`` counts one only when the future was not yet done), and
+    ``plan_cache_hits``/``plan_cache_misses`` (read plans served from /
+    installed into the version-validated plan cache).
+
+    Counters may be bumped from runtime pool threads concurrently with the
+    application thread; all mutation goes through ``add`` (atomic, from
+    ``iort.AtomicStatsMixin``) — a bare ``+=`` would drop updates.
     """
 
     data_bytes_written: int = 0      # bytes physically sent to storage servers
@@ -80,9 +93,12 @@ class ClientStats:
     vectored_ops: int = 0            # readv/writev/yankv/pastev batches run
     writeback_flushes: int = 0       # write-behind buffer flushes run
     slices_cross_op_coalesced: int = 0  # creations coalesced across ops
-
-    def snapshot(self) -> dict:
-        return dict(self.__dict__)
+    async_ops: int = 0               # ops submitted via the async surface
+    blocked_waits: int = 0           # data-plane waits the app blocked on
+    plan_cache_hits: int = 0         # read plans served from the plan cache
+    plan_cache_misses: int = 0       # read plans installed into the cache
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False, compare=False)
 
 
 class _Ctx:
@@ -233,7 +249,7 @@ class ClientRuntime:
         last: Optional[Exception] = None
         for attempt in range(self.MAX_RETRIES):
             if attempt:
-                self.stats.txn_retries += 1
+                self.stats.add(txn_retries=1)
                 self._restore_fd_state(fd_snap)
             ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
             try:
@@ -255,7 +271,7 @@ class ClientRuntime:
                 self._wb.clear()
                 self._restore_fd_state(fd_snap)
                 raise
-        self.stats.txn_aborts += 1
+        self.stats.add(txn_aborts=1)
         # the aborted op leaves no trace — including fd offsets the op
         # body advanced before its commit failed, and any deferred stores
         # a never-flushed attempt left in the write-behind buffer
@@ -332,7 +348,7 @@ class WtfTransaction:
         last: Optional[Exception] = None
         for attempt in range(self.MAX_RETRIES):
             if attempt:
-                self.client.stats.txn_retries += 1
+                self.client.stats.add(txn_retries=1)
                 try:
                     self._replay()
                 except (KVConflict, PreconditionFailed) as e:
@@ -349,7 +365,7 @@ class WtfTransaction:
             except (KVConflict, PreconditionFailed) as e:
                 last = e
         self._done = True
-        self.client.stats.txn_aborts += 1
+        self.client.stats.add(txn_aborts=1)
         self.client._wb.clear()
         self.client._restore_fd_state(self._fd_snap)
         raise TransactionAborted(
@@ -366,7 +382,7 @@ class WtfTransaction:
         except BaseException:
             self._done = True
             self.client._wb.clear()
-            self.client.stats.txn_aborts += 1
+            self.client.stats.add(txn_aborts=1)
             try:
                 self._ctx.txn.abort()
             finally:
@@ -389,7 +405,7 @@ class WtfTransaction:
                 result = e
             if _digest(result) != op.digest:
                 self._done = True
-                self.client.stats.txn_aborts += 1
+                self.client.stats.add(txn_aborts=1)
                 # the transaction leaves no trace — including fd offsets
                 # and deferred stores replayed ops queued before diverging
                 self.client._wb.clear()

@@ -119,6 +119,24 @@ class WtfFile:
         return self._buffered_call(self.client.pwritev, self.fd, chunks,
                                    offset)
 
+    # ----------------------------------------------------------- async I/O
+    # Futures flavor (``IoFuture``): the op runs on the cluster's unified
+    # I/O runtime, so the caller overlaps its next op's planning with this
+    # op's data rounds.  See ``posix_ops`` for the submission semantics.
+    def readv_async(self, ranges: Sequence[Tuple[int, int]]):
+        return self.client.readv_async(self.fd, ranges)
+
+    def preadv_async(self, sizes: Sequence[int], offset: int):
+        return self.client.preadv_async(self.fd, sizes, offset)
+
+    def writev_async(self, chunks: Sequence[bytes]):
+        return self._buffered_call(self.client.writev_async, self.fd,
+                                   chunks)
+
+    def pwritev_async(self, chunks: Sequence[bytes], offset: int):
+        return self._buffered_call(self.client.pwritev_async, self.fd,
+                                   chunks, offset)
+
     # --------------------------------------------------------------- slicing
     def yank(self, size: int, want_data: bool = False):
         return self.client.yank(self.fd, size, want_data)

@@ -1,0 +1,419 @@
+"""Unified async I/O runtime — the single data-plane engine under both
+schedulers.
+
+Before this module, the read scheduler (``iosched``) and write scheduler
+(``wsched``) were two near-duplicate engines: each had its own grouping
+logic, its own failover loop, and the read side owned the thread pool the
+write side borrowed.  The paper's performance story (§4) is that cheap
+slice-pointer metadata work overlaps with batched data-plane rounds; a
+client that serializes every ``readv``/``writev`` against its scheduler
+forfeits exactly that overlap.  This module hosts everything the two
+directions share, and the pieces the overlap needs:
+
+  * **One pool, one submission queue.**  ``IoRuntime`` owns the only
+    thread pool in the client stack.  Work is submitted as ``IoTask``s —
+    a fetch batch, a store-group replica round, or a whole async client
+    op — and completes through futures.  Both schedulers are thin
+    strategy layers: they *plan* (group/coalesce/pack) and hand the
+    resulting tasks here for execution, timing and failover accounting.
+  * **Futures-based completion.**  ``submit_op`` runs an entire client op
+    on the pool and returns an ``IoFuture``; the async surface
+    (``readv_async``/``writev_async`` and friends) is built on it, so
+    metadata planning for op N+1 overlaps the data rounds of op N
+    (CannyFS, arXiv 1612.06830, measures how much this buys in exactly
+    this batch-transactional setting).  A round dispatched *from* a pool
+    worker runs inline rather than re-entering the queue, so async ops
+    can never deadlock the pool against itself.
+  * **Unified replica failover.**  ``run_with_failover`` is the one
+    candidate-walk loop both directions use (§2.9): skip dead servers,
+    mark a ``StorageError`` server failed with the coordinator, move to
+    the next candidate, and surface exhaustion to the caller's
+    degraded/fatal policy.
+  * **Adaptive coalescing.**  Every round observed through the runtime
+    updates an EWMA cost model (per-server round-trip cost plus a global
+    bandwidth estimate).  The gap/pack thresholds the schedulers use are
+    sized from it — the bytes one round-trip is worth — replacing the two
+    fixed 32 KiB constants.  Explicit ``fetch_gap_bytes`` /
+    ``store_coalesce_bytes`` knobs pin the thresholds and disable
+    adaptation (benchmarks pin them so paper-reproduction accounting
+    stays comparable across runs).
+  * **Read-plan cache.**  ``PlanCache`` memoizes resolved read plans
+    keyed on ``(inode, requested ranges)`` and *validated* against the
+    region versions observed when the plan was built — the commutes a
+    commit applies bump those versions, so invalidation is exactly the
+    KV's own conflict rule (FaaSFS-style version-keyed client caching).
+    Pending write-behind extents never enter the cache, mirroring
+    ``overlay_cached``.
+  * **Atomic stats.**  ``AtomicStatsMixin`` routes every counter
+    mutation through a per-stats lock; with rounds and whole ops running
+    on pool threads, the bare ``+=`` updates ``ClientStats`` and
+    ``StorageStats`` used before this PR were lost-update races.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .errors import StorageError
+
+# Seed/floor/ceiling for the adaptive thresholds.  The seed matches the old
+# fixed constant so a fresh cluster behaves identically until it has
+# observed real rounds; the clamps keep a noisy estimate from degenerating
+# into no coalescing at all or whole-file over-reads.
+ADAPTIVE_SEED = 32 << 10
+ADAPTIVE_FLOOR = 4 << 10
+ADAPTIVE_CEILING = 256 << 10
+
+# EWMA blend weight for new observations (two-ish dozen rounds to converge).
+_EWMA_ALPHA = 0.15
+# Rounds at most this big estimate fixed per-round cost; rounds at least
+# this big estimate bandwidth.  In between they update neither cleanly.
+_SMALL_ROUND_BYTES = 4 << 10
+_LARGE_ROUND_BYTES = 64 << 10
+
+
+class AtomicStatsMixin:
+    """Lock-guarded counter mutation for the stats dataclasses.
+
+    Pool threads bump ``ClientStats`` (async ops) and ``StorageStats``
+    (concurrent rounds) concurrently with the application thread; a bare
+    ``+=`` on an attribute is a read-modify-write race.  All mutation goes
+    through ``add``; ``snapshot`` reads under the same lock.
+    """
+
+    def add(self, **deltas: int) -> None:
+        with self._stats_lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
+
+    def snapshot(self) -> dict:
+        with self._stats_lock:
+            return {k: v for k, v in self.__dict__.items()
+                    if not k.startswith("_")}
+
+
+class IoTask:
+    """One unit of data-plane work submitted to the runtime.
+
+    ``kind`` is ``"fetch"`` / ``"store"`` for storage-server rounds (timed
+    into the adaptive cost model) or ``"op"`` for a whole async client op
+    (not a round — excluded from the model).  ``server_id``/``nbytes`` may
+    be refined by the executing function (e.g. the store path only knows
+    its server after the ring walk claims one).
+    """
+
+    __slots__ = ("kind", "server_id", "nbytes", "payload")
+
+    def __init__(self, kind: str, server_id: Optional[int] = None,
+                 nbytes: int = 0, payload: Any = None):
+        self.kind = kind
+        self.server_id = server_id
+        self.nbytes = nbytes
+        self.payload = payload
+
+
+class IoFuture:
+    """Future for an async client op.
+
+    Thin wrapper over ``concurrent.futures.Future`` that records, in the
+    owning client's stats, whether the caller had to *block* for the
+    result (``blocked_waits``) — the counter the pipeline overlap
+    benchmark uses to show async prefetch hiding data rounds behind
+    compute.
+    """
+
+    __slots__ = ("_fut", "_stats", "_counted")
+
+    def __init__(self, fut: Future, stats=None):
+        self._fut = fut
+        self._stats = stats
+        self._counted = False
+
+    @classmethod
+    def resolved(cls, value: Any) -> "IoFuture":
+        f: Future = Future()
+        f.set_result(value)
+        return cls(f)
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._fut.done() and self._stats is not None \
+                and not self._counted:
+            self._counted = True
+            self._stats.add(blocked_waits=1)
+        return self._fut.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._fut.exception(timeout)
+
+    def add_done_callback(self, fn: Callable[["IoFuture"], None]) -> None:
+        self._fut.add_done_callback(lambda _f: fn(self))
+
+
+def run_with_failover(cluster, candidates: Sequence[Tuple[int, Any]],
+                      attempt: Callable[[Any, Any], Any],
+                      release: Optional[Callable[[int], None]] = None,
+                      exhausted: Optional[Callable[[Optional[Exception]],
+                                                   Any]] = None) -> Any:
+    """The one §2.9 candidate-walk failover loop, shared by both directions.
+
+    Walks ``(server_id, payload)`` candidates in order: dead or missing
+    servers are skipped; ``attempt(server, payload)`` returning is success;
+    a ``StorageError`` marks the server failed with the coordinator
+    (``cluster._on_server_error``), optionally ``release``s any claim the
+    caller took on it, and moves on.  When every candidate is exhausted,
+    ``exhausted(last_error)`` decides the outcome (default: raise).
+    """
+    last: Optional[Exception] = None
+    for sid, payload in candidates:
+        srv = cluster.servers.get(sid)
+        if srv is None or not srv.alive:
+            if release is not None:
+                release(sid)
+            continue
+        try:
+            return attempt(srv, payload)
+        except StorageError as e:
+            last = e
+            if release is not None:
+                release(sid)
+            cluster._on_server_error(sid)
+    if exhausted is not None:
+        return exhausted(last)
+    raise StorageError(f"all replicas unavailable: {last}")
+
+
+class PlanCache:
+    """Version-validated LRU of resolved read plans.
+
+    Key: ``(inode_id, clamped ranges)``.  Value: the region versions the
+    plan was built against plus the prepared per-range extent plans.  A
+    lookup revalidates every version through the caller's transaction (the
+    read dependency is recorded at the same version, so a hit is exactly
+    as serializable as a re-plan); any commit whose commutes touched a
+    region bumped its version, which is the whole invalidation story.
+    Thread-safe: async ops consult it from pool workers.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+
+    def get(self, key: tuple) -> Optional[tuple]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+            return entry
+
+    def put(self, key: tuple, value: tuple) -> None:
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+class IoRuntime:
+    """The cluster's single data-plane execution engine.
+
+    One runtime per cluster, shared by every client and both scheduler
+    strategy layers.  Owns the only thread pool, the adaptive-threshold
+    cost model, and the failover/degraded accounting helpers.
+    """
+
+    def __init__(self, max_workers: int = 8,
+                 gap_override: Optional[int] = None,
+                 coalesce_override: Optional[int] = None):
+        self._max_workers = max(1, max_workers)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+        self._in_worker = threading.local()
+        self._closed = False
+        # Adaptive cost model (guarded by _model_lock): per-server EWMA of
+        # round wall time, global EWMAs of fixed round cost + bandwidth.
+        self._model_lock = threading.Lock()
+        self._gap_override = gap_override
+        self._coalesce_override = coalesce_override
+        self._rtt_by_server: Dict[int, float] = {}
+        self._ewma_round_s: Optional[float] = None   # fixed per-round cost
+        self._ewma_bw: Optional[float] = None        # bytes / second
+        self._rounds_observed = 0
+
+    # ----------------------------------------------------------------- pool
+    def _pool_get(self) -> ThreadPoolExecutor:
+        pool = self._pool
+        if pool is not None:
+            return pool
+        with self._pool_lock:
+            if self._closed:
+                raise RuntimeError("I/O runtime is closed")
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self._max_workers,
+                    thread_name_prefix="wtf-iort")
+        return self._pool
+
+    def in_worker(self) -> bool:
+        """True when called from one of the runtime's own pool threads."""
+        return getattr(self._in_worker, "active", False)
+
+    def close(self) -> None:
+        """Drain and shut down: every submitted task (queued or running)
+        completes, its future resolves, and all pool threads exit — no
+        in-flight future is ever abandoned.  The executor stays visible
+        while draining so in-flight ops that try to fan out degrade to
+        inline execution (``run_tasks``) instead of erroring."""
+        with self._pool_lock:
+            self._closed = True
+            pool = self._pool
+        if pool is not None:
+            pool.shutdown(wait=True)
+            with self._pool_lock:
+                self._pool = None
+
+    # ------------------------------------------------------------ execution
+    def _execute(self, task: IoTask, fn: Callable[[IoTask], Any]) -> Any:
+        prev = getattr(self._in_worker, "active", False)
+        self._in_worker.active = True
+        t0 = time.perf_counter()
+        try:
+            return fn(task)
+        finally:
+            self._in_worker.active = prev
+            if task.kind in ("fetch", "store"):
+                self.observe_round(task.server_id,
+                                   time.perf_counter() - t0, task.nbytes)
+
+    def run_tasks(self, tasks: Sequence[IoTask],
+                  fn: Callable[[IoTask], Any]) -> List[Any]:
+        """Execute a planned round set; returns results in task order.
+
+        From the application thread, fan-out happens on the pool.  From a
+        pool worker (an async op issuing its own rounds) a plain blocking
+        fan-out is how shared-pool designs deadlock — every worker waiting
+        on a queue only workers can drain — so workers use *help-drain*:
+        submit every round, then walk them in order, CANCELLING any round
+        no other worker has started yet and running it inline.  A started
+        round is leaf work (it never re-enters this wait), so blocking on
+        it is deadlock-free; a queued round is always cancellable.  Idle
+        workers therefore still lend parallelism to an async op's rounds,
+        and a saturated pool degrades to inline execution instead of
+        deadlock.
+        """
+        if len(tasks) <= 1 or self._max_workers <= 1:
+            return [self._execute(t, fn) for t in tasks]
+        pool = self._pool_get()
+        if not self.in_worker():
+            return list(pool.map(lambda t: self._execute(t, fn), tasks))
+        futs: List[Optional[Future]] = []
+        try:
+            for t in tasks:
+                futs.append(pool.submit(self._execute, t, fn))
+        except RuntimeError:
+            # Pool draining for shutdown: the rounds run inline instead.
+            futs.extend([None] * (len(tasks) - len(futs)))
+        results: List[Any] = []
+        try:
+            for t, fut in zip(tasks, futs):
+                if fut is None or fut.cancel():
+                    results.append(self._execute(t, fn))
+                else:
+                    results.append(fut.result())
+        except BaseException:
+            for fut in futs:
+                if fut is not None:
+                    fut.cancel()
+            raise
+        return results
+
+    def submit_op(self, fn: Callable[[], Any], stats=None) -> IoFuture:
+        """Run a whole client op on the pool; returns its ``IoFuture``.
+
+        The async surface's engine: the op body (plan + rounds + commit)
+        executes on a worker, and the caller's thread is free to plan the
+        next op.  ``stats`` is the owning client's ``ClientStats``
+        (records ``blocked_waits`` when the caller has to block on the
+        result).
+        """
+        task = IoTask("op")
+        fut = self._pool_get().submit(self._execute, task,
+                                      lambda _t: fn())
+        return IoFuture(fut, stats)
+
+    # ------------------------------------------------------- adaptive model
+    def observe_round(self, server_id: Optional[int], seconds: float,
+                      nbytes: int) -> None:
+        """Feed one completed storage round into the EWMA cost model."""
+        if seconds <= 0:
+            return
+        with self._model_lock:
+            self._rounds_observed += 1
+            if server_id is not None:
+                prev = self._rtt_by_server.get(server_id)
+                self._rtt_by_server[server_id] = (
+                    seconds if prev is None
+                    else prev + _EWMA_ALPHA * (seconds - prev))
+            if nbytes <= _SMALL_ROUND_BYTES:
+                prev = self._ewma_round_s
+                self._ewma_round_s = (
+                    seconds if prev is None
+                    else prev + _EWMA_ALPHA * (seconds - prev))
+            elif nbytes >= _LARGE_ROUND_BYTES:
+                bw = nbytes / seconds
+                prev = self._ewma_bw
+                self._ewma_bw = (bw if prev is None
+                                 else prev + _EWMA_ALPHA * (bw - prev))
+
+    def _adaptive_bytes(self) -> int:
+        with self._model_lock:
+            if self._ewma_round_s is None or self._ewma_bw is None:
+                return ADAPTIVE_SEED
+            est = int(self._ewma_round_s * self._ewma_bw)
+        return max(ADAPTIVE_FLOOR, min(ADAPTIVE_CEILING, est))
+
+    def gap_bytes(self) -> int:
+        """Read-side coalescing threshold: fetch-and-discard a gap of at
+        most this many bytes rather than pay another round trip.  Pinned
+        by the ``fetch_gap_bytes`` knob; otherwise one round-trip's worth
+        of bytes under the current EWMA estimates."""
+        if self._gap_override is not None:
+            return self._gap_override
+        return self._adaptive_bytes()
+
+    def coalesce_bytes(self) -> int:
+        """Write-side packing threshold (``store_coalesce_bytes`` pins)."""
+        if self._coalesce_override is not None:
+            return self._coalesce_override
+        return self._adaptive_bytes()
+
+    def snapshot(self) -> dict:
+        """Adaptive-threshold accounting for ``Cluster.total_stats``."""
+        with self._model_lock:
+            rtt = dict(self._rtt_by_server)
+            round_s, bw = self._ewma_round_s, self._ewma_bw
+            rounds = self._rounds_observed
+        return {
+            "adaptive_gap_bytes": self.gap_bytes(),
+            "adaptive_coalesce_bytes": self.coalesce_bytes(),
+            "gap_pinned": self._gap_override is not None,
+            "coalesce_pinned": self._coalesce_override is not None,
+            "rounds_observed": rounds,
+            "ewma_round_s": round_s,
+            "ewma_bandwidth_bps": bw,
+            "ewma_rtt_by_server": rtt,
+        }

@@ -1,4 +1,4 @@
-"""Batched slice-fetch scheduler — the client's data-plane I/O engine.
+"""Batched slice-fetch strategy — the read side of the unified I/O runtime.
 
 The scalar client dereferenced slice pointers one at a time: every extent in
 a read plan became its own storage-server round.  The paper's whole pitch is
@@ -8,17 +8,20 @@ actually come from:
 
   1. **Coalescing.**  Planned fetches are sorted by (server, backing file,
      disk offset) and runs that are adjacent — or separated by less than
-     ``max_gap`` bytes — collapse into a single covering retrieval.  Thanks
+     the gap threshold — collapse into a single covering retrieval.  Thanks
      to locality-aware placement (§2.7), sequential file writes land
      sequentially in one backing file, so a vectored read over N ranges
      typically needs one round per (server, backing-file) run rather than N.
-  2. **Fan-out.**  Batches destined for different servers are issued
-     concurrently from a thread pool, so a read striped over the cluster
-     completes in one server's latency, not the sum.
+     The threshold is sized by the runtime's adaptive cost model (the bytes
+     one round-trip is worth) unless ``Cluster(fetch_gap_bytes=…)`` pins it.
+  2. **Fan-out.**  Batches destined for different servers are issued as
+     ``IoTask``s on the shared ``IoRuntime`` pool, so a read striped over
+     the cluster completes in one server's latency, not the sum.
 
-Failure handling: coalescing picks one live replica per extent up front; if
-a covering retrieval fails mid-flight, the scheduler degrades to per-extent
-fetches with the full §2.9 replica-failover path, so batching never reduces
+This module only *plans* (sort + coalesce); execution, timing and the
+failover walk live in ``iort``/``Cluster.fetch_slice``.  If a covering
+retrieval fails mid-flight, the strategy degrades to per-extent fetches
+through the full §2.9 replica-failover path, so batching never reduces
 availability.
 
 Accounting: each covering retrieval counts once in ``StorageStats``
@@ -28,20 +31,17 @@ dereferences saved) — the measurable effectiveness of the scheduler.
 """
 from __future__ import annotations
 
-import threading
-from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Sequence, Tuple
 
 from .errors import StorageError
+from .iort import IoTask
 from .slicing import Extent, SlicePointer
 
-# Coalesce fetches whose on-disk gap is at most this many bytes.  Gap bytes
-# are fetched and discarded: a small bounded over-read is far cheaper than an
-# extra round trip, exactly like a disk elevator's seek threshold.  Kept
-# deliberately below typical record sizes so sparse key-only access patterns
-# (e.g. the sort benchmark reading 10-byte keys out of 64 KiB records) are
-# NOT coalesced into whole-file reads — the threshold trades one round trip
-# against at most 32 KiB of discarded bytes.
+# Historical fixed gap threshold, kept as the adaptive model's seed and as
+# the value benchmarks pin for comparable paper-reproduction accounting.
+# Gap bytes are fetched and discarded: a small bounded over-read is far
+# cheaper than an extra round trip, exactly like a disk elevator's seek
+# threshold.
 DEFAULT_MAX_GAP = 32 << 10
 
 
@@ -91,44 +91,33 @@ def plan_batches(tagged: Sequence[tuple],
 
 
 class SliceScheduler:
-    """Executes batched slice fetches against a ``Cluster``.
+    """Read-side strategy layer over the cluster's ``IoRuntime``.
 
-    One scheduler per cluster, shared by all clients (it is stateless apart
-    from its lazily created thread pool).  ``fetch_many`` is the entry
-    point; ``WtfClient._fetch``/``_fetch_many`` route every data-plane read
-    through it, so scalar reads and vectored reads share one code path and
-    one accounting scheme.
+    One scheduler per cluster, shared by all clients (it is stateless).
+    ``fetch_many`` is the entry point; ``WtfClient._fetch``/``_fetch_many``
+    route every data-plane read through it, so scalar reads and vectored
+    reads share one code path and one accounting scheme.  It owns no pool
+    and no failover loop: batches execute as ``IoTask``s on the runtime,
+    and degraded fetches walk replicas via ``Cluster.fetch_slice`` (the
+    unified ``iort.run_with_failover`` path).
     """
 
-    def __init__(self, cluster, max_workers: int = 8,
-                 max_gap: int = DEFAULT_MAX_GAP):
+    def __init__(self, cluster, runtime,
+                 max_gap: Optional[int] = None):
         self.cluster = cluster
-        self.max_gap = max_gap
-        self._max_workers = max(1, max_workers)
-        self._pool: Optional[ThreadPoolExecutor] = None
-        self._pool_lock = threading.Lock()
+        self.runtime = runtime
+        self._max_gap = max_gap          # None → adaptive via the runtime
 
-    # --------------------------------------------------------------- pool
-    def _pool_get(self) -> ThreadPoolExecutor:
-        if self._pool is None:
-            with self._pool_lock:
-                if self._pool is None:
-                    self._pool = ThreadPoolExecutor(
-                        max_workers=self._max_workers,
-                        thread_name_prefix="wtf-iosched")
-        return self._pool
-
-    def pool(self) -> ThreadPoolExecutor:
-        """The cluster's shared data-plane pool (lazily created).  The
-        write scheduler (``wsched``) fans its store rounds out on this same
-        pool, so one executor serves both directions of the data plane."""
-        return self._pool_get()
+    @property
+    def max_gap(self) -> int:
+        """Current coalescing threshold (pinned or adaptive)."""
+        if self._max_gap is not None:
+            return self._max_gap
+        return self.runtime.gap_bytes()
 
     def close(self) -> None:
-        with self._pool_lock:
-            if self._pool is not None:
-                self._pool.shutdown(wait=True)
-                self._pool = None
+        """Back-compat: drain the shared runtime."""
+        self.runtime.close()
 
     # -------------------------------------------------------------- fetch
     def fetch_many(self, plans: Sequence[Sequence[Extent]],
@@ -150,10 +139,9 @@ class SliceScheduler:
                     tagged.append((pi, ci, e, self._pick_replica(e.ptrs)))
 
         batches = plan_batches(tagged, self.max_gap)
-        if len(batches) > 1 and self._max_workers > 1:
-            results = list(self._pool_get().map(self._run_batch, batches))
-        else:
-            results = [self._run_batch(b) for b in batches]
+        tasks = [IoTask("fetch", b.server_id, b.end - b.start, b)
+                 for b in batches]
+        results = self.runtime.run_tasks(tasks, self._run_batch)
 
         rounds = physical = 0
         for parts, n_rounds, n_bytes in results:
@@ -162,9 +150,9 @@ class SliceScheduler:
             for pi, ci, data in parts:
                 chunks[pi][ci] = data
         if stats is not None:
-            stats.fetch_batches += rounds
-            stats.slices_coalesced += len(tagged) - rounds
-            stats.data_bytes_read += physical
+            stats.add(fetch_batches=rounds,
+                      slices_coalesced=len(tagged) - rounds,
+                      data_bytes_read=physical)
         return [b"".join(c) for c in chunks]
 
     def fetch(self, extents: Sequence[Extent], stats=None) -> bytes:
@@ -180,8 +168,9 @@ class SliceScheduler:
                 return p
         return ptrs[0]
 
-    def _run_batch(self, batch: _FetchBatch) -> tuple:
+    def _run_batch(self, task: IoTask) -> tuple:
         """Issue one batch; returns (parts, rounds, physical_bytes)."""
+        batch: _FetchBatch = task.payload
         if len(batch.parts) == 1:
             pi, ci, e, ptr = batch.parts[0]
             return ([(pi, ci, self.cluster.fetch_slice(e.ptrs))], 1, e.length)

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Optional
 
 from .errors import KVConflict, PreconditionFailed
+from .iort import AtomicStatsMixin
 
 _TOMBSTONE = object()
 
@@ -99,6 +100,23 @@ class Transaction:
         if prev != ver:
             raise KVConflict(f"non-repeatable read of {space}:{key!r}")
         return default if val is None else val
+
+    def get_version(self, space: str, key: Any) -> Optional[int]:
+        """Observed version of ``space:key``, with the read dependency
+        recorded exactly like ``get`` — the plan cache's validation
+        primitive: a cached plan whose regions still carry their recorded
+        versions is as serializable as a fresh plan, because this call
+        pins the same versions a re-plan would read.  Returns ``None`` for
+        a key this transaction has buffered writes for (no stable
+        committed version exists)."""
+        sk = (space, key)
+        if sk in self._writes:
+            return None
+        ver, _ = self._kv._read_versioned(space, key)
+        prev = self._reads.setdefault(sk, ver)
+        if prev != ver:
+            raise KVConflict(f"non-repeatable read of {space}:{key!r}")
+        return ver
 
     # -- write set ----------------------------------------------------------
     def put(self, space: str, key: Any, value: Any) -> None:
@@ -197,15 +215,18 @@ class _Deferred:
 
 
 @dataclass
-class KVStats:
+class KVStats(AtomicStatsMixin):
+    """Counters bumped from the app thread AND runtime pool workers (async
+    op bodies run their own KV transactions); mutation goes through the
+    atomic ``add`` like the client/storage stats."""
+
     commits: int = 0
     aborts: int = 0
     gets: int = 0
     puts: int = 0
     commutes: int = 0
-
-    def snapshot(self) -> dict:
-        return dict(self.__dict__)
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False, compare=False)
 
 
 class WarpKV:
@@ -236,7 +257,7 @@ class WarpKV:
         return hash((space, key)) % self.N_STRIPES
 
     def _read_versioned(self, space: str, key: Any) -> tuple[int, Any]:
-        self.stats.gets += 1
+        self.stats.add(gets=1)
         sp = self._space(space)
         with self._stripes[self._stripe_of(space, key)]:
             ent = sp.get(key)
@@ -274,14 +295,14 @@ class WarpKV:
         try:
             if self._fail_next_commits > 0:
                 self._fail_next_commits -= 1
-                self.stats.aborts += 1
+                self.stats.add(aborts=1)
                 raise KVConflict("injected abort")
             # 1. validate read versions (optimistic concurrency control)
             for (space, key), seen in txn._reads.items():
                 ent = self._space(space).get(key)
                 cur = ent.version if ent is not None else 0
                 if cur != seen:
-                    self.stats.aborts += 1
+                    self.stats.add(aborts=1)
                     raise KVConflict(
                         f"version conflict on {space}:{key!r} "
                         f"(saw {seen}, now {cur})")
@@ -300,7 +321,7 @@ class WarpKV:
                     ent = self._space(space).get(key)
                     cur = ent.value if ent is not None else None
                 if not op.precondition(cur):
-                    self.stats.aborts += 1
+                    self.stats.add(aborts=1)
                     raise PreconditionFailed(
                         f"precondition failed on {space}:{key!r}")
                 new, result = op.apply(cur)
@@ -316,7 +337,7 @@ class WarpKV:
                 stored = None if value is _TOMBSTONE else value
                 sp[key] = _Versioned(ver, stored)
                 self._log(space, key, stored, ver)
-                self.stats.puts += 1
+                self.stats.add(puts=1)
             # 4. apply commutative results; bump version only on real change
             for space, key, new, result, cell in staged:
                 sp = self._space(space)
@@ -328,8 +349,8 @@ class WarpKV:
                     sp[key] = _Versioned(ver, new)
                     self._log(space, key, new, ver)
                 cell.append(result)
-                self.stats.commutes += 1
-            self.stats.commits += 1
+                self.stats.add(commutes=1)
+            self.stats.add(commits=1)
         finally:
             for sid in reversed(stripe_ids):
                 self._stripes[sid].release()

@@ -23,6 +23,23 @@ Each vectored call executes as a single logged op inside one transaction, so
 a batch is atomic: all of it commits or none of it is visible.  Prefer
 ``WtfClient.open_file`` / ``WtfFile`` (``handle.py``) over raw fd juggling.
 
+Async surface (the unified I/O runtime's futures flavor):
+
+  * ``readv_async`` / ``preadv_async`` / ``writev_async`` /
+    ``pwritev_async`` mirror their synchronous twins but return an
+    ``IoFuture``: the op body (metadata planning + data rounds + commit)
+    runs on the cluster's ``IoRuntime`` pool, so the caller can plan op
+    N+1 while op N's data rounds are in flight.  Everything fd-dependent
+    resolves at submission on the calling thread (EBADF/EINVAL fail fast;
+    ``writev_async`` advances the fd offset eagerly, like POSIX AIO);
+    each op then commits as its own auto-commit transaction on the
+    worker.  Async ops are auto-commit only — inside an open
+    ``WtfTransaction`` they raise, because the §2.6 op log is ordered by
+    the application thread.  With write-behind active, async writes
+    complete synchronously into the buffer (there is no storage round to
+    overlap) and return an already-resolved future.
+
+
 Directories are special files (§2.4): their content is a record log of
 add/del entries, maintained with the same append machinery as data.
 """
@@ -37,6 +54,7 @@ from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET, _Ctx, _Fd, _Op,
 from .errors import (AlreadyExists, DirectoryNotEmpty, InvalidOffset,
                      IsADirectory, NotADirectory, NotFound, WtfError)
 from .inode import AppendExtents, Inode, region_key
+from .iort import IoFuture
 from .slicing import Extent
 
 
@@ -130,6 +148,92 @@ class PosixOps:
         untouched."""
         return self._run("pwritev", fd, tuple(bytes(c) for c in chunks),
                          offset)
+
+    # ------------------------------------------------- async POSIX surface
+    def _check_async_scope(self) -> None:
+        """Async ops are auto-commit only (the §2.6 op log is
+        single-threaded).  Checked BEFORE any submission-time state
+        mutation — ``writev_async``'s eager offset advance must not happen
+        if the call is about to be rejected."""
+        if self._txn is not None:
+            raise WtfError(
+                "async ops are auto-commit only: they cannot join an "
+                "open transaction's op log")
+
+    def _submit_async(self, body, *args) -> IoFuture:
+        self._check_async_scope()
+        self.stats.add(async_ops=1)
+        return self.cluster.runtime.submit_op(
+            lambda: body(*args), stats=self.stats)
+
+    def readv_async(self, fd: int,
+                    ranges: Sequence[Tuple[int, int]]) -> IoFuture:
+        """``readv`` returning an ``IoFuture`` of the range list.
+
+        fd resolution and EINVAL checks happen now, on the calling thread;
+        planning and fetching run on a runtime worker *at execution time*,
+        so a commit landing before the future runs invalidates any cached
+        plan (region versions moved) and the read re-plans against the
+        committed state — never stale extents.  Positional: the fd offset
+        does not move."""
+        f = self._get_fd(fd)          # EBADF before EINVAL, like POSIX
+        ranges = tuple((int(o), int(n)) for o, n in ranges)
+        for off, size in ranges:
+            if off < 0 or size < 0:
+                raise InvalidOffset(
+                    f"negative range ({off}, {size}) in vectored read plan")
+        return self._submit_async(self._async_readv_body, f.inode_id, ranges)
+
+    def preadv_async(self, fd: int, sizes: Sequence[int],
+                     offset: int) -> IoFuture:
+        """POSIX-flavor async vectored read: consecutive chunks starting at
+        ``offset``; the fd offset does not move."""
+        if offset < 0:
+            self._get_fd(fd)          # EBADF first
+            raise InvalidOffset(f"preadv at negative offset {offset}")
+        ranges = []
+        pos = offset
+        for sz in sizes:
+            ranges.append((pos, int(sz)))
+            pos += int(sz)
+        return self.readv_async(fd, ranges)
+
+    def writev_async(self, fd: int, chunks: Sequence[bytes]) -> IoFuture:
+        """Gather-write returning an ``IoFuture`` of the byte count.
+
+        The fd offset advances eagerly at submission (POSIX-AIO style), so
+        the caller can keep issuing ordered writes; stores and the
+        metadata commit run on a worker.  A failed future leaves the
+        offset advanced — callers that care re-seek, exactly as with
+        ``aio_write``."""
+        self._check_async_scope()     # before the eager offset mutation
+        f = self._get_wfd(fd)
+        chunks = tuple(bytes(c) for c in chunks)
+        offset = f.offset
+        f.offset += sum(len(c) for c in chunks)
+        return self._async_write(f, chunks, offset)
+
+    def pwritev_async(self, fd: int, chunks: Sequence[bytes],
+                      offset: int) -> IoFuture:
+        """Positional async gather-write; the fd offset is untouched."""
+        f = self._get_wfd(fd)         # EBADF before EINVAL, like POSIX
+        if offset < 0:
+            raise InvalidOffset(f"pwritev at negative offset {offset}")
+        chunks = tuple(bytes(c) for c in chunks)
+        return self._async_write(f, chunks, offset)
+
+    def _async_write(self, f, chunks: Tuple[bytes, ...],
+                     offset: int) -> IoFuture:
+        if self._write_behind_active():
+            # Deferred stores never touch a storage server until the
+            # commit flush — there is nothing to overlap, and the buffer
+            # belongs to the application thread.  Complete synchronously.
+            self._check_async_scope()
+            self.stats.add(async_ops=1)
+            return IoFuture.resolved(
+                self._run("pwritev", f.fd, chunks, offset))
+        return self._submit_async(self._async_pwritev_body, f.inode_id,
+                                  chunks, offset)
 
     def seek(self, fd: int, offset: int, whence: int = SEEK_SET):
         return self._run("seek", fd, offset, whence)
@@ -232,7 +336,7 @@ class PosixOps:
         size = min(size, max(0, length - f.offset))
         data = self._read_range(ctx, ino, f.offset, size)
         f.offset += len(data)
-        self.stats.logical_bytes_read += len(data)
+        self.stats.add(logical_bytes_read=len(data))
         return data
 
     def _op_pread(self, ctx: _Ctx, op: _Op, fd: int, size: int,
@@ -244,15 +348,15 @@ class PosixOps:
         length = self._file_length(ctx, ino)
         size = min(size, max(0, length - offset))
         data = self._read_range(ctx, ino, offset, size)
-        self.stats.logical_bytes_read += len(data)
+        self.stats.add(logical_bytes_read=len(data))
         return data
 
     def _op_readv(self, ctx: _Ctx, op: _Op, fd: int,
                   ranges: Tuple[Tuple[int, int], ...]) -> List[bytes]:
         _, plans = self._clamped_plans(ctx, fd, ranges)
         out = self._fetch_many(plans)
-        self.stats.logical_bytes_read += sum(len(b) for b in out)
-        self.stats.vectored_ops += 1
+        self.stats.add(logical_bytes_read=sum(len(b) for b in out),
+                       vectored_ops=1)
         return out
 
     def _op_write(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
@@ -273,7 +377,7 @@ class PosixOps:
         f = self._get_wfd(fd)
         n = self._writev_at(ctx, op, f.inode_id, f.offset, chunks, key="wv")
         f.offset += n
-        self.stats.vectored_ops += 1
+        self.stats.add(vectored_ops=1)
         return n
 
     def _op_pwritev(self, ctx: _Ctx, op: _Op, fd: int,
@@ -282,7 +386,7 @@ class PosixOps:
         if offset < 0:
             raise InvalidOffset(f"pwritev at negative offset {offset}")
         n = self._writev_at(ctx, op, f.inode_id, offset, chunks, key="wv")
-        self.stats.vectored_ops += 1
+        self.stats.add(vectored_ops=1)
         return n
 
     def _op_seek(self, ctx: _Ctx, op: _Op, fd: int, offset: int,

@@ -24,7 +24,8 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple
 
 from .client_runtime import _Ctx, _Op
-from .errors import InvalidOffset, NotFound, WtfError
+from .errors import (InvalidOffset, KVConflict, NotFound,
+                     PreconditionFailed, TransactionAborted, WtfError)
 from .inode import (AppendExtents, BumpInode, ClearRegion, Inode, RegionData,
                     ResetInode, region_key)
 from .placement import region_placement_key, stable_hash
@@ -98,7 +99,7 @@ class SliceOps:
         data = None
         if want_data:
             data = self._fetch(extents)
-            self.stats.logical_bytes_read += size
+            self.stats.add(logical_bytes_read=size)
         f.offset += size
         extents = tuple(extents)
         return (extents, data) if want_data else extents
@@ -106,7 +107,7 @@ class SliceOps:
     def _op_yankv(self, ctx: _Ctx, op: _Op, fd: int,
                   ranges: Tuple[Tuple[int, int], ...]):
         _, plans = self._clamped_plans(ctx, fd, ranges)
-        self.stats.vectored_ops += 1
+        self.stats.add(vectored_ops=1)
         return tuple(tuple(p) for p in plans)
 
     def _clamped_plans(self, ctx: _Ctx, fd: int,
@@ -124,7 +125,7 @@ class SliceOps:
         length = self._file_length(ctx, ino)
         clamped = [(off, min(size, max(0, length - off)))
                    for off, size in ranges]
-        return f, self._plan_many(ctx, ino, clamped)
+        return f, self._plan_many_cached(ctx, ino, clamped)
 
     def _op_paste(self, ctx: _Ctx, op: _Op, fd: int,
                   extents: Tuple[Extent, ...]) -> int:
@@ -132,7 +133,7 @@ class SliceOps:
         n = self._paste_at(ctx, f.inode_id, f.offset,
                            self._realize_app_extents(extents))
         f.offset += n
-        self.stats.logical_bytes_written += n
+        self.stats.add(logical_bytes_written=n)
         return n
 
     def _op_pastev(self, ctx: _Ctx, op: _Op, fd: int,
@@ -142,8 +143,7 @@ class SliceOps:
         n = self._paste_at(ctx, f.inode_id, f.offset,
                            self._realize_app_extents(flat))
         f.offset += n
-        self.stats.logical_bytes_written += n
-        self.stats.vectored_ops += 1
+        self.stats.add(logical_bytes_written=n, vectored_ops=1)
         return n
 
     def _op_punch(self, ctx: _Ctx, op: _Op, fd: int, amount: int) -> int:
@@ -183,7 +183,7 @@ class SliceOps:
             # previously written slice at the new end of file").
             eof = self._file_length(ctx, ino)
             self._write_at(ctx, op, ino.inode_id, eof, data, key="a")
-        self.stats.logical_bytes_written += len(data)
+        self.stats.add(logical_bytes_written=len(data))
         return len(data)
 
     def _op_append_slices(self, ctx: _Ctx, op: _Op, fd: int,
@@ -193,7 +193,7 @@ class SliceOps:
         eof = self._file_length(ctx, ino)
         n = self._paste_at(ctx, f.inode_id, eof,
                            self._realize_app_extents(extents))
-        self.stats.logical_bytes_written += n
+        self.stats.add(logical_bytes_written=n)
         return n
 
     def _op_concat(self, ctx: _Ctx, op: _Op, sources: Tuple[str, ...],
@@ -207,7 +207,7 @@ class SliceOps:
             length = self._file_length(ctx, ino)
             extents = self._plan_range(ctx, ino, 0, length)
             cursor += self._paste_at(ctx, dest_ino.inode_id, cursor, extents)
-        self.stats.logical_bytes_written += cursor
+        self.stats.add(logical_bytes_written=cursor)
 
     def _op_copy(self, ctx: _Ctx, op: _Op, source: str, dest: str) -> None:
         return self._op_concat(ctx, op, (source,), dest)
@@ -290,6 +290,50 @@ class SliceOps:
             plans.append(merge_adjacent(out))
         return plans
 
+    def _plan_many_cached(self, ctx: _Ctx, ino: Inode,
+                          ranges: Sequence[Tuple[int, int]]
+                          ) -> List[List[Extent]]:
+        """``_plan_many`` behind the version-validated read-plan cache.
+
+        A hot re-read of the same ``(inode, ranges)`` skips overlay
+        resolution entirely when every touched region still carries the
+        KV version the plan was built against; validation records the
+        same read dependencies a fresh plan would, so a hit is exactly as
+        serializable as a miss.  Any commit whose commutes touched a
+        region bumped its version — that IS the invalidation rule.
+
+        Bypassed (like ``overlay_cached``) whenever this transaction could
+        see state no other transaction can: queued commutes or buffered
+        writes, or pending write-behind extents in the plan.
+        """
+        cache = getattr(self, "_plan_cache", None)
+        txn = ctx.txn
+        if (cache is None or txn._commutes or txn._writes
+                or self._wb.pending):
+            return self._plan_many(ctx, ino, ranges)
+        key = (ino.inode_id, tuple(ranges))
+        entry = cache.get(key)
+        if entry is not None:
+            versions, plans = entry
+            if all(txn.get_version("regions", rk) == ver
+                   for rk, ver in versions):
+                self.stats.add(plan_cache_hits=1)
+                return [list(p) for p in plans]
+        regions = sorted({
+            r for off, ln in ranges
+            for r, _, _, _ in split_by_regions(off, ln, ino.region_size)})
+        plans = self._plan_many(ctx, ino, ranges)
+        if any(extent_is_pending(e) for p in plans for e in p):
+            return plans               # never cache pending extents
+        versions = tuple(
+            (region_key(ino.inode_id, r),
+             txn.get_version("regions", region_key(ino.inode_id, r)))
+            for r in regions)
+        if all(ver is not None for _, ver in versions):
+            cache.put(key, (versions, tuple(tuple(p) for p in plans)))
+            self.stats.add(plan_cache_misses=1)
+        return plans
+
     def _read_range(self, ctx: _Ctx, ino: Inode, offset: int,
                     length: int) -> bytes:
         if length <= 0:
@@ -309,7 +353,15 @@ class SliceOps:
         Pending-write overlay: while the write-behind buffer holds deferred
         stores, plan extents whose pointers are still pending never reach
         the scheduler — their bytes come straight from the buffered
-        payloads, so reads inside the transaction observe its own writes."""
+        payloads, so reads inside the transaction observe its own writes.
+
+        Every call that actually dispatches storage rounds counts one
+        ``blocked_waits``: a synchronous fetch blocks the application by
+        definition (the async surface's waits count only when the future
+        was not yet done — the overlap the runtime exists to create)."""
+        if any(not e.is_zero and not extent_is_pending(e)
+               for p in plans for e in p):
+            self.stats.add(blocked_waits=1)
         if not self._wb.pending:
             return self.cluster.scheduler.fetch_many(plans, stats=self.stats)
         parts: List[List[bytes]] = [[b""] * len(p) for p in plans]
@@ -349,18 +401,25 @@ class SliceOps:
         return out
 
     def _data_slice(self, ctx: _Ctx, op: _Op, ino: Inode, region: int,
-                    data: bytes, key: str) -> Extent:
+                    data: bytes, key: str,
+                    defer: Optional[bool] = None) -> Extent:
         """Create one (replicated) slice for ``data``, placed for ``region``.
 
         Created on first execution only; replays reuse the recorded pointers
         verbatim — the §2.6 op log holds slice pointers, never data.  A write
         that crosses a region boundary stays a *single* slice; each region's
         list gets a sub-ranged pointer (Figure 3, write C).
+
+        ``defer`` overrides the live write-behind check: async op bodies run
+        on pool threads and must not consult (or touch) the application
+        thread's buffer, so they pin the decision at submission time.
         """
         cached = op.artifacts.get(key)
         if cached is not None:
             return cached
-        if self._write_behind_active():
+        if defer is None:
+            defer = self._write_behind_active()
+        if defer:
             # Deferred: record the payload; the store happens at the commit
             # flush, batched with every other op in this commit scope.
             pk = region_placement_key(ino.inode_id, region)
@@ -370,28 +429,32 @@ class SliceOps:
         hint = stable_hash(region_placement_key(ino.inode_id, region))
         ptrs = self.cluster.store_slice(
             data, region_placement_key(ino.inode_id, region), hint)
-        self.stats.data_bytes_written += len(data) * len(ptrs)
-        self.stats.store_batches += len(ptrs)   # one round per replica store
+        self.stats.add(data_bytes_written=len(data) * len(ptrs),
+                       store_batches=len(ptrs))  # one round per replica store
         if len(ptrs) < self.cluster.replication:
-            self.stats.degraded_stores += 1
+            self.stats.add(degraded_stores=1)
         ext = Extent(0, len(data), ptrs)
         op.artifacts[key] = ext
         return ext
 
     def _data_slices(self, ctx: _Ctx, op: _Op, ino: Inode,
                      pieces: Sequence[Tuple[int, bytes]],
-                     key: str) -> Tuple[Extent, ...]:
+                     key: str,
+                     defer: Optional[bool] = None) -> Tuple[Extent, ...]:
         """Create (replicated) slices for many ``(region, data)`` pieces as
         ONE scheduled store batch (``wsched``): all stores are planned up
         front, grouped per (server, backing file), small adjacent pieces
         coalesce into covering stores, and distinct servers are written
         concurrently.  Created on first execution only; replays reuse the
         recorded extents verbatim, exactly like ``_data_slice`` (§2.6).
+        ``defer`` pins the write-behind decision (see ``_data_slice``).
         """
         cached = op.artifacts.get(key)
         if cached is not None:
             return cached
-        if self._write_behind_active():
+        if defer is None:
+            defer = self._write_behind_active()
+        if defer:
             exts = []
             for region, data in pieces:
                 pk = region_placement_key(ino.inode_id, region)
@@ -411,7 +474,8 @@ class SliceOps:
         return exts
 
     def _writev_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
-                   chunks: Sequence[bytes], key: str) -> int:
+                   chunks: Sequence[bytes], key: str,
+                   defer: Optional[bool] = None) -> int:
         """Vectored write engine: plan one store per (chunk, region) piece,
         dispatch the whole plan through the write scheduler, then queue each
         region's extents as one AppendExtents.  Pieces of one region share a
@@ -427,7 +491,8 @@ class SliceOps:
                 pieces.append((r, rel, chunk[po:po + ln]))
             cursor += len(chunk)
         exts = self._data_slices(ctx, op, ino,
-                                 [(r, d) for r, _, d in pieces], key)
+                                 [(r, d) for r, _, d in pieces], key,
+                                 defer=defer)
         max_r = ino.max_region
         per_region: dict[int, list[Extent]] = {}
         for (r, rel, _), ext in zip(pieces, exts):
@@ -438,7 +503,7 @@ class SliceOps:
                             AppendExtents(items))
         self._bump(ctx, inode_id, op, max_region=max_r)
         total = cursor - offset
-        self.stats.logical_bytes_written += total
+        self.stats.add(logical_bytes_written=total)
         return total
 
     def _write_at(self, ctx: _Ctx, op: _Op, inode_id: int, offset: int,
@@ -453,7 +518,7 @@ class SliceOps:
                             AppendExtents([full.sub(po, ln).at(rel)]))
             max_r = max(max_r, r)
         self._bump(ctx, inode_id, op, max_region=max_r)
-        self.stats.logical_bytes_written += len(data)
+        self.stats.add(logical_bytes_written=len(data))
         return len(data)
 
     def _paste_at(self, ctx: _Ctx, inode_id: int, offset: int,
@@ -486,6 +551,80 @@ class SliceOps:
         op = _Op("paste_internal", (), {})
         self._bump(ctx, inode_id, op, max_region=max_r)
         return cursor - offset
+
+    # ------------------------------------------------------ async op bodies
+    # Worker-thread engines behind the futures surface (``posix_ops``
+    # submits them to the cluster's ``IoRuntime``).  They never touch the
+    # fd table, the op log, or the write-behind buffer — everything
+    # fd-dependent is resolved on the application thread at submission —
+    # so they are safe to run concurrently with the application's own ops.
+
+    def _async_readv_body(self, inode_id: int,
+                          ranges: Tuple[Tuple[int, int], ...]) -> List[bytes]:
+        """Plan + fetch for an async vectored read, on a pool worker.
+
+        Planning happens HERE, at execution time, not at submission: a
+        commit that lands while the future is still queued bumps the
+        touched region versions, so the plan (cached or fresh) is built
+        against — and validated against — the post-commit state.  A stale
+        cached plan can never be served; the version check re-plans it.
+        The planning transaction commits (validating its read versions)
+        before any data round is issued, so the bytes returned are a
+        serializable snapshot.
+        """
+        last: Optional[Exception] = None
+        for attempt in range(self.MAX_RETRIES):
+            if attempt:
+                self.stats.add(txn_retries=1)
+            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            try:
+                ino = self._inode(ctx, inode_id)
+                length = self._file_length(ctx, ino)
+                clamped = [(off, min(size, max(0, length - off)))
+                           for off, size in ranges]
+                plans = self._plan_many_cached(ctx, ino, clamped)
+                ctx.txn.commit()
+            except (KVConflict, PreconditionFailed) as e:
+                last = e
+                continue
+            # Slices are immutable, so fetching after the metadata commit
+            # is safe; rounds issued from a worker run inline (iort).
+            out = self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+            self.stats.add(logical_bytes_read=sum(len(b) for b in out),
+                           vectored_ops=1)
+            return out
+        self.stats.add(txn_aborts=1)
+        raise TransactionAborted(
+            f"async readv failed after {self.MAX_RETRIES} attempts: {last}")
+
+    def _async_pwritev_body(self, inode_id: int,
+                            chunks: Tuple[bytes, ...], offset: int) -> int:
+        """Store + metadata commit for an async gather-write, on a worker.
+
+        The §2.1 order holds: slices are durable (through the write
+        scheduler) before the metadata commit; KV-level aborts retry with
+        the op's recorded artifacts, so data is never stored twice.
+        ``defer=False`` pins the write-behind decision made at submission —
+        a worker must never touch the application thread's buffer.
+        """
+        op = _Op("pwritev_async", (), {})
+        last: Optional[Exception] = None
+        for attempt in range(self.MAX_RETRIES):
+            if attempt:
+                self.stats.add(txn_retries=1)
+            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            try:
+                n = self._writev_at(ctx, op, inode_id, offset, chunks,
+                                    key="wv", defer=False)
+                ctx.txn.commit()
+                self.stats.add(vectored_ops=1)
+                return n
+            except (KVConflict, PreconditionFailed) as e:
+                last = e
+                continue
+        self.stats.add(txn_aborts=1)
+        raise TransactionAborted(
+            f"async pwritev failed after {self.MAX_RETRIES} attempts: {last}")
 
     def _truncate_inode(self, ctx: _Ctx, ino: Inode, length: int) -> None:
         """Truncate to zero via commit-time commutes (``ClearRegion`` /

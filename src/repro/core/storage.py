@@ -26,18 +26,22 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .errors import StorageError
+from .iort import AtomicStatsMixin
 from .placement import stable_hash
 from .slicing import SlicePointer
 
 
 @dataclass
-class StorageStats:
+class StorageStats(AtomicStatsMixin):
     """I/O accounting — the primary hardware-independent metric (Table 2).
 
     ``slices_created`` counts store *rounds* accepted (one ``create_slice``
     or ``create_slices`` call each); ``slices_written`` counts the logical
     slices those rounds carried, so ``slices_written - slices_created`` is
     the number of round trips the write-path scheduler saved this server.
+
+    Rounds arrive concurrently from the runtime pool; mutation goes
+    through ``add`` (atomic) — a bare ``+=`` would drop updates.
     """
 
     bytes_written: int = 0
@@ -47,9 +51,8 @@ class StorageStats:
     slices_read: int = 0
     gc_bytes_reclaimed: int = 0
     gc_bytes_rewritten: int = 0
-
-    def snapshot(self) -> dict:
-        return dict(self.__dict__)
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False, compare=False)
 
 
 def _merge_intervals(intervals: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
@@ -153,9 +156,8 @@ class StorageServer:
             raise StorageError(f"server {self.server_id} is down")
         bf = self._pick_backing_file(locality_hint)
         off = bf.append(data)
-        self.stats.bytes_written += len(data)
-        self.stats.slices_created += 1
-        self.stats.slices_written += 1
+        self.stats.add(bytes_written=len(data), slices_created=1,
+                       slices_written=1)
         name = os.path.basename(bf.path)
         return SlicePointer(self.server_id, name, off, len(data))
 
@@ -178,9 +180,8 @@ class StorageServer:
         bf = self._pick_backing_file(locality_hint)
         base = bf.append_many(parts)
         total = sum(len(p) for p in parts)
-        self.stats.bytes_written += total
-        self.stats.slices_created += 1
-        self.stats.slices_written += len(parts)
+        self.stats.add(bytes_written=total, slices_created=1,
+                       slices_written=len(parts))
         name = os.path.basename(bf.path)
         out: List[SlicePointer] = []
         off = base
@@ -202,8 +203,7 @@ class StorageServer:
             raise StorageError(
                 f"short read: wanted {ptr.length} got {len(data)} "
                 f"from {ptr.backing_file}@{ptr.offset}")
-        self.stats.bytes_read += len(data)
-        self.stats.slices_read += 1
+        self.stats.add(bytes_read=len(data), slices_read=1)
         return data
 
     # ----------------------------------------------------------- placement
@@ -302,8 +302,8 @@ class StorageServer:
             files_compacted += 1
             if max_files is not None and files_compacted >= max_files:
                 break
-        self.stats.gc_bytes_reclaimed += reclaimed
-        self.stats.gc_bytes_rewritten += rewritten
+        self.stats.add(gc_bytes_reclaimed=reclaimed,
+                       gc_bytes_rewritten=rewritten)
         return {"reclaimed": reclaimed, "rewritten": rewritten,
                 "files": files_compacted}
 

@@ -136,7 +136,7 @@ class FlakyKV:
             if hit:
                 self.injected += 1
         if hit:
-            self._inner.stats.aborts += 1
+            self._inner.stats.add(aborts=1)
             raise KVConflict(
                 f"injected abort: commit #{self.commit_calls}")
         self._inner._commit(txn)

@@ -209,7 +209,7 @@ class WriteBehindBuffer:
             cell.ptrs = ptrs[i]
         n = len(self._slices)
         if stats is not None:
-            stats.writeback_flushes += 1
+            stats.add(writeback_flushes=1)
         # Cells stay alive through any PendingPtr the application still
         # holds (e.g. yanked extents); the buffer itself is spent.
         self._slices = []

@@ -1,33 +1,34 @@
-"""Write-path store scheduler — the client's data-plane write engine.
+"""Write-path store strategy — the write side of the unified I/O runtime.
 
 PR 1 made the read path batched and scheduled (``iosched``); this module is
 its write-side mirror.  The scalar client pays one synchronous
 ``Cluster.store_slice`` round per slice, serially per replica.  Here a
 vectored op *plans* all its stores first (``StoreRequest``), and the
-scheduler then:
+strategy then:
 
   1. **Groups by target.**  Requests are grouped by (replica-candidate
      servers, backing-file hint) — the placement ring (§2.7) maps a
      metadata region to one server and one backing file, so all writes for
      a region share a group and land sequentially on one disk.
   2. **Coalesces.**  Within a group, runs of small requests (each at most
-     ``max_coalesce`` bytes, mirroring the read side's 32 KiB gap policy)
-     are packed into a single covering store; per-request pointers are
-     carved back out with ``SlicePointer.sub`` arithmetic.  The remaining
-     units still travel in ONE ``create_slices`` round per server — parts
-     are appended contiguously under one backing-file lock.
+     the pack threshold — sized by the runtime's adaptive cost model, or
+     pinned by ``Cluster(store_coalesce_bytes=…)``) are packed into a
+     single covering store; per-request pointers are carved back out with
+     ``SlicePointer.sub`` arithmetic.  The remaining units still travel in
+     ONE ``create_slices`` round per server — parts are appended
+     contiguously under one backing-file lock.
   3. **Fans out.**  Replica creations for *distinct* servers (and groups
-     targeting different servers) are issued concurrently on the shared
-     cluster thread pool, so a multi-region write completes in one
-     server's latency, not the sum, and replication costs max — not sum —
-     of the replica round trips.
+     targeting different servers) are issued as ``IoTask``s on the shared
+     ``IoRuntime`` pool, so a multi-region write completes in one server's
+     latency, not the sum, and replication costs max — not sum — of the
+     replica round trips.
 
-Failure handling (§2.9): each (group, replica) task walks the ring owners;
-on ``StorageError`` it marks the server failed and falls back to the next
-owner, never reusing a server another replica of the same data already
-landed on.  A store that achieves at least one but fewer than
-``replication`` replicas is recorded as *degraded* (never silent); zero
-replicas raises ``StorageError``.
+Failure handling (§2.9): each (group, replica) task walks the ring owners
+through the unified ``iort.run_with_failover`` loop; a ``StorageError``
+marks the server failed and falls back to the next owner, never reusing a
+server another replica of the same data already landed on.  A store that
+achieves at least one but fewer than ``replication`` replicas is recorded
+as *degraded* (never silent); zero replicas raises ``StorageError``.
 
 Accounting: ``ClientStats.store_batches`` counts server store rounds
 actually issued and ``slices_store_coalesced`` counts the logical stores
@@ -41,13 +42,13 @@ import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .errors import StorageError
+from .iort import IoTask, run_with_failover
 from .slicing import SlicePointer
 
-# Requests at most this large are packed with their neighbours into one
-# covering store (one slice on disk, per-request sub-pointers).  Mirrors the
-# read scheduler's DEFAULT_MAX_GAP: a covering store of small writes costs
-# nothing extra, while large writes keep their own pointers so GC and
-# compaction see them individually.
+# Historical fixed pack threshold, kept as the adaptive model's seed and as
+# the value benchmarks pin for comparable accounting.  A covering store of
+# small writes costs nothing extra, while large writes keep their own
+# pointers so GC and compaction see them individually.
 DEFAULT_MAX_COALESCE = 32 << 10
 
 
@@ -144,20 +145,26 @@ def plan_store_groups(requests: Sequence[StoreRequest], ring, n_servers: int,
 
 
 class WriteScheduler:
-    """Executes batched slice stores against a ``Cluster``.
+    """Write-side strategy layer over the cluster's ``IoRuntime``.
 
-    One scheduler per cluster, shared by all clients; it borrows the read
-    scheduler's thread pool (one data-plane pool per cluster).
-    ``store_many`` is the entry point; the client's ``_data_slices`` routes
-    every vectored write through it so batched and scalar stores share one
-    accounting scheme.
+    One scheduler per cluster, shared by all clients; it owns no pool and
+    no failover loop of its own.  ``store_many`` is the entry point; the
+    client's ``_data_slices`` routes every vectored write through it so
+    batched and scalar stores share one accounting scheme.
     """
 
-    def __init__(self, cluster, io_scheduler,
-                 max_coalesce: int = DEFAULT_MAX_COALESCE):
+    def __init__(self, cluster, runtime,
+                 max_coalesce: Optional[int] = None):
         self.cluster = cluster
-        self.io_scheduler = io_scheduler
-        self.max_coalesce = max_coalesce
+        self.runtime = runtime
+        self._max_coalesce = max_coalesce    # None → adaptive via runtime
+
+    @property
+    def max_coalesce(self) -> int:
+        """Current packing threshold (pinned or adaptive)."""
+        if self._max_coalesce is not None:
+            return self._max_coalesce
+        return self.runtime.coalesce_bytes()
 
     # -------------------------------------------------------------- store
     def store_many(self, requests: Sequence[StoreRequest],
@@ -187,17 +194,16 @@ class WriteScheduler:
                     cross_op += sum(
                         1 for r, _, _ in unit.spans[1:]
                         if r.op_tag is not None and r.op_tag != first)
-        tasks = [(g, rank) for g in groups for rank in range(want)]
-        if len(tasks) > 1:
-            results = list(self.io_scheduler.pool().map(
-                self._run_replica, tasks))
-        else:
-            results = [self._run_replica(tasks[0])]
+        tasks = [IoTask("store", g.candidates[rank % len(g.candidates)],
+                        sum(len(u.data) for u in g.units), (g, rank))
+                 for g in groups for rank in range(want)]
+        results = self.runtime.run_tasks(tasks, self._run_replica)
 
         # Collate per-replica pointer lists back into per-request tuples.
         by_group: Dict[int, List[Optional[List[SlicePointer]]]] = {}
         rounds = physical = coalesced = 0
-        for (g, rank), res in zip(tasks, results):
+        for task, res in zip(tasks, results):
+            g, rank = task.payload
             by_group.setdefault(id(g), []).append(res)
             if res is not None:
                 rounds += 1
@@ -219,44 +225,52 @@ class WriteScheduler:
         if degraded:
             cluster.note_degraded_stores(degraded)
         if stats is not None:
-            stats.store_batches += rounds
-            stats.slices_store_coalesced += coalesced
-            stats.slices_cross_op_coalesced += cross_op
-            stats.data_bytes_written += physical
-            stats.degraded_stores += degraded
+            stats.add(store_batches=rounds,
+                      slices_store_coalesced=coalesced,
+                      slices_cross_op_coalesced=cross_op,
+                      data_bytes_written=physical,
+                      degraded_stores=degraded)
         return out
 
     # ----------------------------------------------------------- internals
-    def _run_replica(self, task) -> Optional[List[SlicePointer]]:
-        """One (group, replica) store round with ring-owner fallback.
+    def _run_replica(self, task: IoTask) -> Optional[List[SlicePointer]]:
+        """One (group, replica) store round via the unified failover walk.
 
-        Walks the group's candidate servers from the replica's preferred
-        rank; a ``StorageError`` marks the server failed (§2.9) and falls
-        back to the next owner not already holding a replica of this
-        group.  Returns per-request pointers, or ``None`` if every
-        candidate refused (the caller decides degraded vs. fatal).
+        Candidates are the group's ring owners rotated to this replica's
+        preferred rank; a server already holding a replica of this group is
+        never reused (claimed under the group lock), a ``StorageError``
+        releases the claim, marks the server failed (§2.9) and falls back
+        to the next owner.  Returns per-request pointers, or ``None`` if
+        every candidate refused (the caller decides degraded vs. fatal).
         """
-        g, rank = task
+        g, rank = task.payload
         n = len(g.candidates)
-        for i in range(n):
-            sid = g.candidates[(rank + i) % n]
-            with g.lock:
-                if sid in g.used:
-                    continue
-                srv = self.cluster.servers.get(sid)
-                if srv is None or not srv.alive:
-                    continue
-                g.used.add(sid)
-            try:
-                ptrs = srv.create_slices([u.data for u in g.units], g.hint)
-            except StorageError:
+
+        def candidates():
+            for i in range(n):
+                sid = g.candidates[(rank + i) % n]
                 with g.lock:
-                    g.used.discard(sid)
-                self.cluster._on_server_error(sid)
-                continue
+                    if sid in g.used:
+                        continue
+                    srv = self.cluster.servers.get(sid)
+                    if srv is None or not srv.alive:
+                        continue
+                    g.used.add(sid)
+                yield sid, sid
+
+        def attempt(srv, sid):
+            task.server_id = sid        # actual target, for the cost model
+            ptrs = srv.create_slices([u.data for u in g.units], g.hint)
             out: List[SlicePointer] = []
             for unit, uptr in zip(g.units, ptrs):
                 for req, start, length in unit.spans:
                     out.append(uptr.sub(start, length))
             return out
-        return None
+
+        def release(sid):
+            with g.lock:
+                g.used.discard(sid)
+
+        return run_with_failover(self.cluster, candidates(), attempt,
+                                 release=release,
+                                 exhausted=lambda _last: None)

@@ -38,6 +38,12 @@ class PipelineConfig:
     host_id: int = 0
     num_hosts: int = 1
     prefetch: int = 2              # prefetched batches (0 = synchronous)
+    # Issue each prefetch window's storage fetch through the async I/O
+    # runtime (readv_async) so window W+1 is in flight while window W is
+    # being consumed.  False reverts to one synchronous vectored read per
+    # window (plan+fetch serialized with consumption) — the comparison the
+    # pipeline_bench overlap scenario measures.
+    async_prefetch: bool = True
 
     def __post_init__(self):
         if self.global_batch % self.num_hosts:
@@ -107,12 +113,8 @@ class DataPipeline:
         vectored read — the record runs of all steps are planned in a
         single transaction and their slice fetches batched per server."""
         f = self._ensure_epoch(epoch)
-        per_host = self.cfg.global_batch // self.cfg.num_hosts
-        runs = [(s * self.cfg.global_batch + self.cfg.host_id * per_host,
-                 per_host) for s in steps]
-        raws = f.read_record_runs(runs)
-        return [np.frombuffer(raw, dtype=self.cfg.dtype).reshape(
-                    per_host, self.cfg.block_tokens) for raw in raws]
+        raws = f.read_record_runs(self._window_runs(steps))
+        return [self._blocks_of(raw) for raw in raws]
 
     def __iter__(self) -> Iterator[dict]:
         if self.cfg.prefetch > 0:
@@ -135,40 +137,111 @@ class DataPipeline:
                 "step_in_epoch": step,
             }
 
+    def _window_runs(self, steps: Sequence[int]) -> list[Tuple[int, int]]:
+        per_host = self.cfg.global_batch // self.cfg.num_hosts
+        return [(s * self.cfg.global_batch + self.cfg.host_id * per_host,
+                 per_host) for s in steps]
+
+    def _blocks_of(self, raw: bytes) -> np.ndarray:
+        per_host = self.cfg.global_batch // self.cfg.num_hosts
+        return np.frombuffer(raw, dtype=self.cfg.dtype).reshape(
+            per_host, self.cfg.block_tokens)
+
     def _prefetching_iter(self) -> Iterator[dict]:
-        """Background-thread prefetch: overlaps storage reads with compute
-        (the trainer's step time hides the pipeline's I/O).  The producer
-        pulls up to ``prefetch`` steps per vectored read, so a prefetch
-        window costs one storage round per server instead of one per
-        step."""
-        q: "queue.Queue" = queue.Queue(maxsize=self.cfg.prefetch)
+        """Background-thread prefetch on the async I/O runtime.
+
+        The producer pulls up to ``prefetch`` steps per vectored read, so
+        a prefetch window costs one storage round per server instead of
+        one per step — and with ``async_prefetch`` it issues window W+1's
+        fetch (``readv_async``) *before* awaiting window W's, so the
+        metadata planning and data rounds of the next window overlap the
+        consumption of the current one.  The trainer's step time then
+        hides the pipeline's I/O twice over: behind the queue, and behind
+        the in-flight future."""
+        q: "queue.Queue" = queue.Queue(maxsize=max(1, self.cfg.prefetch))
         stop = threading.Event()
+        window = max(1, self.cfg.prefetch)
+
+        def next_window(epoch: int, step: int):
+            """Advance to the next non-empty window, crossing (and, on
+            first touch, materializing) epoch boundaries.  Re-checks
+            ``stop`` on every epoch bump — a shard smaller than one
+            global batch has zero steps per epoch, and this loop must
+            stay interruptible rather than materialize epoch files
+            forever.  Returns ``None`` when stopping."""
+            while not stop.is_set():
+                f = self._ensure_epoch(epoch)
+                spe = f.count // self.cfg.global_batch
+                if step >= spe:
+                    epoch, step = epoch + 1, 0
+                    continue
+                return epoch, list(range(step, min(step + window, spe))), f
+            return None
+
+        def emit(epoch: int, steps, raws) -> bool:
+            for s, raw in zip(steps, raws):
+                if stop.is_set():
+                    return False
+                blocks = self._blocks_of(raw)
+                self.state = PipelineState(epoch, s + 1)
+                q.put({
+                    "tokens": blocks[:, :-1],
+                    "labels": blocks[:, 1:],
+                    "epoch": epoch,
+                    "step_in_epoch": s,
+                })
+            return True
 
         def producer():
+            pending = []                     # every issued, un-awaited future
+
+            def issue(win):
+                fu = win[2].read_record_runs_async(self._window_runs(win[1]))
+                pending.append(fu)
+                return fu
+
+            def collect(fu):
+                try:
+                    return fu.result()
+                finally:
+                    pending.remove(fu)
+
             try:
-                window = max(1, self.cfg.prefetch)
+                cur = next_window(self.state.epoch,
+                                  self.state.step_in_epoch)
+                if cur is None:
+                    return
+                fut = issue(cur) if self.cfg.async_prefetch else None
                 while not stop.is_set():
-                    epoch = self.state.epoch
-                    f = self._ensure_epoch(epoch)
-                    spe = f.count // self.cfg.global_batch
-                    step = self.state.step_in_epoch
-                    if step >= spe:
-                        self.state = PipelineState(epoch + 1, 0)
-                        continue
-                    steps = list(range(step, min(step + window, spe)))
-                    for s, blocks in zip(steps,
-                                         self._host_batches(epoch, steps)):
-                        if stop.is_set():
+                    epoch, steps, f = cur
+                    if self.cfg.async_prefetch:
+                        # Issue-ahead: the next window's fetch enters the
+                        # runtime before this window's future is awaited.
+                        # (The async read captured its inode at submission,
+                        # so crossing an epoch — which closes the current
+                        # RecordFile handle — cannot invalidate it.)
+                        nxt = next_window(epoch, steps[-1] + 1)
+                        if nxt is None:
                             return
-                        self.state = PipelineState(epoch, s + 1)
-                        q.put({
-                            "tokens": blocks[:, :-1],
-                            "labels": blocks[:, 1:],
-                            "epoch": epoch,
-                            "step_in_epoch": s,
-                        })
+                        nfut = issue(nxt)
+                        raws, fut = collect(fut), nfut
+                    else:
+                        raws = f.read_record_runs(self._window_runs(steps))
+                        nxt = None
+                    if not emit(epoch, steps, raws):
+                        return
+                    cur = nxt if nxt is not None \
+                        else next_window(epoch, steps[-1] + 1)
+                    if cur is None:
+                        return
             except Exception as e:           # surface errors to the consumer
                 q.put(e)
+            finally:
+                for fu in list(pending):     # quiesce: no orphaned rounds,
+                    try:                     # even when the awaited window
+                        fu.result()          # failed with nfut in flight
+                    except Exception:        # noqa: BLE001 - already stopping
+                        pass
 
         t = threading.Thread(target=producer, daemon=True)
         t.start()
@@ -179,7 +252,25 @@ class DataPipeline:
                     raise item
                 yield item
         finally:
+            # Deterministic shutdown for abandoned iterators: wake a
+            # producer blocked on a full queue, then join it so no stray
+            # fetch lands after the consumer is gone.
             stop.set()
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            t.join(timeout=10)
+            if t.is_alive():
+                # A wedged producer (e.g. a fetch stuck on a dead server)
+                # can still mutate state/stats after this point — make
+                # that visible instead of silently pretending quiescence.
+                import warnings
+                warnings.warn(
+                    "DataPipeline producer did not stop within 10s of "
+                    "iterator shutdown; counters may keep moving",
+                    RuntimeWarning, stacklevel=2)
 
     # ---------------------------------------------------------- elasticity
     def with_hosts(self, host_id: int, num_hosts: int) -> "DataPipeline":

@@ -117,6 +117,13 @@ class RecordFile:
         """Vectored read of ``(start, n)`` record runs; one buffer per run."""
         return self._f.readv(self._ranges_of(runs))
 
+    def read_record_runs_async(self, runs: Sequence[Tuple[int, int]]):
+        """``read_record_runs`` through the async runtime: returns an
+        ``IoFuture`` of the buffer list.  The caller can issue the next
+        window's fetch before consuming this one — the overlap the data
+        pipeline's prefetcher is built on."""
+        return self._f.readv_async(self._ranges_of(runs))
+
     def _ranges_of(self, runs: Sequence[Tuple[int, int]]
                    ) -> List[Tuple[int, int]]:
         """Bounds-checked, EOF-clamped byte ranges for record runs — the

@@ -1,0 +1,509 @@
+"""The unified async I/O runtime (``core/iort.py``).
+
+Covers:
+  * both schedulers are strategy layers over ONE runtime — no private
+    pools, no duplicated failover loops;
+  * the async surface (``readv_async``/``preadv_async``/``writev_async``/
+    ``pwritev_async``): equivalence with the sync twins, submission-time
+    EBADF/EINVAL, eager offset semantics, write-behind short-circuit,
+    auto-commit-only scoping;
+  * failure paths: a future resolving to ``StorageError`` after replica
+    exhaustion, a pending async read crossing a commit that invalidates
+    its plan (must re-plan, never serve stale extents), and shutdown with
+    in-flight futures (clean drain, no leaked pool threads);
+  * the version-validated read-plan cache: hot re-read hits, invalidation
+    by commits, bypass under write-behind and open transactions;
+  * adaptive gap/pack thresholds from the EWMA cost model, and knob
+    pinning/validation at ``Cluster`` construction;
+  * stats counters staying exact when pool threads and the application
+    thread mutate them concurrently (the lost-update race ``add`` fixes).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import Cluster, StorageError, WtfError
+from repro.core.iort import (ADAPTIVE_CEILING, ADAPTIVE_FLOOR,
+                             ADAPTIVE_SEED, IoRuntime)
+
+REGION = 1 << 20
+
+
+def make_cluster(tmp_path, tag="c", **kw):
+    kw.setdefault("n_servers", 3)
+    kw.setdefault("replication", 1)
+    kw.setdefault("region_size", REGION)
+    return Cluster(data_dir=str(tmp_path / tag), **kw)
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = make_cluster(tmp_path)
+    yield c
+    c.close()
+
+
+@pytest.fixture()
+def fs(cluster):
+    return cluster.client()
+
+
+def write_file(fs, path, data):
+    with fs.open_file(path, "w") as f:
+        f.write(data)
+
+
+# ------------------------------------------------------------- unification
+def test_schedulers_share_one_runtime(cluster):
+    """Acceptance: iosched/wsched retain no private pool and delegate to
+    the one runtime the cluster owns."""
+    assert cluster.scheduler.runtime is cluster.runtime
+    assert cluster.wsched.runtime is cluster.runtime
+    assert not hasattr(cluster.scheduler, "_pool")
+    assert not hasattr(cluster.wsched, "_pool")
+
+
+def test_read_failover_through_unified_walk(tmp_path):
+    """A replicated read survives the chosen server dying — via the one
+    ``run_with_failover`` loop."""
+    c = make_cluster(tmp_path, "fo", n_servers=3, replication=2)
+    fs = c.client()
+    write_file(fs, "/f", b"payload" * 100)
+    ptrs = {p.server_id
+            for ext in fs.yank(fs.open("/f"), 700) for p in ext.ptrs}
+    c.fail_server(next(iter(ptrs)))
+    with fs.open_file("/f") as f:
+        assert f.read() == b"payload" * 100
+    c.close()
+
+
+# ------------------------------------------------------------ async surface
+def test_async_read_matches_sync(fs):
+    data = bytes(range(256)) * 64
+    write_file(fs, "/f", data)
+    with fs.open_file("/f") as f:
+        ranges = [(0, 100), (5000, 300), (16000, 100), (100, 0)]
+        fut = f.readv_async(ranges)
+        assert fut.result() == f.readv(ranges)
+    assert fs.stats.async_ops == 1
+
+
+def test_preadv_async_and_eof_clamp(fs):
+    write_file(fs, "/f", b"x" * 100)
+    with fs.open_file("/f") as f:
+        out = f.preadv_async([60, 60, 60], 0).result()
+    assert out == [b"x" * 60, b"x" * 40, b""]
+
+
+def test_async_write_roundtrip_and_eager_offset(fs):
+    with fs.open_file("/w", "w") as f:
+        fut = f.writev_async([b"hello", b" ", b"world"])
+        # POSIX-AIO style: the fd offset advances at submission.
+        assert f.tell() == 11
+        assert fut.result() == 11
+        assert f.pwritev_async([b"HE"], 0).result() == 2
+        assert f.tell() == 11              # positional: untouched
+    with fs.open_file("/w") as f:
+        assert f.read() == b"HEllo world"
+
+
+def test_async_ordered_writes_interleave_with_planning(fs):
+    """Issue many async gather-writes back to back; the eager offsets make
+    them land consecutively regardless of completion order."""
+    chunks = [bytes([i]) * 97 for i in range(32)]
+    with fs.open_file("/seq", "w") as f:
+        futs = [f.writev_async([c]) for c in chunks]
+        assert [x.result() for x in futs] == [97] * 32
+    with fs.open_file("/seq") as f:
+        assert f.read() == b"".join(chunks)
+
+
+def test_async_rejects_bad_fd_and_negative_ranges_at_submission(fs):
+    from repro.core import BadFileDescriptor, InvalidOffset
+    with pytest.raises(BadFileDescriptor):
+        fs.readv_async(999, [(0, 1)])
+    write_file(fs, "/f", b"abc")
+    fd = fs.open("/f")
+    with pytest.raises(InvalidOffset):
+        fs.readv_async(fd, [(-1, 5)])
+    wfd = fs.open("/f2", "w")
+    with pytest.raises(InvalidOffset):
+        fs.pwritev_async(wfd, [b"x"], -3)
+    from repro.core import NotOpenForWriting
+    with pytest.raises(NotOpenForWriting):
+        fs.writev_async(fd, [b"x"])        # "r" fd
+
+
+def test_async_is_auto_commit_only(fs):
+    write_file(fs, "/f", b"abc")
+    fd = fs.open("/f")
+    with pytest.raises(WtfError):
+        with fs.transaction():
+            fs.readv_async(fd, [(0, 1)])
+
+
+def test_rejected_writev_async_leaves_offset_untouched(fs):
+    """The auto-commit-only gate must fire BEFORE the eager offset
+    advance: a rejected submission inside a transaction may not move the
+    fd (a later write would land past a hole of stale bytes)."""
+    wfd = fs.open("/w", "w")
+    fs.write(wfd, b"base")
+    with fs.transaction():
+        with pytest.raises(WtfError):
+            fs.writev_async(wfd, [b"xxxx"])
+        assert fs.tell(wfd) == 4           # unmoved
+        fs.write(wfd, b"MORE")
+    with fs.open_file("/w") as f:
+        assert f.read() == b"baseMORE"
+
+
+def test_async_checkpoint_save_does_not_block_client_async_ops(tmp_path):
+    """AsyncCheckpointer saves run on a PRIVATE client: the save's
+    worker-side transaction must not make the shared client reject its
+    own concurrent async ops as 'inside a transaction'."""
+    import numpy as np
+    from repro.checkpoint import AsyncCheckpointer, CheckpointManager
+    c = make_cluster(tmp_path, "ckc")
+    fs = c.client()
+    write_file(fs, "/r", b"r" * 8192)
+    mgr = CheckpointManager(fs, "/ck")
+    ck = AsyncCheckpointer(mgr)
+    tree = {"w": np.arange(200000, dtype=np.float32)}
+    with fs.open_file("/r") as f:
+        ck.save(5, tree)                   # in flight on a worker
+        futs = [f.readv_async([(0, 512)]) for _ in range(8)]
+        assert all(fu.result() == [b"r" * 512] for fu in futs)
+        ck.wait()
+    got = mgr.restore({"w": None}, step=5)
+    assert np.array_equal(got["w"], tree["w"])
+    c.close()
+
+
+def test_pipeline_close_interrupts_empty_epoch_spin(tmp_path):
+    """A shard smaller than one global batch yields zero steps per epoch;
+    iterator shutdown must still stop the producer (it re-checks stop on
+    every epoch bump) instead of materializing epoch files forever."""
+    import time as _time
+    import warnings
+    import numpy as np
+    from repro.data.pipeline import DataPipeline, PipelineConfig
+    from repro.data.records import write_token_shard
+    c = make_cluster(tmp_path, "spin")
+    fs = c.client()
+    fs.mkdir("/d")
+    rng = np.random.RandomState(0)
+    write_token_shard(fs, "/d/s", iter(rng.randint(0, 9, 4 * 8)), 8)
+    cfg = PipelineConfig(src_paths=("/d/s",), work_dir="/d/ep",
+                         block_tokens=8, global_batch=64, prefetch=2)
+    it = iter(DataPipeline(fs, cfg))
+    _time.sleep(0.05)                      # let the producer spin epochs
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # a stuck producer would warn
+        it.close()
+    c.close()
+
+
+def test_checkpoint_restore_inside_transaction(tmp_path):
+    """restore() joins an open transaction by reading synchronously (the
+    async fan-out is auto-commit only)."""
+    import numpy as np
+    from repro.checkpoint import CheckpointManager
+    c = make_cluster(tmp_path, "ckr")
+    fs = c.client()
+    mgr = CheckpointManager(fs, "/ck")
+    tree = {"w": np.arange(64, dtype=np.float32)}
+    mgr.save(1, tree)
+    with fs.transaction():
+        got = mgr.restore({"w": None}, step=1)
+    assert np.array_equal(got["w"], tree["w"])
+    c.close()
+
+
+def test_async_write_with_write_behind_completes_synchronously(tmp_path):
+    c = make_cluster(tmp_path, "wb", write_behind=True)
+    fs = c.client()
+    with fs.open_file("/f", "w") as f:
+        fut = f.writev_async([b"deferred"])
+        assert fut.done()                  # nothing to overlap: buffered
+        assert fut.result() == 8
+    with fs.open_file("/f") as f:
+        assert f.read() == b"deferred"
+    c.close()
+
+
+# ------------------------------------------------------------ failure paths
+def test_async_future_resolves_to_storage_error_on_replica_exhaustion(
+        tmp_path):
+    c = make_cluster(tmp_path, "ex", n_servers=2)
+    fs = c.client()
+    write_file(fs, "/f", b"doomed" * 50)
+    with fs.open_file("/f") as f:
+        for sid in list(c.servers):
+            c.fail_server(sid)
+        fut = f.readv_async([(0, 300)])
+        assert isinstance(fut.exception(), StorageError)
+        with pytest.raises(StorageError):
+            fut.result()
+    c.close()
+
+
+def test_pending_async_read_replans_after_invalidating_commit(tmp_path):
+    """An async read still queued when a commit rewrites its range must
+    re-plan against the committed state — never serve the extents its
+    (cached) plan would have fetched."""
+    c = make_cluster(tmp_path, "inv", fetch_workers=1)
+    fs = c.client()
+    write_file(fs, "/f", b"old!" * 256)
+    with fs.open_file("/f", "a") as f:
+        f.readv([(0, 1024)])               # populate the plan cache
+        assert fs.stats.plan_cache_misses == 1
+        gate = threading.Event()
+        blocker = c.runtime.submit_op(gate.wait)
+        fut = f.readv_async([(0, 1024)])   # queued behind the blocker
+        fs.pwrite(f.fd, b"new!" * 256, 0)  # invalidates the cached plan
+        gate.set()
+        assert fut.result() == [b"new!" * 256]
+        blocker.result()
+    c.close()
+
+
+def test_shutdown_drains_in_flight_futures_without_leaking_threads(
+        tmp_path):
+    c = make_cluster(tmp_path, "dr", fetch_workers=2)
+    fs = c.client()
+    write_file(fs, "/f", b"z" * 4096)
+    with fs.open_file("/f") as f:
+        futs = [f.readv_async([(i * 64, 64)]) for i in range(16)]
+        c.close()                          # drain: everything completes
+    assert all(fut.done() for fut in futs)
+    assert [fut.result() for fut in futs] == [[b"z" * 64]] * 16
+    for _ in range(50):                    # pool threads must exit
+        if not any(t.name.startswith("wtf-iort")
+                   for t in threading.enumerate()):
+            break
+        time.sleep(0.02)
+    assert not any(t.name.startswith("wtf-iort")
+                   for t in threading.enumerate())
+
+
+# ---------------------------------------------------------------- plan cache
+def test_plan_cache_hot_reread_hits_and_serves_fresh_bytes(fs):
+    write_file(fs, "/f", b"abcd" * 1000)
+    with fs.open_file("/f", "a") as f:
+        ranges = [(0, 64), (512, 64), (2048, 128)]
+        first = f.readv(ranges)
+        assert fs.stats.plan_cache_misses == 1
+        for _ in range(5):
+            assert f.readv(ranges) == first
+        assert fs.stats.plan_cache_hits == 5
+
+
+def test_plan_cache_invalidated_by_commit(fs):
+    write_file(fs, "/f", b"A" * 8192)
+    with fs.open_file("/f", "a") as f:
+        assert f.readv([(0, 8192)]) == [b"A" * 8192]
+        hits = fs.stats.plan_cache_hits
+        fs.pwrite(f.fd, b"B" * 4096, 0)    # commutes bump region versions
+        assert f.readv([(0, 8192)]) == [b"B" * 4096 + b"A" * 4096]
+        assert fs.stats.plan_cache_hits == hits   # stale entry: a miss
+        assert f.readv([(0, 8192)])[0][:4] == b"BBBB"
+        assert fs.stats.plan_cache_hits == hits + 1
+
+
+def test_plan_cache_is_per_range_set_and_respects_eof_growth(fs):
+    write_file(fs, "/f", b"x" * 100)
+    with fs.open_file("/f", "a") as f:
+        assert fs.readv(f.fd, [(0, 1000)]) == [b"x" * 100]
+        f.append(b"y" * 50)
+        # EOF moved: the clamped ranges differ → different cache key; the
+        # read must see the appended bytes.
+        assert fs.readv(f.fd, [(0, 1000)]) == [b"x" * 100 + b"y" * 50]
+
+
+def test_plan_cache_bypassed_inside_writing_transaction(fs):
+    write_file(fs, "/f", b"1234" * 64)
+    fd = fs.open("/f", "a")                         # writable fd
+    with fs.transaction():
+        fs.pwrite(fd, b"ZZ", 0)
+        # queued commutes: the cache must not serve (or record) plans that
+        # include this transaction's in-flight view
+        assert fs.readv(fd, [(0, 4)]) == [b"ZZ34"]
+    assert fs.readv(fd, [(0, 4)]) == [b"ZZ34"]
+
+
+def test_plan_cache_bypassed_for_pending_write_behind_extents(tmp_path):
+    c = make_cluster(tmp_path, "pcwb", write_behind=True)
+    fs = c.client()
+    write_file(fs, "/f", b"base" * 64)
+    fd = fs.open("/f", "a")
+    with fs.transaction():
+        fs.pwrite(fd, b"WXYZ", 0)
+        # read-your-buffered-writes, straight from buffer memory
+        assert fs.readv(fd, [(0, 8)]) == [b"WXYZbase"[:8]]
+    assert fs.readv(fd, [(0, 8)]) == [b"WXYZbase"[:8]]
+    c.close()
+
+
+def test_yankv_plans_share_the_cache(fs):
+    write_file(fs, "/f", b"q" * 4096)
+    fd = fs.open("/f")
+    plans1 = fs.yankv(fd, [(0, 1024), (2048, 512)])
+    misses = fs.stats.plan_cache_misses
+    plans2 = fs.yankv(fd, [(0, 1024), (2048, 512)])
+    assert plans1 == plans2
+    assert fs.stats.plan_cache_misses == misses
+    assert fs.stats.plan_cache_hits >= 1
+
+
+# ------------------------------------------------------- adaptive thresholds
+def test_adaptive_thresholds_move_with_observed_cost():
+    rt = IoRuntime(max_workers=1)
+    assert rt.gap_bytes() == ADAPTIVE_SEED        # no observations yet
+    for _ in range(50):                            # 5 ms rounds, 100 MB/s
+        rt.observe_round(0, 0.005, 100)
+        rt.observe_round(0, 0.01, 1 << 20)
+    est = rt.gap_bytes()
+    assert est == rt.coalesce_bytes()
+    assert ADAPTIVE_FLOOR <= est <= ADAPTIVE_CEILING
+    assert est != ADAPTIVE_SEED                    # the model moved
+    # A much cheaper round trip shrinks the worthwhile gap.
+    rt2 = IoRuntime(max_workers=1)
+    for _ in range(50):
+        rt2.observe_round(0, 1e-6, 100)
+        rt2.observe_round(0, 0.01, 1 << 20)
+    assert rt2.gap_bytes() < est
+    rt.close()
+    rt2.close()
+
+
+def test_pinned_knobs_disable_adaptation(tmp_path):
+    c = make_cluster(tmp_path, "pin", fetch_gap_bytes=12345,
+                     store_coalesce_bytes=54321)
+    assert c.scheduler.max_gap == 12345
+    assert c.wsched.max_coalesce == 54321
+    snap = c.runtime.snapshot()
+    assert snap["gap_pinned"] and snap["coalesce_pinned"]
+    fs = c.client()
+    write_file(fs, "/f", b"d" * (64 << 10))
+    with fs.open_file("/f") as f:
+        f.readv([(0, 1024), (32 << 10, 1024)])
+    assert c.scheduler.max_gap == 12345            # observations ignored
+    c.close()
+
+
+def test_cluster_knob_validation(tmp_path):
+    cases = [
+        dict(replication=0),
+        dict(replication=4, n_servers=3),
+        dict(fetch_gap_bytes=0),
+        dict(fetch_gap_bytes=-5),
+        dict(store_coalesce_bytes=0),
+        dict(store_coalesce_bytes=-1),
+        dict(fetch_workers=0),
+        dict(region_size=0),
+        dict(n_servers=0),
+    ]
+    for i, kw in enumerate(cases):
+        with pytest.raises(ValueError):
+            Cluster(data_dir=str(tmp_path / f"bad{i}"), **kw)
+    # replication == n_servers is legal (distinct servers still exist)
+    c = Cluster(n_servers=2, replication=2, data_dir=str(tmp_path / "ok"))
+    c.close()
+
+
+# --------------------------------------------------------------- stats races
+N_THREADS = 6
+OPS_PER_THREAD = 25
+CHUNK = 512
+
+
+def test_storage_stats_exact_under_concurrent_clients(tmp_path):
+    """N clients hammer the same servers from N threads; the per-server
+    counters must come out exact (the bare-+= lost-update race)."""
+    c = make_cluster(tmp_path, "race", n_servers=2)
+    clients = [c.client() for _ in range(N_THREADS)]
+    handles = [fs.open_file(f"/f{i}", "w")
+               for i, fs in enumerate(clients)]
+    c.reset_io_stats()                     # creation dirents not counted
+    chunk = b"xyz" * (CHUNK // 3)
+    errors = []
+
+    def work(i):
+        try:
+            for _ in range(OPS_PER_THREAD):
+                handles[i].writev([chunk])
+        except Exception as e:             # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for h in handles:
+        h.close()
+    expected = N_THREADS * OPS_PER_THREAD * len(chunk)
+    written = sum(s.stats.snapshot()["bytes_written"]
+                  for s in c.servers.values())
+    slices = sum(s.stats.snapshot()["slices_written"]
+                 for s in c.servers.values())
+    assert written == expected
+    assert slices == N_THREADS * OPS_PER_THREAD
+    total_logical = sum(cl.stats.logical_bytes_written for cl in clients)
+    assert total_logical == expected
+    c.close()
+
+
+def test_client_stats_exact_under_concurrent_async_ops(tmp_path):
+    """One client's counters mutated from pool workers and the app thread
+    concurrently must total exactly (satellite: the += race)."""
+    c = make_cluster(tmp_path, "as", n_servers=3)
+    fs = c.client()
+    fs.time_fn = lambda: 0          # stable mtimes → conflict-free commutes
+    n = 32
+    write_file(fs, "/r", b"R" * (n * CHUNK))
+    with fs.open_file("/w", "w") as fw, fs.open_file("/r") as fr:
+        # Pre-grow /w so its inode (max_region) is stable: every async op
+        # then commits conflict-free commutes only — zero KV retries, so
+        # the counter totals below are exact, not lower bounds.
+        fw.pwrite(b"\0", 0)
+        base = fs.stats.snapshot()
+        wfuts = [fw.pwritev_async([bytes([i % 251]) * CHUNK], i * CHUNK)
+                 for i in range(n)]
+        rfuts = [fr.readv_async([(i * CHUNK, CHUNK)]) for i in range(n)]
+        # app thread keeps mutating the same stats while workers run
+        for i in range(n):
+            assert fr.readv([(i * CHUNK, CHUNK)])[0] == b"R" * CHUNK
+        assert all(f.result() == CHUNK for f in wfuts)
+        assert all(f.result() == [b"R" * CHUNK] for f in rfuts)
+    s = fs.stats.snapshot()
+    assert fs.stats.txn_retries == base["txn_retries"]
+    assert s["async_ops"] - base["async_ops"] == 2 * n
+    assert s["logical_bytes_read"] - base["logical_bytes_read"] \
+        == 2 * n * CHUNK
+    assert s["logical_bytes_written"] - base["logical_bytes_written"] \
+        == n * CHUNK
+    assert s["data_bytes_written"] - base["data_bytes_written"] \
+        == n * CHUNK
+    assert s["vectored_ops"] - base["vectored_ops"] == 3 * n
+    with fs.open_file("/w") as f:
+        got = f.read()
+    assert got == b"".join(bytes([i % 251]) * CHUNK for i in range(n))
+    c.close()
+
+
+# ----------------------------------------------------------- blocked waits
+def test_blocked_wait_accounting(fs):
+    write_file(fs, "/f", b"k" * 4096)
+    with fs.open_file("/f") as f:
+        before = fs.stats.blocked_waits
+        f.readv([(0, 128)])                # sync fetch = one blocked wait
+        assert fs.stats.blocked_waits == before + 1
+        fut = f.readv_async([(0, 128)])
+        while not fut.done():
+            time.sleep(0.001)
+        fut.result()                       # already done: no blocked wait
+        assert fs.stats.blocked_waits == before + 1
