@@ -1,0 +1,232 @@
+"""Metadata-plane fast-path benchmark: the three commit/plan-path
+optimizations measured against their own off switches.
+
+  1. **Hot region** — a small-append + re-read stream into one region.
+     Without the fast path every re-read re-resolves the region's entire
+     overlay history (quadratic over the stream) and the list grows
+     without bound; with commit-time compaction (``CompactRegion``) plus
+     the delta-maintained resolved index the planning cost stays flat.
+     Counters: ``kv.compactions`` > 0, ``resolved_index_hits`` > 0, final
+     overlay length bounded by the threshold — and byte-identical reads.
+  2. **Scatter-gather** — a vectored read of non-adjacent extents on one
+     (server, backing file).  One ``retrieve_slices`` round with the fast
+     path on vs. one round per coalesced run off; asserted strictly fewer
+     server ``read_rounds`` with identical bytes and identical
+     ``slices_read`` (no accounting drift).
+  3. **Group commit** — concurrent auto-commit metadata ops.  With
+     ``kv_group_commit`` the stripe-lock acquisition passes
+     (``commit_lock_passes``) are strictly fewer than the commits they
+     serve; off, they are equal.  Final file bytes identical either way.
+
+Usage: ``python -m benchmarks.meta_bench [smoke|quick|full]``.  Saves
+``results/meta_bench.json`` (the perf-trajectory artifact CI uploads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import time
+
+from repro.core.inode import region_key
+
+from .common import Scale, fmt_bytes, save_result, wtf_cluster
+
+APPEND_BYTES = 512
+HOT_APPENDS = {"smoke": 256, "quick": 1024, "full": 4096}
+REREAD_WINDOW = 16 << 10
+SG_CHUNK = 8 << 10
+SG_CHUNKS = {"smoke": 16, "quick": 48, "full": 128}
+GC_THREADS = {"smoke": 4, "quick": 8, "full": 8}
+GC_OPS = {"smoke": 150, "quick": 400, "full": 1200}
+
+
+# --------------------------------------------------------------- scenario 1
+def _drive_hot_region(cluster, n_appends: int):
+    """Append small chunks to one file; re-read a fixed window after each.
+    Returns (client, re-read wall seconds, final bytes, final entry count)."""
+    fs = cluster.client()
+    fd = fs.open("/hot", "w")
+    reread_s = 0.0
+    for i in range(n_appends):
+        fs.append(fd, bytes([i % 256]) * APPEND_BYTES)
+        t0 = time.perf_counter()
+        fs.pread(fd, REREAD_WINDOW, 0)
+        reread_s += time.perf_counter() - t0
+    data = fs.pread(fd, n_appends * APPEND_BYTES, 0)
+    fs.close(fd)
+    ino = fs.stat("/hot")["inode"]
+    rd = cluster.kv.get("regions", region_key(ino, 0))
+    return fs, reread_s, data, len(rd.entries)
+
+
+def _hot_region(scale: Scale) -> dict:
+    n = HOT_APPENDS.get(scale.name, 1024)
+    thr = 64
+    row = {"n_appends": n, "append_bytes": APPEND_BYTES,
+           "compact_threshold": thr}
+    datas = {}
+    for key, kw in (
+            ("scalar", dict(resolved_index=False,
+                            region_compact_threshold=None)),
+            ("fast", dict(resolved_index=True,
+                          region_compact_threshold=thr))):
+        with wtf_cluster(dataclasses.replace(scale, n_servers=1),
+                         **kw) as cluster:
+            fs, reread_s, data, entries = _drive_hot_region(cluster, n)
+            datas[key] = data
+            row[key] = {
+                "reread_wall_s": reread_s,
+                "final_region_entries": entries,
+                "kv_compactions": cluster.kv.stats.compactions,
+                "kv_commits": cluster.kv.stats.commits,
+                "resolved_index_hits": fs.stats.resolved_index_hits,
+                "resolved_index_misses": fs.stats.resolved_index_misses,
+            }
+    row["speedup"] = (row["scalar"]["reread_wall_s"]
+                      / max(row["fast"]["reread_wall_s"], 1e-9))
+    s, f = row["scalar"], row["fast"]
+    print(f"[meta/hot] {n}x{APPEND_BYTES}B appends + re-reads: scalar "
+          f"{s['reread_wall_s']:.2f}s ({s['final_region_entries']} entries) "
+          f"| fast {f['reread_wall_s']:.2f}s "
+          f"({f['final_region_entries']} entries, "
+          f"{f['kv_compactions']} compactions, "
+          f"{f['resolved_index_hits']} index hits) | "
+          f"{row['speedup']:.2f}x")
+    assert datas["fast"] == datas["scalar"], \
+        "fast metadata path must read back byte-identical content"
+    assert f["kv_compactions"] > 0, \
+        "hot-region stream must trigger commit-time compactions"
+    assert f["resolved_index_hits"] > 0, \
+        "hot-region re-reads must hit the resolved index"
+    assert f["final_region_entries"] <= thr + 1, (
+        "commit-time compaction must bound the overlay list near the "
+        f"threshold: {f['final_region_entries']} entries > {thr + 1}")
+    assert s["final_region_entries"] >= n, \
+        "scalar baseline should accumulate the full overlay history"
+    return row
+
+
+# --------------------------------------------------------------- scenario 2
+def _drive_sg(cluster, k: int):
+    """Interleave two files into one backing file so /a's slices are
+    non-adjacent on disk, then vector-read all of /a's chunks."""
+    fs = cluster.client()
+    fa = fs.open("/a", "w")
+    fb = fs.open("/b", "w")
+    for i in range(k):
+        fs.pwrite(fa, bytes([i % 256]) * SG_CHUNK, i * SG_CHUNK)
+        fs.pwrite(fb, b"\xee" * SG_CHUNK, i * SG_CHUNK)
+    cluster.reset_io_stats()
+    out = fs.readv(fa, [(i * SG_CHUNK, SG_CHUNK) for i in range(k)])
+    st = cluster.total_stats()
+    rounds = sum(s["read_rounds"] for s in st["servers"].values())
+    return fs, b"".join(out), rounds, st["slices_read"]
+
+
+def _scatter_gather(scale: Scale) -> dict:
+    k = SG_CHUNKS.get(scale.name, 48)
+    row = {"n_chunks": k, "chunk_bytes": SG_CHUNK}
+    datas = {}
+    for key, on in (("scalar", False), ("sg", True)):
+        # one server + one backing file + 1-byte gap: every chunk of /a is
+        # its own coalesced run, so rounds are fully determined by the knob
+        with wtf_cluster(dataclasses.replace(scale, n_servers=1),
+                         num_backing_files=1,
+                         fetch_gap_bytes=1, scatter_gather=on) as cluster:
+            fs, data, rounds, slices = _drive_sg(cluster, k)
+            datas[key] = data
+            row[key] = {"read_rounds": rounds, "slices_read": slices,
+                        "fetch_batches": fs.stats.fetch_batches,
+                        "slices_coalesced": fs.stats.slices_coalesced}
+    print(f"[meta/sg] {k}x{fmt_bytes(SG_CHUNK)} non-adjacent read: "
+          f"{row['scalar']['read_rounds']} rounds -> "
+          f"{row['sg']['read_rounds']} with retrieve_slices "
+          f"(slices_read {row['sg']['slices_read']} both ways)")
+    assert datas["sg"] == datas["scalar"], \
+        "scatter-gather retrieval must return byte-identical content"
+    assert row["sg"]["read_rounds"] < row["scalar"]["read_rounds"], (
+        "retrieve_slices must cost strictly fewer storage rounds for a "
+        "non-adjacent multi-extent read")
+    assert row["sg"]["slices_read"] == row["scalar"]["slices_read"], \
+        "slices_read (pointer retrievals served) must not drift"
+    return row
+
+
+# --------------------------------------------------------------- scenario 3
+def _drive_group_commit(cluster, n_threads: int, n_ops: int):
+    """Concurrent auto-commit punch ops: pure metadata commits, the
+    convoy-on-stripe-locks shape group commit exists for."""
+    size = n_threads * n_ops * 2
+    setup = cluster.client()
+    fd = setup.open("/gc", "w")
+    setup.write(fd, b"\xab" * size)
+    setup.close(fd)
+    clients = [cluster.client() for _ in range(n_threads)]
+    kv0 = cluster.kv.stats.snapshot()
+
+    def work(i):
+        fs = clients[i]
+        fd = fs.open("/gc", "rw")
+        for j in range(n_ops):
+            fs.seek(fd, (i * n_ops + j) * 2)
+            fs.punch(fd, 1)          # one auto-commit metadata-only op
+        fs.close(fd)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    kv1 = cluster.kv.stats.snapshot()
+    reader = cluster.client()
+    fd = reader.open("/gc", "r")
+    data = reader.read(fd)
+    reader.close(fd)
+    return {"wall_s": wall,
+            "commits": kv1["commits"] - kv0["commits"],
+            "aborts": kv1["aborts"] - kv0["aborts"],
+            "lock_passes": (kv1["commit_lock_passes"]
+                            - kv0["commit_lock_passes"]),
+            "grouped_commits": (kv1["grouped_commits"]
+                                - kv0["grouped_commits"])}, data
+
+
+def _group_commit(scale: Scale) -> dict:
+    n_threads = GC_THREADS.get(scale.name, 8)
+    n_ops = GC_OPS.get(scale.name, 400)
+    row = {"n_threads": n_threads, "ops_per_thread": n_ops}
+    datas = {}
+    for key, on in (("scalar", False), ("grouped", True)):
+        with wtf_cluster(scale, kv_group_commit=on) as cluster:
+            row[key], datas[key] = _drive_group_commit(cluster, n_threads,
+                                                       n_ops)
+    s, g = row["scalar"], row["grouped"]
+    print(f"[meta/gc] {n_threads}x{n_ops} concurrent auto-commit ops: "
+          f"lock passes {s['lock_passes']}/{s['commits']} commits -> "
+          f"{g['lock_passes']}/{g['commits']} "
+          f"({g['grouped_commits']} grouped)")
+    assert datas["grouped"] == datas["scalar"], \
+        "group commit must not change committed content"
+    assert s["lock_passes"] == s["commits"] + s["aborts"], \
+        "without group commit every commit attempt is its own lock pass"
+    assert g["lock_passes"] < g["commits"], (
+        "concurrent auto-commit ops must share stripe-lock acquisition "
+        "passes under group commit")
+    return row
+
+
+def run(scale: Scale) -> dict:
+    out = {"scale": scale.name}
+    out["hot_region"] = _hot_region(scale)
+    out["scatter_gather"] = _scatter_gather(scale)
+    out["group_commit"] = _group_commit(scale)
+    save_result("meta_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))

@@ -28,6 +28,9 @@ BENCHES = {
                     "benchmarks.write_bench"),
     "write_behind": ("write-behind buffer (many small ops per txn)",
                      "benchmarks.write_bench", "run_smallops"),
+    "meta": ("metadata-plane fast path (commit-time compaction, "
+             "scatter-gather retrieval, KV group commit)",
+             "benchmarks.meta_bench"),
     "scaling": ("Figs 13-14 (client scaling)", "benchmarks.scaling"),
     "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
     "append": ("§2.5 (concurrent relative appends)",

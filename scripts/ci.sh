@@ -45,4 +45,13 @@ echo "== smoke: pipeline overlap (sync vs async prefetch) =="
 # leaves pipeline_overlap.json in benchmarks/results/ for CI to upload
 timeout "${PIPELINE_BENCH_TIMEOUT:-300}" python -m benchmarks.pipeline_bench smoke overlap
 
+echo "== smoke: metadata-plane fast path (compaction / scatter-gather / group commit) =="
+# asserts, with byte-identical reads in every comparison: the hot-region
+# stream triggers compactions and resolved-index hits with a bounded
+# overlay list; a non-adjacent multi-extent read costs strictly fewer
+# storage rounds with retrieve_slices on; and concurrent auto-commit ops
+# make strictly fewer KV stripe-lock acquisition passes than commits
+# under group commit.  Leaves meta_bench.json for CI to upload.
+timeout "${META_BENCH_TIMEOUT:-300}" python -m benchmarks.meta_bench smoke
+
 echo "CI OK"

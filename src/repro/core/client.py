@@ -36,14 +36,14 @@ from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET,  # noqa: F401
                              basename_of, normalize_path, parent_of)
 from .errors import StorageError
 from .handle import WtfFile  # noqa: F401  (re-export)
-from .inode import DEFAULT_REGION_SIZE
+from .inode import DEFAULT_REGION_SIZE, REGION_COMPACT_THRESHOLD
 from .iort import IoRuntime, PlanCache, run_with_failover
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
 from .wsched import DEFAULT_MAX_COALESCE, StoreRequest, WriteScheduler
 from .metadata import WarpKV
 from .posix_ops import PosixOps
 from .slice_ops import SliceOps
-from .slicing import SlicePointer
+from .slicing import ResolvedIndexCache, SlicePointer
 
 GC_DIR = "/.wtf-gc"          # reserved directory for GC live lists (§2.8)
 
@@ -93,6 +93,13 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         # invalidation story.  Per-client: validation records the same read
         # dependencies a fresh plan would.
         self._plan_cache = PlanCache()
+        # Resolved-region index (``slicing.ResolvedIndexCache``): when a
+        # hot region's overlay list grows by k extents, its resolved form
+        # is extended in O(k log n) instead of re-resolved over the whole
+        # write history.  Per-client, identity-validated (a false hit is
+        # impossible); disabled via ``Cluster(resolved_index=False)``.
+        self._rcache = (ResolvedIndexCache()
+                        if cluster.resolved_index else None)
         self.time_fn: Callable[[], int] = lambda: int(time.time())
 
 
@@ -126,7 +133,12 @@ class Cluster:
                  fetch_workers: Optional[int] = None,
                  store_coalesce_bytes: Optional[int] = None,
                  store_batching: bool = True,
-                 write_behind: bool = False):
+                 write_behind: bool = False,
+                 scatter_gather: bool = True,
+                 resolved_index: bool = True,
+                 region_compact_threshold: Optional[int] =
+                 REGION_COMPACT_THRESHOLD,
+                 kv_group_commit: bool = True):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -157,8 +169,22 @@ class Cluster:
         if fetch_workers is not None and fetch_workers < 1:
             raise ValueError(
                 f"fetch_workers must be >= 1, got {fetch_workers}")
+        if region_compact_threshold is not None \
+                and region_compact_threshold < 2:
+            raise ValueError(
+                f"region_compact_threshold must be >= 2 (or None to "
+                f"disable), got {region_compact_threshold}")
 
-        self.kv = WarpKV()
+        self.kv = WarpKV(group_commit=kv_group_commit)
+        # Metadata-plane fast-path knobs (all default on; each has an off
+        # position so benchmarks/tests can compare like for like):
+        #   scatter_gather — one retrieve_slices round per (server,
+        #     backing file) fetch group instead of one per coalesced run;
+        #   resolved_index — per-client delta-maintained region overlays;
+        #   region_compact_threshold — commit-time CompactRegion trigger.
+        self.scatter_gather = scatter_gather
+        self.resolved_index = resolved_index
+        self.region_compact_threshold = region_compact_threshold
         self.region_size = region_size
         self.replication = replication
         self.coordinator = ReplicatedCoordinator(coordinator_replicas)

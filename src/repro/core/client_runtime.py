@@ -49,7 +49,7 @@ class _Fd:
         return _Fd(*t)
 
 
-@dataclass
+@dataclass(slots=True)
 class ClientStats(AtomicStatsMixin):
     """Logical I/O accounting as seen by this client (drives Table 2).
 
@@ -74,6 +74,11 @@ class ClientStats(AtomicStatsMixin):
     ``plan_cache_hits``/``plan_cache_misses`` (read plans served from /
     installed into the version-validated plan cache).
 
+    The metadata-plane fast path adds ``resolved_index_hits`` /
+    ``resolved_index_misses``: region overlay resolutions served by the
+    delta-maintained resolved index (an O(delta) extension of a cached
+    resolved form) vs. full ``overlay`` re-resolutions installed into it.
+
     Counters may be bumped from runtime pool threads concurrently with the
     application thread; all mutation goes through ``add`` (atomic, from
     ``iort.AtomicStatsMixin``) — a bare ``+=`` would drop updates.
@@ -97,12 +102,16 @@ class ClientStats(AtomicStatsMixin):
     blocked_waits: int = 0           # data-plane waits the app blocked on
     plan_cache_hits: int = 0         # read plans served from the plan cache
     plan_cache_misses: int = 0       # read plans installed into the cache
+    resolved_index_hits: int = 0     # overlays served by delta extension
+    resolved_index_misses: int = 0   # overlays fully re-resolved + cached
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False, compare=False)
 
 
 class _Ctx:
     """Execution context: one WarpKV transaction + replay bookkeeping."""
+
+    __slots__ = ("txn", "first")
 
     def __init__(self, txn: Transaction, first: bool):
         self.txn = txn

@@ -54,6 +54,15 @@ class GarbageCollector:
             entries = decode_extents(raw) + entries
         before = len(entries)
         compacted = compact(entries)
+        if (rd.indirect is None and tuple(compacted) == rd.entries
+                and len(compacted) <= self.spill_threshold):
+            # Already minimal — the common case now that writers piggyback
+            # commit-time compaction (``inode.CompactRegion``).  Rewriting
+            # it anyway would bump the region version and spuriously
+            # invalidate concurrent readers' plans/read sets for a no-op.
+            txn.abort()
+            return {"skipped": False, "noop": True, "before": before,
+                    "after": len(compacted), "spilled": False}
         if len(compacted) > self.spill_threshold:
             # Tier 2: spill the compacted list into a slice; the region
             # keeps a single indirect pointer (§2.8).
@@ -78,10 +87,13 @@ class GarbageCollector:
 
     def compact_all(self) -> dict:
         stats = {"regions": 0, "entries_before": 0, "entries_after": 0,
-                 "spilled": 0}
+                 "spilled": 0, "noop": 0}
         for key in self.cluster.kv.keys("regions"):
             inode_id, region_idx = key
             r = self.compact_region(inode_id, region_idx)
+            if r.get("noop"):
+                stats["noop"] += 1
+                continue
             if r.get("skipped"):
                 continue
             stats["regions"] += 1

@@ -22,9 +22,15 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from .metadata import CommutingOp
-from .slicing import Extent, visible_length
+from .slicing import Extent, compact, visible_length
 
 DEFAULT_REGION_SIZE = 64 * 1024 * 1024   # 64 MB, matching the evaluation §4
+
+# Overlay-list length at which writers piggyback a commit-time compaction
+# (``CompactRegion``) onto their transaction.  Large enough that explicit
+# GC tier-1 passes (and the tests driving them) still see uncompacted
+# history below it; small enough to bound hot-region planning cost.
+REGION_COMPACT_THRESHOLD = 64
 
 
 @dataclass(frozen=True, slots=True)
@@ -70,6 +76,8 @@ class AppendExtents(CommutingOp):
     abort each other.
     """
 
+    __slots__ = ("extents", "relative", "bound", "total")
+
     def __init__(self, extents, relative: bool = False,
                  bound: Optional[int] = None):
         self.extents = tuple(extents)
@@ -110,6 +118,50 @@ class AppendExtents(CommutingOp):
                              relative=self.relative, bound=self.bound)
 
 
+class CompactRegion(CommutingOp):
+    """Commit-time, threshold-triggered incremental compaction (§2.8 tier 1
+    moved onto the commit path).
+
+    Writers piggyback this op when a region's overlay list outgrows the
+    cluster threshold, so hot regions never accumulate unbounded history
+    between explicit GC passes.  The §2.5 append contract is preserved on
+    both sides:
+
+      * no read dependency, no precondition — a compaction can never make
+        two transactions conflict;
+      * ``version_preserving``: the compacted list reconstructs byte-
+        identical content (``compact`` only drops obscured extents and
+        merges disk-adjacent ones), so WarpKV keeps the region's version
+        unchanged when applying it.  Readers holding a read dependency or
+        a cached plan against the pre-compaction value stay valid — their
+        plans reference only visible byte ranges, all of which the
+        compacted pointers still cover — and are NOT spuriously aborted.
+
+    Slices referenced only by dropped (obscured) extents become garbage
+    for the tier-3 collector; the two-consecutive-scans rule in
+    ``StorageServer.gc_pass`` already covers the handoff.
+
+    Below the threshold (or on a wiped region) the op is a no-op and —
+    per WarpKV's no-op-merge rule — bumps nothing at all.
+    """
+
+    version_preserving = True
+    __slots__ = ("threshold",)
+
+    def __init__(self, threshold: int):
+        self.threshold = threshold
+
+    def apply(self, value):
+        rd = value
+        if rd is None or len(rd.entries) < self.threshold:
+            return value, 0
+        compacted = tuple(compact(rd.entries))
+        if compacted == rd.entries:
+            return value, 0
+        return (RegionData(compacted, rd.end, rd.indirect),
+                len(rd.entries) - len(compacted))
+
+
 class ClearRegion(CommutingOp):
     """Commit-time region wipe (truncate-to-zero).
 
@@ -121,6 +173,8 @@ class ClearRegion(CommutingOp):
     same tombstone a delete leaves.
     """
 
+    __slots__ = ()
+
     def apply(self, value):
         return None, None
 
@@ -129,6 +183,8 @@ class ResetInode(CommutingOp):
     """Truncate-to-zero's inode half: reset ``max_region`` in queue order
     (earlier in-txn bumps are cancelled, later ones re-raise it), merging
     ``mtime`` and leaving the link count untouched."""
+
+    __slots__ = ("mtime",)
 
     def __init__(self, mtime: int):
         self.mtime = mtime
@@ -151,6 +207,8 @@ class BumpInode(CommutingOp):
     invalidate concurrent readers of the inode — this is what keeps parallel
     appends conflict-free end to end.
     """
+
+    __slots__ = ("max_region", "mtime", "link_delta")
 
     def __init__(self, max_region: Optional[int] = None,
                  mtime: Optional[int] = None,

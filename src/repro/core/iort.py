@@ -82,7 +82,13 @@ class AtomicStatsMixin:
     (concurrent rounds) concurrently with the application thread; a bare
     ``+=`` on an attribute is a read-modify-write race.  All mutation goes
     through ``add``; ``snapshot`` reads under the same lock.
+
+    Declares empty ``__slots__`` and reads fields via dataclass
+    introspection so the (heavily-instantiated, hot-path) stats
+    dataclasses can opt into ``slots=True`` without growing a ``__dict__``.
     """
+
+    __slots__ = ()
 
     def add(self, **deltas: int) -> None:
         with self._stats_lock:
@@ -90,9 +96,12 @@ class AtomicStatsMixin:
                 setattr(self, name, getattr(self, name) + delta)
 
     def snapshot(self) -> dict:
+        import dataclasses as _dc
+
         with self._stats_lock:
-            return {k: v for k, v in self.__dict__.items()
-                    if not k.startswith("_")}
+            return {f.name: getattr(self, f.name)
+                    for f in _dc.fields(self)
+                    if not f.name.startswith("_")}
 
 
 class IoTask:

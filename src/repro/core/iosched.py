@@ -14,7 +14,13 @@ actually come from:
      typically needs one round per (server, backing-file) run rather than N.
      The threshold is sized by the runtime's adaptive cost model (the bytes
      one round-trip is worth) unless ``Cluster(fetch_gap_bytes=…)`` pins it.
-  2. **Fan-out.**  Batches destined for different servers are issued as
+  2. **Scatter-gather.**  Coalesced batches that share a (server, backing
+     file) but sit beyond the gap threshold travel together as ONE
+     ``StorageServer.retrieve_slices`` round (zero-copy ``memoryview``s,
+     no gap bytes read) — the read-side mirror of the write scheduler's
+     one-``create_slices``-per-group rule.  ``Cluster(scatter_gather=
+     False)`` reverts to one round per coalesced run.
+  3. **Fan-out.**  Batches destined for different servers are issued as
      ``IoTask``s on the shared ``IoRuntime`` pool, so a read striped over
      the cluster completes in one server's latency, not the sum.
 
@@ -31,10 +37,10 @@ dereferences saved) — the measurable effectiveness of the scheduler.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 from .errors import StorageError
-from .iort import IoTask
+from .iort import IoTask, run_with_failover
 from .slicing import Extent, SlicePointer
 
 # Historical fixed gap threshold, kept as the adaptive model's seed and as
@@ -64,6 +70,25 @@ class _FetchBatch:
     def covering(self) -> SlicePointer:
         return SlicePointer(self.server_id, self.backing_file, self.start,
                             self.end - self.start)
+
+
+class _SGGroup:
+    """One scatter-gather round: several coalesced batches that share a
+    (server, backing file) but sit too far apart to gap-coalesce.  The
+    whole group is served by ONE ``retrieve_slices`` round carrying each
+    batch's covering pointer — no gap bytes between batches are read."""
+
+    __slots__ = ("server_id", "backing_file", "batches")
+
+    def __init__(self, server_id: int, backing_file: str,
+                 batches: List[_FetchBatch]):
+        self.server_id = server_id
+        self.backing_file = backing_file
+        self.batches = batches
+
+    @property
+    def nbytes(self) -> int:
+        return sum(b.end - b.start for b in self.batches)
 
 
 def plan_batches(tagged: Sequence[tuple],
@@ -138,10 +163,11 @@ class SliceScheduler:
                 else:
                     tagged.append((pi, ci, e, self._pick_replica(e.ptrs)))
 
-        batches = plan_batches(tagged, self.max_gap)
-        tasks = [IoTask("fetch", b.server_id, b.end - b.start, b)
-                 for b in batches]
-        results = self.runtime.run_tasks(tasks, self._run_batch)
+        units = self._plan_units(plan_batches(tagged, self.max_gap))
+        tasks = [IoTask("fetch", u.server_id, u.nbytes
+                        if isinstance(u, _SGGroup) else u.end - u.start, u)
+                 for u in units]
+        results = self.runtime.run_tasks(tasks, self._run_unit)
 
         rounds = physical = 0
         for parts, n_rounds, n_bytes in results:
@@ -159,6 +185,75 @@ class SliceScheduler:
         return self.fetch_many([extents], stats=stats)[0]
 
     # ----------------------------------------------------------- internals
+    def _plan_units(self, batches: List[_FetchBatch]) -> List[Any]:
+        """Fold coalesced batches into scatter-gather rounds.
+
+        Gap coalescing (``plan_batches``) merges runs closer than the gap
+        threshold; batches beyond it on the SAME (server, backing file)
+        used to each cost their own round.  With ``Cluster(scatter_gather)``
+        on (the default), those batches travel together as one
+        ``retrieve_slices`` round instead — the read-side mirror of the
+        write scheduler's one-``create_slices``-per-(group, replica) rule.
+        ``plan_batches`` sorts by (server, file, offset), so same-location
+        batches are adjacent here.
+        """
+        if not getattr(self.cluster, "scatter_gather", True) \
+                or len(batches) < 2:
+            return list(batches)
+        units: List[Any] = []
+        run: List[_FetchBatch] = []
+
+        def flush() -> None:
+            if len(run) == 1:
+                units.append(run[0])
+            elif run:
+                units.append(_SGGroup(run[0].server_id,
+                                      run[0].backing_file, list(run)))
+            run.clear()
+
+        for b in batches:
+            if run and (run[0].server_id, run[0].backing_file) != \
+                    (b.server_id, b.backing_file):
+                flush()
+            run.append(b)
+        flush()
+        return units
+
+    def _run_unit(self, task: IoTask) -> tuple:
+        unit = task.payload
+        if isinstance(unit, _SGGroup):
+            return self._run_sg(unit)
+        return self._run_batch_payload(unit)
+
+    def _run_sg(self, group: _SGGroup) -> tuple:
+        """Issue one scatter-gather round; degrade to per-batch (and then
+        per-extent, §2.9) retrieval when the server refuses it."""
+        ptrs = [b.covering for b in group.batches]
+        try:
+            blobs = run_with_failover(
+                self.cluster, [(group.server_id, ptrs)],
+                lambda srv, ps: srv.retrieve_slices(ps))
+        except StorageError:
+            # The chosen server died (or cannot serve the round) between
+            # planning and execution: every batch walks the normal
+            # covering/per-extent failover path instead.
+            parts: List[tuple] = []
+            rounds = physical = 0
+            for b in group.batches:
+                p, r, nb = self._run_batch_payload(b)
+                parts.extend(p)
+                rounds += r
+                physical += nb
+            return (parts, rounds, physical)
+        out: List[tuple] = []
+        total = 0
+        for b, blob in zip(group.batches, blobs):
+            total += len(blob)
+            for pi, ci, e, ptr in b.parts:
+                lo = ptr.offset - b.start
+                out.append((pi, ci, blob[lo:lo + ptr.length]))
+        return (out, 1, total)
+
     def _pick_replica(self, ptrs: Tuple[SlicePointer, ...]) -> SlicePointer:
         """Prefer a replica on a live server so coalescing groups fetches
         onto servers that can actually answer them."""
@@ -168,9 +263,8 @@ class SliceScheduler:
                 return p
         return ptrs[0]
 
-    def _run_batch(self, task: IoTask) -> tuple:
+    def _run_batch_payload(self, batch: _FetchBatch) -> tuple:
         """Issue one batch; returns (parts, rounds, physical_bytes)."""
-        batch: _FetchBatch = task.payload
         if len(batch.parts) == 1:
             pi, ci, e, ptr = batch.parts[0]
             return ([(pi, ci, self.cluster.fetch_slice(e.ptrs))], 1, e.length)

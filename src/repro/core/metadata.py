@@ -24,14 +24,39 @@ WarpKV reproduces exactly that contract in-process:
 Commit protocol: stripe locks are acquired in canonical order (no deadlock),
 read versions validated, preconditions checked, writes applied, versions
 bumped.  This yields strict serializability for the in-process setting.
-A write-ahead log of committed mutations supports the replication veneer in
-``replication.py``.
+
+**Group commit.**  Under concurrent auto-commit traffic the stripe-lock
+acquisition pass itself becomes the convoy: every committer sorts and takes
+its stripe locks one at a time while the rest pile up behind them.  With
+``group_commit`` (default on), committers enqueue and the first one through
+the commit mutex drains the queue as the *leader*: one sorted acquisition
+pass over the union of the batch's stripes, then each transaction's
+validate/stage/apply runs sequentially under those locks.  Sequential
+application preserves the exact single-commit semantics (a batch-mate that
+invalidates your read set aborts you precisely as a prior commit would
+have), and failures are isolated per transaction.  ``KVStats`` records
+``commit_lock_passes`` (sorted acquisition passes actually made) and
+``grouped_commits`` (transactions that rode a leader's pass) — the
+measurable win.
+
+**Version-preserving commutes.**  A commutative op may declare
+``version_preserving = True`` (see ``inode.CompactRegion``): when its
+commit-time application changes the stored value while provably preserving
+the bytes any reader can observe, WarpKV keeps the key's version unchanged.
+Readers' recorded versions — and the plan cache validated against them —
+stay valid; a metadata-shape-only rewrite never aborts anyone.
+
+A bounded write-ahead log of committed mutations supports replication
+veneers: a compacted latest-value-per-key snapshot plus a tail ring of the
+most recent ``WAL_TAIL_MAX`` mutations, so a long-running cluster's WAL
+memory is O(keyspace + tail), not O(history).
 """
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Iterable, List, Optional
 
 from .errors import KVConflict, PreconditionFailed
 from .iort import AtomicStatsMixin
@@ -39,7 +64,7 @@ from .iort import AtomicStatsMixin
 _TOMBSTONE = object()
 
 
-@dataclass
+@dataclass(slots=True)
 class _Versioned:
     version: int
     value: Any
@@ -53,7 +78,17 @@ class CommutingOp:
     veto at commit time (→ ``PreconditionFailed``, the transaction as a whole
     aborts and the WTF retry layer takes over).  Ops must be pure so commit
     retries/replays are safe.
+
+    ``version_preserving = True`` declares that this op's value changes
+    preserve every byte a reader can observe (e.g. region compaction):
+    WarpKV then applies the change WITHOUT bumping the key's version, so
+    recorded read dependencies and version-validated plan caches survive.
+    Only set it when that property genuinely holds — a version-preserving
+    op that changes observable content would break serializability.
     """
+
+    version_preserving = False
+    __slots__ = ()
 
     def precondition(self, value: Any) -> bool:  # pragma: no cover - default
         return True
@@ -64,6 +99,8 @@ class CommutingOp:
 
 class ListAppend(CommutingOp):
     """Generic atomic list append (the HyperDex primitive WTF relies on)."""
+
+    __slots__ = ("items",)
 
     def __init__(self, items: Iterable[Any]):
         self.items = list(items)
@@ -76,6 +113,9 @@ class ListAppend(CommutingOp):
 
 class Transaction:
     """One optimistic multi-key transaction."""
+
+    __slots__ = ("_kv", "_reads", "_writes", "_commutes",
+                 "_commutes_by_key", "committed")
 
     def __init__(self, kv: "WarpKV"):
         self._kv = kv
@@ -204,6 +244,8 @@ class Transaction:
 class _Deferred:
     """Result of a commutative op, available after commit."""
 
+    __slots__ = ("_cell",)
+
     def __init__(self, cell: list):
         self._cell = cell
 
@@ -214,34 +256,73 @@ class _Deferred:
         return self._cell[0]
 
 
-@dataclass
+@dataclass(slots=True)
 class KVStats(AtomicStatsMixin):
     """Counters bumped from the app thread AND runtime pool workers (async
     op bodies run their own KV transactions); mutation goes through the
-    atomic ``add`` like the client/storage stats."""
+    atomic ``add`` like the client/storage stats.
+
+    ``commit_lock_passes`` counts sorted stripe-lock acquisition passes
+    actually made; with group commit, concurrently-arriving transactions
+    share a pass, so ``commits - commit_lock_passes`` (≈ ``grouped_commits``)
+    is the number of acquisition passes the batching saved.
+    ``compactions`` counts version-preserving commutes that actually
+    rewrote a value (commit-time region compactions applied).
+    """
 
     commits: int = 0
     aborts: int = 0
     gets: int = 0
     puts: int = 0
     commutes: int = 0
+    compactions: int = 0             # version-preserving rewrites applied
+    commit_lock_passes: int = 0      # stripe-lock acquisition passes made
+    grouped_commits: int = 0         # txns that shared a leader's pass
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False, compare=False)
+
+
+class _CommitReq:
+    """One queued commit: its transaction, outcome slot, and done flag.
+
+    ``done``/``exc`` are written by the leader while it holds the commit
+    mutex and read by the owner after acquiring the same mutex — the mutex
+    is the memory barrier."""
+
+    __slots__ = ("txn", "exc", "done")
+
+    def __init__(self, txn: Transaction):
+        self.txn = txn
+        self.exc: Optional[BaseException] = None
+        self.done = False
 
 
 class WarpKV:
     """Striped, versioned, optimistically-concurrent in-process KV store."""
 
     N_STRIPES = 64
+    # WAL tail ring capacity: older mutations fold into the compacted
+    # latest-value-per-key snapshot (see the module docstring).
+    WAL_TAIL_MAX = 4096
 
-    def __init__(self):
+    def __init__(self, group_commit: bool = True):
         self._spaces: dict[str, dict[Any, _Versioned]] = {}
         self._space_lock = threading.Lock()
         self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
         self.stats = KVStats()
-        # Write-ahead log of committed mutations for chain replication.
-        self._wal: list[tuple[str, Any, Any, int]] = []
-        self._wal_lock = threading.Lock()
+        self.group_commit = group_commit
+        self._commit_queue: List[_CommitReq] = []
+        self._commit_queue_lock = threading.Lock()
+        self._commit_mutex = threading.Lock()
+        self._leader_thread: Optional[int] = None
+        # Bounded write-ahead log of committed mutations for chain
+        # replication: compacted snapshot + recent-mutation tail ring.
+        self._wal_tail: "deque[tuple[str, Any, Any, int]]" = deque()
+        self._wal_snapshot: dict[tuple[str, Any], tuple[Any, int]] = {}
+        # RLock: listeners run under this lock, and a listener that
+        # commits re-enters ``_log`` on the same thread (the reentrant
+        # commit path the ``_leader_thread`` guard permits).
+        self._wal_lock = threading.RLock()
         self._wal_listeners: list[Callable[[str, Any, Any, int], None]] = []
         self._fail_next_commits = 0   # test hook: forced HyperDex-level abort
 
@@ -286,87 +367,168 @@ class WarpKV:
         return Transaction(self)
 
     def _commit(self, txn: Transaction) -> None:
-        touched = set(txn._reads) | set(txn._writes) | {
-            (s, k) for s, k, _, _ in txn._commutes
-        }
+        req = _CommitReq(txn)
+        if not self.group_commit \
+                or self._leader_thread == threading.get_ident():
+            # Group commit off — or a re-entrant commit from inside a
+            # batch (a WAL listener committing): the stripe RLocks are
+            # reentrant, the commit mutex is not, so commit directly.
+            self._commit_batch([req])
+            if req.exc is not None:
+                raise req.exc
+            return
+        # Group commit (leader/follower): enqueue, then pass through the
+        # commit mutex.  Whoever holds it drains the queue and commits the
+        # whole batch under ONE sorted stripe-lock acquisition pass;
+        # committers that arrive while a leader is working pile up behind
+        # the mutex and the first one through leads the next batch.
+        with self._commit_queue_lock:
+            self._commit_queue.append(req)
+        with self._commit_mutex:
+            if not req.done:
+                with self._commit_queue_lock:
+                    batch = self._commit_queue
+                    self._commit_queue = []
+                if batch:
+                    self._leader_thread = threading.get_ident()
+                    try:
+                        self._commit_batch(batch)
+                    finally:
+                        self._leader_thread = None
+        if req.exc is not None:
+            raise req.exc
+
+    def _commit_batch(self, reqs: List[_CommitReq]) -> None:
+        """Commit a batch under one stripe-lock pass (union of all stripes).
+
+        Transactions are validated and applied *sequentially*, so the
+        outcome is identical to committing them back-to-back: a batch-mate
+        that invalidates your read set aborts you exactly as a prior
+        commit would have.  Failures are isolated per transaction — each
+        request carries its own exception back to its waiting committer.
+        """
+        touched: set[tuple[str, Any]] = set()
+        for req in reqs:
+            t = req.txn
+            touched |= set(t._reads) | set(t._writes)
+            touched |= {(s, k) for s, k, _, _ in t._commutes}
         stripe_ids = sorted({self._stripe_of(s, k) for s, k in touched})
+        self.stats.add(commit_lock_passes=1,
+                       grouped_commits=len(reqs) - 1)
         for sid in stripe_ids:
             self._stripes[sid].acquire()
         try:
-            if self._fail_next_commits > 0:
-                self._fail_next_commits -= 1
-                self.stats.add(aborts=1)
-                raise KVConflict("injected abort")
-            # 1. validate read versions (optimistic concurrency control)
-            for (space, key), seen in txn._reads.items():
-                ent = self._space(space).get(key)
-                cur = ent.version if ent is not None else 0
-                if cur != seen:
-                    self.stats.add(aborts=1)
-                    raise KVConflict(
-                        f"version conflict on {space}:{key!r} "
-                        f"(saw {seen}, now {cur})")
-            # 2. check commutative preconditions + compute results against
-            # the post-write view (this txn's buffered writes included, and
-            # earlier commutes on the same key chained in queue order)
-            view: dict[tuple[str, Any], Any] = {}
-            for (space, key), value in txn._writes.items():
-                view[(space, key)] = None if value is _TOMBSTONE else value
-            staged: list[tuple[str, Any, Any, Any, list]] = []
-            for space, key, op, cell in txn._commutes:
-                sk = (space, key)
-                if sk in view:
-                    cur = view[sk]
-                else:
-                    ent = self._space(space).get(key)
-                    cur = ent.value if ent is not None else None
-                if not op.precondition(cur):
-                    self.stats.add(aborts=1)
-                    raise PreconditionFailed(
-                        f"precondition failed on {space}:{key!r}")
-                new, result = op.apply(cur)
-                view[sk] = new
-                staged.append((space, key, new, result, cell))
-            # 3. apply buffered writes.  Deletes keep a versioned tombstone
-            # (value None) so a delete+recreate can never satisfy a stale
-            # reader's version check (no ABA).
-            for (space, key), value in txn._writes.items():
-                sp = self._space(space)
-                ent = sp.get(key)
-                ver = (ent.version if ent is not None else 0) + 1
-                stored = None if value is _TOMBSTONE else value
-                sp[key] = _Versioned(ver, stored)
-                self._log(space, key, stored, ver)
-                self.stats.add(puts=1)
-            # 4. apply commutative results; bump version only on real change
-            for space, key, new, result, cell in staged:
-                sp = self._space(space)
-                ent = sp.get(key)
-                if ent is not None and ent.value == new:
-                    pass                      # no-op merge: no invalidation
-                else:
-                    ver = (ent.version if ent is not None else 0) + 1
-                    sp[key] = _Versioned(ver, new)
-                    self._log(space, key, new, ver)
-                cell.append(result)
-                self.stats.add(commutes=1)
-            self.stats.add(commits=1)
+            for req in reqs:
+                try:
+                    self._apply_txn_locked(req.txn)
+                except Exception as e:
+                    req.exc = e
+                finally:
+                    req.done = True
         finally:
             for sid in reversed(stripe_ids):
                 self._stripes[sid].release()
+            for req in reqs:         # a leader crash must strand no one
+                if not req.done:
+                    req.exc = KVConflict("commit batch aborted")
+                    req.done = True
+
+    def _apply_txn_locked(self, txn: Transaction) -> None:
+        """Validate and apply one transaction; caller holds its stripes."""
+        if self._fail_next_commits > 0:
+            self._fail_next_commits -= 1
+            self.stats.add(aborts=1)
+            raise KVConflict("injected abort")
+        # 1. validate read versions (optimistic concurrency control)
+        for (space, key), seen in txn._reads.items():
+            ent = self._space(space).get(key)
+            cur = ent.version if ent is not None else 0
+            if cur != seen:
+                self.stats.add(aborts=1)
+                raise KVConflict(
+                    f"version conflict on {space}:{key!r} "
+                    f"(saw {seen}, now {cur})")
+        # 2. check commutative preconditions + compute results against
+        # the post-write view (this txn's buffered writes included, and
+        # earlier commutes on the same key chained in queue order)
+        view: dict[tuple[str, Any], Any] = {}
+        for (space, key), value in txn._writes.items():
+            view[(space, key)] = None if value is _TOMBSTONE else value
+        staged: list[tuple[str, Any, Any, Any, CommutingOp, list]] = []
+        for space, key, op, cell in txn._commutes:
+            sk = (space, key)
+            if sk in view:
+                cur = view[sk]
+            else:
+                ent = self._space(space).get(key)
+                cur = ent.value if ent is not None else None
+            if not op.precondition(cur):
+                self.stats.add(aborts=1)
+                raise PreconditionFailed(
+                    f"precondition failed on {space}:{key!r}")
+            new, result = op.apply(cur)
+            view[sk] = new
+            staged.append((space, key, new, result, op, cell))
+        # 3. apply buffered writes.  Deletes keep a versioned tombstone
+        # (value None) so a delete+recreate can never satisfy a stale
+        # reader's version check (no ABA).
+        for (space, key), value in txn._writes.items():
+            sp = self._space(space)
+            ent = sp.get(key)
+            ver = (ent.version if ent is not None else 0) + 1
+            stored = None if value is _TOMBSTONE else value
+            sp[key] = _Versioned(ver, stored)
+            self._log(space, key, stored, ver)
+            self.stats.add(puts=1)
+        # 4. apply commutative results; bump version only on real change,
+        # and not at all for a version-preserving rewrite (compaction):
+        # the bytes any reader can observe are unchanged, so recorded
+        # read dependencies and cached plans must stay valid.
+        for space, key, new, result, op, cell in staged:
+            sp = self._space(space)
+            ent = sp.get(key)
+            if ent is not None and ent.value == new:
+                pass                      # no-op merge: no invalidation
+            elif op.version_preserving and ent is not None:
+                sp[key] = _Versioned(ent.version, new)
+                self._log(space, key, new, ent.version)
+                self.stats.add(compactions=1)
+            else:
+                ver = (ent.version if ent is not None else 0) + 1
+                sp[key] = _Versioned(ver, new)
+                self._log(space, key, new, ver)
+            cell.append(result)
+            self.stats.add(commutes=1)
+        self.stats.add(commits=1)
 
     # -- replication hooks ---------------------------------------------------
     def _log(self, space: str, key: Any, value: Any, version: int) -> None:
         with self._wal_lock:
-            self._wal.append((space, key, value, version))
+            self._wal_tail.append((space, key, value, version))
+            while len(self._wal_tail) > self.WAL_TAIL_MAX:
+                s, k, v, ver = self._wal_tail.popleft()
+                self._wal_snapshot[(s, k)] = (v, ver)
             for fn in self._wal_listeners:
                 fn(space, key, value, version)
 
     def subscribe(self, fn: Callable[[str, Any, Any, int], None]) -> None:
+        """Replay the WAL into ``fn`` and register it for future commits.
+
+        Replay is the compacted snapshot (latest folded value per key)
+        followed by the tail ring, so a late subscriber converges on the
+        exact current state in O(keyspace + tail) calls — not O(history).
+        """
         with self._wal_lock:
-            for space, key, value, version in self._wal:
+            for (space, key), (value, version) in self._wal_snapshot.items():
+                fn(space, key, value, version)
+            for space, key, value, version in self._wal_tail:
                 fn(space, key, value, version)
             self._wal_listeners.append(fn)
+
+    def wal_entries(self) -> int:
+        """Retained WAL size (snapshot keys + tail ring), for tests."""
+        with self._wal_lock:
+            return len(self._wal_snapshot) + len(self._wal_tail)
 
     # -- test hooks -----------------------------------------------------------
     def inject_aborts(self, n: int = 1) -> None:

@@ -553,8 +553,11 @@ class PosixOps:
                     key: str = "d") -> None:
         data = jsonio.dumps(record) + b"\n"
         full = self._data_slice(ctx, op, dir_ino, 0, data, key=key)
-        ctx.txn.commute(
-            "regions", region_key(dir_ino.inode_id, 0),
+        # routes through the compaction-aware append: a busy directory's
+        # record log is exactly the hot-region small-append stream the
+        # commit-time compaction threshold exists to bound
+        self._commute_region_append(
+            ctx, dir_ino.inode_id, 0,
             AppendExtents([Extent(0, len(data), full.ptrs)],
                           relative=True, bound=dir_ino.region_size))
         self._bump(ctx, dir_ino.inode_id, op, max_region=0)

@@ -26,11 +26,11 @@ from typing import List, Optional, Sequence, Tuple
 from .client_runtime import _Ctx, _Op
 from .errors import (InvalidOffset, KVConflict, NotFound,
                      PreconditionFailed, TransactionAborted, WtfError)
-from .inode import (AppendExtents, BumpInode, ClearRegion, Inode, RegionData,
-                    ResetInode, region_key)
+from .inode import (AppendExtents, BumpInode, ClearRegion, CompactRegion,
+                    Inode, RegionData, ResetInode, region_key)
 from .placement import region_placement_key, stable_hash
 from .slicing import (Extent, decode_extents, merge_adjacent, overlay_cached,
-                      shift, slice_range, slice_resolved, split_by_regions)
+                      shift, slice_resolved, split_by_regions)
 from .wbuf import (extent_is_pending, extent_is_resolved,
                    pending_extent_bytes, resolve_extent)
 from .wsched import StoreRequest
@@ -152,8 +152,8 @@ class SliceOps:
         max_r = -1
         for r, rel, _, ln in split_by_regions(f.offset, amount,
                                               ino.region_size):
-            ctx.txn.commute("regions", region_key(ino.inode_id, r),
-                            AppendExtents([Extent(rel, ln, ())]))
+            self._commute_region_append(ctx, ino.inode_id, r,
+                                        AppendExtents([Extent(rel, ln, ())]))
             max_r = max(max_r, r)
         self._bump(ctx, ino.inode_id, op, max_region=max_r)
         f.offset += amount
@@ -172,8 +172,8 @@ class SliceOps:
             # the region's end at commit time, so concurrent appends all
             # commit without conflicting.
             full = self._data_slice(ctx, op, ino, last, data, key="a")
-            ctx.txn.commute(
-                "regions", region_key(ino.inode_id, last),
+            self._commute_region_append(
+                ctx, ino.inode_id, last,
                 AppendExtents([Extent(0, len(data), full.ptrs)],
                               relative=True, bound=ino.region_size))
             self._bump(ctx, ino.inode_id, op, max_region=last)
@@ -227,6 +227,48 @@ class SliceOps:
             raise NotFound(path)
         return self._inode(ctx, ino_id)
 
+    def _commute_region_append(self, ctx: _Ctx, inode_id: int, region: int,
+                               append_op: AppendExtents) -> None:
+        """Queue a region-list append, piggybacking a commit-time compaction
+        (``CompactRegion``) when the overlay list has outgrown the cluster
+        threshold.
+
+        The length check is an unvalidated snapshot read plus a count of
+        this transaction's queued extents — it records NO read dependency
+        and, unlike ``peek``, never materializes the queued view (a
+        multi-op transaction hammering one region would otherwise re-apply
+        its whole commute chain per call).  Triggering (or not) can never
+        make appends conflict (§2.5), and the op re-checks the threshold
+        at commit time, so a stale estimate only costs a no-op.  One
+        compaction per (transaction, region) is enough: it runs at its
+        queue position and the threshold keeps post-compaction growth
+        bounded until the next committing writer."""
+        txn = ctx.txn
+        rk = region_key(inode_id, region)
+        txn.commute("regions", rk, append_op)
+        thr = self.cluster.region_compact_threshold
+        if thr is None:
+            return
+        queued = 0
+        for entry in txn._commutes_by_key.get(("regions", rk), ()):
+            cop = entry[2]
+            if isinstance(cop, CompactRegion):
+                return                       # one per (txn, region)
+            if isinstance(cop, AppendExtents):
+                queued += len(cop.extents)
+            elif isinstance(cop, ClearRegion):
+                queued = 0
+        sk = ("regions", rk)
+        if sk in txn._writes:                # rare (GC-style raw put)
+            rd = txn.peek("regions", rk)
+            base = len(rd.entries) if rd is not None else 0
+            queued = 0                       # peek already applied the queue
+        else:
+            _, val = self.kv._read_versioned("regions", rk)
+            base = len(val.entries) if val is not None else 0
+        if base + queued >= thr:
+            txn.commute("regions", rk, CompactRegion(thr))
+
     def _bump(self, ctx: _Ctx, inode_id: int, op: _Op,
               max_region: Optional[int] = None) -> None:
         now = op.artifacts.setdefault("mtime", self.time_fn())
@@ -255,14 +297,40 @@ class SliceOps:
         base = decode_extents(self._fetch([rd.indirect]))
         return tuple(base) + tuple(rd.entries)
 
+    def _resolve_region(self, ctx: _Ctx, ino: Inode,
+                        region_idx: int) -> Sequence[Extent]:
+        """Resolved overlay of one region, via the client's delta-maintained
+        resolved index (``slicing.ResolvedIndexCache``) when available.
+
+        Region lists only grow between compactions and WarpKV appends
+        extend the stored tuple in place, so a hot region's re-read costs
+        O(appended delta) instead of O(full write history).  Any wholesale
+        replacement (compaction, truncate, GC) fails the cache's identity
+        check and re-resolves; entries carrying write-behind pending
+        placeholders bypass the index entirely.
+
+        Tier-2 spilled regions (§2.8 ``indirect``) rebuild their entry
+        tuple from freshly-decoded extents on every read, so the identity
+        check could never hit — they stay on ``overlay_cached``, whose
+        equality-based memoization serves them in one tuple hash."""
+        rd = ctx.txn.get_view("regions",
+                              region_key(ino.inode_id, region_idx))
+        if rd is None:
+            return ()
+        cache = self._rcache
+        if rd.indirect is not None or cache is None \
+                or not isinstance(rd.entries, tuple):
+            return overlay_cached(self._region_entries(ctx, ino, region_idx))
+        return cache.resolve((ino.inode_id, region_idx), rd.entries,
+                             stats=self.stats)
+
     def _plan_range(self, ctx: _Ctx, ino: Inode, offset: int,
                     length: int) -> list[Extent]:
         """File-absolute extents (incl. zero runs) tiling [offset, +length)."""
         out: list[Extent] = []
         for r, rel, _, ln in split_by_regions(offset, length,
                                               ino.region_size):
-            entries = self._region_entries(ctx, ino, r)
-            part = slice_range(entries, rel, ln)
+            part = slice_resolved(self._resolve_region(ctx, ino, r), rel, ln)
             out.extend(shift(part, r * ino.region_size))
         return merge_adjacent(out)
 
@@ -270,10 +338,10 @@ class SliceOps:
                    ranges: Sequence[Tuple[int, int]]) -> List[List[Extent]]:
         """Plan many ranges, resolving each touched region's overlay once.
 
-        ``overlay_cached`` memoizes on the entries tuple, but the cache
-        *lookup* hashes the whole tuple — per-range lookups made vectored
-        planning O(ranges × entries).  Caching the resolved overlay per
-        region for the duration of the op removes that quadratic term."""
+        The per-op ``resolved`` map keeps vectored planning O(ranges log n)
+        (one resolution per region per op); the per-client resolved index
+        behind ``_resolve_region`` keeps that one resolution O(delta) for
+        hot regions across ops."""
         resolved: dict = {}
         plans: List[List[Extent]] = []
         for offset, length in ranges:
@@ -282,8 +350,7 @@ class SliceOps:
                                                   ino.region_size):
                 res = resolved.get(r)
                 if res is None:
-                    res = overlay_cached(
-                        self._region_entries(ctx, ino, r))
+                    res = self._resolve_region(ctx, ino, r)
                     resolved[r] = res
                 part = slice_resolved(res, rel, ln)
                 out.extend(shift(part, r * ino.region_size))
@@ -499,8 +566,8 @@ class SliceOps:
             per_region.setdefault(r, []).append(ext.at(rel))
             max_r = max(max_r, r)
         for r, items in per_region.items():
-            ctx.txn.commute("regions", region_key(inode_id, r),
-                            AppendExtents(items))
+            self._commute_region_append(ctx, inode_id, r,
+                                        AppendExtents(items))
         self._bump(ctx, inode_id, op, max_region=max_r)
         total = cursor - offset
         self.stats.add(logical_bytes_written=total)
@@ -514,8 +581,8 @@ class SliceOps:
         max_r = ino.max_region
         for r, rel, po, ln in split_by_regions(offset, len(data),
                                                ino.region_size):
-            ctx.txn.commute("regions", region_key(inode_id, r),
-                            AppendExtents([full.sub(po, ln).at(rel)]))
+            self._commute_region_append(
+                ctx, inode_id, r, AppendExtents([full.sub(po, ln).at(rel)]))
             max_r = max(max_r, r)
         self._bump(ctx, inode_id, op, max_region=max_r)
         self.stats.add(logical_bytes_written=len(data))
@@ -546,8 +613,8 @@ class SliceOps:
                 cursor += take
                 consumed += take
         for r, pieces in per_region.items():
-            ctx.txn.commute("regions", region_key(inode_id, r),
-                            AppendExtents(pieces))
+            self._commute_region_append(ctx, inode_id, r,
+                                        AppendExtents(pieces))
         op = _Op("paste_internal", (), {})
         self._bump(ctx, inode_id, op, max_region=max_r)
         return cursor - offset

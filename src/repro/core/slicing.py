@@ -15,7 +15,10 @@ Everything in this module is pure data manipulation: no I/O, no locking.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterable, Iterator, Optional, Sequence, Tuple
 
@@ -127,9 +130,13 @@ def overlay(entries: Sequence[Extent]) -> list[Extent]:
     in O(n log n) (the first implementation rebuilt and re-sorted the
     resolved list per entry — O(n²) — which made bulk yank/paste quadratic;
     see EXPERIMENTS.md §Perf, WTF-side iteration 1).
-    """
-    import bisect
 
+    The output is *canonical*: each fragment is a maximal visible
+    contiguous sub-range of one entry, sorted by offset — the unique
+    decomposition of "which entry is visible at each byte".
+    ``overlay_extend`` relies on this to update a resolved form
+    incrementally and land on the structurally identical result.
+    """
     frags: list[Extent] = []
     # sorted, disjoint covered intervals as a flat boundary list
     # [s0, e0, s1, e1, ...]
@@ -197,6 +204,137 @@ def overlay_cached(entries: Sequence[Extent]) -> list[Extent]:
     return list(_overlay_cached_impl(entries))
 
 
+def overlay_extend(resolved: Sequence[Extent],
+                   entries: Sequence[Extent]) -> list[Extent]:
+    """Incrementally overlay ``entries`` (in order, later wins) on an
+    already-resolved form — the delta maintenance behind the region
+    resolved index.
+
+    ``resolved`` must be a canonical ``overlay`` result (sorted, disjoint,
+    maximal fragments).  Appending k extents costs O(k log n) bisects plus
+    the splice, instead of re-running ``overlay`` over the region's whole
+    write history — the difference between O(1) and O(history) planning for
+    a hot region absorbing a small-append stream.  Because the canonical
+    decomposition is unique, the result is *structurally identical* to
+    ``overlay(old_entries + entries)`` (property-tested), so read plans,
+    op digests and §2.6 replays are unaffected by which path produced them.
+
+    ``resolved`` is never mutated; a fresh list is returned.
+    """
+    out = list(resolved)
+    for e in entries:
+        if e.length == 0:
+            continue
+        lo, hi = e.offset, e.end
+        # first fragment that can overlap [lo, hi): fragments are sorted
+        # and disjoint, so offsets AND ends are both increasing
+        i = bisect.bisect_right(out, lo, key=lambda f: f.end)
+        j = i
+        left: Optional[Extent] = None
+        right: Optional[Extent] = None
+        while j < len(out) and out[j].offset < hi:
+            f = out[j]
+            if f.offset < lo:
+                left = f.sub(0, lo - f.offset)
+            if f.end > hi:
+                right = f.sub(hi - f.offset, f.end - hi)
+            j += 1
+        out[i:j] = [x for x in (left, e, right) if x is not None]
+    return out
+
+
+class ResolvedIndexCache:
+    """Delta-maintained resolved overlays, one entry per hot region.
+
+    Region overlay lists only ever *grow* between compactions, and WarpKV
+    appends extend the stored tuple (``old + new``), so successive
+    versions of a region share their prefix as identical objects.  This
+    cache exploits that: keyed on ``(inode, region)``, it remembers the
+    last entries tuple and its resolved form, and when asked about a
+    longer tuple with an identical prefix it applies only the delta via
+    ``overlay_extend`` — O(k log n) for k appended extents — instead of
+    re-resolving the entire history (the quadratic planning cost a hot
+    region's small-append + re-read stream used to pay).
+
+    The prefix check compares object *identity*, so a false hit is
+    impossible: any wholesale replacement (compaction, truncate, GC
+    tier-1/2, a relative append's commit-time re-resolution) fails the
+    check and falls back to a full ``overlay``.  Entries carrying
+    non-``SlicePointer`` pointers (write-behind pending placeholders)
+    bypass the cache entirely, mirroring ``overlay_cached``: they are
+    transaction-private and must never be pinned here.
+
+    Thread-safe (async op bodies plan from pool workers).  Stored resolved
+    lists are never mutated — ``overlay_extend`` copies — so returned
+    references are safe to read outside the lock.
+    """
+
+    __slots__ = ("maxsize", "_lock", "_entries")
+
+    def __init__(self, maxsize: int = 512):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        # key -> (entries_tuple, resolved_list)
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def resolve(self, key: tuple, entries: Tuple[Extent, ...],
+                stats=None) -> list[Extent]:
+        """Resolved overlay of ``entries``; ``stats`` (duck-typed
+        ``ClientStats``) records ``resolved_index_hits``/``_misses``.
+
+        Resolution itself runs OUTSIDE the cache lock — a cold large
+        region must not stall every other planner (async op bodies plan
+        concurrently).  Racing resolutions of the same key just do
+        duplicate work; the canonical form makes either result correct.
+        """
+        if any(type(p) is not SlicePointer for e in entries for p in e.ptrs):
+            return overlay(entries)          # pending placeholders: bypass
+        base = None
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                self._entries.move_to_end(key)
+                tup, res = ent
+                n = len(tup)
+                if len(entries) >= n:
+                    i = 0
+                    while i < n and entries[i] is tup[i]:
+                        i += 1
+                    if i == n:
+                        if len(entries) == n:
+                            if stats is not None:
+                                stats.add(resolved_index_hits=1)
+                            return res
+                        base = res
+        if base is not None:
+            out = overlay_extend(base, entries[n:])
+        else:
+            out = overlay(entries)
+        with self._lock:
+            self._store(key, entries, out)
+        if stats is not None:
+            if base is not None:
+                stats.add(resolved_index_hits=1)
+            else:
+                stats.add(resolved_index_misses=1)
+        return out
+
+    def _store(self, key: tuple, tup: Tuple[Extent, ...],
+               resolved: list) -> None:
+        self._entries[key] = (tup, resolved)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
 def merge_adjacent(extents: Sequence[Extent]) -> list[Extent]:
     """Collapse runs that are contiguous in the file *and* on disk into
     single pointers — the compaction payoff of locality-aware placement."""
@@ -246,8 +384,6 @@ def slice_resolved(
     is what keeps a 4096-range ``yankv`` O(n log n) instead of O(n²)."""
     if length <= 0:
         return []
-    import bisect
-
     end = start + length
     out: list[Extent] = []
     cursor = start

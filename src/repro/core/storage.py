@@ -31,7 +31,7 @@ from .placement import stable_hash
 from .slicing import SlicePointer
 
 
-@dataclass
+@dataclass(slots=True)
 class StorageStats(AtomicStatsMixin):
     """I/O accounting — the primary hardware-independent metric (Table 2).
 
@@ -39,6 +39,12 @@ class StorageStats(AtomicStatsMixin):
     or ``create_slices`` call each); ``slices_written`` counts the logical
     slices those rounds carried, so ``slices_written - slices_created`` is
     the number of round trips the write-path scheduler saved this server.
+
+    The read side mirrors it since the scatter-gather RPC: ``read_rounds``
+    counts retrieval *rounds* accepted (one ``retrieve_slice`` or
+    ``retrieve_slices`` call each); ``slices_read`` counts the pointer
+    retrievals those rounds served, so ``slices_read - read_rounds`` is
+    the round trips the vectored read path saved this server.
 
     Rounds arrive concurrently from the runtime pool; mutation goes
     through ``add`` (atomic) — a bare ``+=`` would drop updates.
@@ -49,6 +55,7 @@ class StorageStats(AtomicStatsMixin):
     slices_created: int = 0
     slices_written: int = 0
     slices_read: int = 0
+    read_rounds: int = 0
     gc_bytes_reclaimed: int = 0
     gc_bytes_rewritten: int = 0
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
@@ -115,6 +122,17 @@ class _BackingFile:
     def read(self, offset: int, length: int) -> bytes:
         # Positional read: no shared file-offset state between readers.
         return os.pread(self._fh.fileno(), length, offset)
+
+    def read_into(self, buf, offset: int) -> int:
+        """Positional read straight into ``buf`` (a writable memoryview) —
+        the zero-copy half of the scatter-gather retrieval: parts land in
+        the caller's backing buffer with no intermediate ``bytes``."""
+        if hasattr(os, "preadv"):
+            return os.preadv(self._fh.fileno(), [buf], offset)
+        # platforms without preadv: one intermediate copy, same contract
+        data = os.pread(self._fh.fileno(), len(buf), offset)
+        buf[:len(data)] = data
+        return len(data)
 
     def close(self) -> None:
         with self.lock:
@@ -203,8 +221,49 @@ class StorageServer:
             raise StorageError(
                 f"short read: wanted {ptr.length} got {len(data)} "
                 f"from {ptr.backing_file}@{ptr.offset}")
-        self.stats.add(bytes_read=len(data), slices_read=1)
+        self.stats.add(bytes_read=len(data), slices_read=1, read_rounds=1)
         return data
+
+    def retrieve_slices(self, ptrs: Sequence[SlicePointer]
+                        ) -> List[memoryview]:
+        """Vectored retrieval: serve many pointers in ONE round (§2.2).
+
+        The read-side mirror of ``create_slices`` — a fetch batch of
+        *non-adjacent* extents on this server costs one round trip instead
+        of one per run, and unlike a covering retrieval no gap bytes are
+        read or shipped.  All parts land back-to-back in a single backing
+        buffer and the returned ``memoryview``s alias it zero-copy; the
+        caller slices them further without touching the bytes.
+
+        The call is all-or-nothing: any dead server, wrong-server pointer
+        or short read raises ``StorageError`` and the client degrades to
+        per-batch/per-extent retrieval with full §2.9 replica failover.
+        """
+        if not self.alive:
+            raise StorageError(f"server {self.server_id} is down")
+        if not ptrs:
+            return []
+        total = sum(p.length for p in ptrs)
+        buf = memoryview(bytearray(total))
+        out: List[memoryview] = []
+        off = 0
+        for p in ptrs:
+            if p.server_id != self.server_id:
+                raise StorageError(
+                    f"pointer for server {p.server_id} sent to "
+                    f"{self.server_id}")
+            bf = self._get_backing_file(p.backing_file)
+            part = buf[off:off + p.length]
+            got = bf.read_into(part, p.offset) if p.length else 0
+            if got != p.length:
+                raise StorageError(
+                    f"short read: wanted {p.length} got {got} "
+                    f"from {p.backing_file}@{p.offset}")
+            out.append(part)
+            off += p.length
+        self.stats.add(bytes_read=total, slices_read=len(ptrs),
+                       read_rounds=1)
+        return out
 
     # ----------------------------------------------------------- placement
     def _pick_backing_file(self, hint: Optional[int]) -> _BackingFile:

@@ -7,7 +7,8 @@ commit.  The wrappers here make those windows scriptable:
 
   * ``FlakyStorageServer`` proxies a real ``StorageServer`` and fails the
     Nth call of a chosen API (``create_slice``/``create_slices``/
-    ``retrieve_slice``) with ``StorageError`` — transiently, or crashing
+    ``retrieve_slice``/``retrieve_slices``) with ``StorageError`` —
+    transiently, or crashing
     the server for good (``crash=True``) the way a real node dies.
   * ``FlakyKV`` proxies ``WarpKV`` and fails the Nth *commit* with
     ``KVConflict``, driving the §2.6 replay layer deterministically (unlike
@@ -27,7 +28,8 @@ from typing import Dict, Iterable, Optional, Set
 
 from .errors import KVConflict, StorageError
 
-_FAILABLE_SERVER_OPS = ("create_slice", "create_slices", "retrieve_slice")
+_FAILABLE_SERVER_OPS = ("create_slice", "create_slices", "retrieve_slice",
+                        "retrieve_slices")
 
 
 class FlakyStorageServer:
@@ -82,6 +84,10 @@ class FlakyStorageServer:
     def retrieve_slice(self, ptr):
         self._maybe_fail("retrieve_slice")
         return self._inner.retrieve_slice(ptr)
+
+    def retrieve_slices(self, ptrs):
+        self._maybe_fail("retrieve_slices")
+        return self._inner.retrieve_slices(ptrs)
 
     # -- everything else passes through ------------------------------------
     def __getattr__(self, name):

@@ -1,0 +1,475 @@
+"""Metadata-plane fast path: incremental region compaction, the
+delta-maintained resolved index, scatter-gather retrieval, KV group
+commit, and the bounded WAL.
+
+Property-style differential checks run seeded here (the hypothesis
+variants live in tests/test_overlay_property.py, collect-ignored when
+hypothesis is absent): the incremental resolved index and the compacting
+commute must be *structurally identical* / byte-identical to full
+``overlay()``/``compact()`` over randomized overlay histories.
+"""
+import random
+import threading
+
+import pytest
+
+from repro.core import Cluster
+from repro.core.errors import KVConflict, StorageError
+from repro.core.inode import CompactRegion, RegionData, region_key
+from repro.core.metadata import ListAppend, WarpKV
+from repro.core.slicing import (Extent, ResolvedIndexCache, SlicePointer,
+                                compact, overlay, overlay_extend)
+from repro.core.testing import make_flaky_server
+from repro.core.wbuf import PendingPtr, _PendingSlice
+
+
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=1,
+                region_size=1 << 20)
+    yield c
+    c.close()
+
+
+def _rand_entries(rng, n, zeros=True):
+    out = []
+    for i in range(n):
+        off = rng.randrange(0, 300)
+        ln = rng.randrange(1, 80)
+        if zeros and rng.random() < 0.2:
+            out.append(Extent(off, ln, ()))            # punch
+        else:
+            out.append(Extent(off, ln,
+                              (SlicePointer(0, f"f{i}", 1000 * i, ln),)))
+    return out
+
+
+# ------------------------------------------------- incremental resolved form
+def test_overlay_extend_matches_full_overlay_seeded():
+    """overlay_extend(overlay(prefix), suffix) must be STRUCTURALLY equal
+    to overlay(prefix + suffix) — not merely byte-equal — so plans and op
+    digests are independent of which path resolved them."""
+    rng = random.Random(42)
+    for _ in range(200):
+        entries = _rand_entries(rng, rng.randrange(0, 30))
+        split = rng.randrange(0, len(entries) + 1)
+        base = overlay(entries[:split])
+        assert overlay_extend(base, entries[split:]) == overlay(entries)
+
+
+def test_overlay_extend_appending_one_at_a_time():
+    rng = random.Random(7)
+    entries = _rand_entries(rng, 40)
+    resolved = []
+    for i, e in enumerate(entries):
+        resolved = overlay_extend(resolved, [e])
+        assert resolved == overlay(entries[:i + 1])
+
+
+def test_resolved_index_cache_hits_on_grown_tuple():
+    rng = random.Random(3)
+    cache = ResolvedIndexCache()
+    base = tuple(_rand_entries(rng, 10, zeros=False))
+    r1 = cache.resolve(("k",), base)
+    grown = base + tuple(_rand_entries(rng, 3, zeros=False))
+    r2 = cache.resolve(("k",), grown)
+    assert r2 == overlay(grown)
+    assert r1 == overlay(base)
+    # identical tuple object → O(1) hit returning the stored resolved form
+    assert cache.resolve(("k",), grown) is r2
+
+
+def test_resolved_index_cache_replaced_tuple_recomputes():
+    """A wholesale replacement (compaction/truncate/GC) shares no object
+    identity with the cached tuple and must fully re-resolve."""
+    rng = random.Random(4)
+    cache = ResolvedIndexCache()
+    entries = tuple(_rand_entries(rng, 20, zeros=False))
+    cache.resolve(("k",), entries)
+    replacement = tuple(compact(entries))
+    got = cache.resolve(("k",), replacement)
+    assert got == overlay(replacement)
+
+
+def test_resolved_index_bypasses_pending_placeholders():
+    """Write-behind pending extents are transaction-private: they must
+    never be stored in (or served from) the shared index."""
+    cache = ResolvedIndexCache()
+    cell = _PendingSlice(b"x" * 10, ("pk",), 0, None)
+    pending = (Extent(0, 10, (PendingPtr(cell, 0, 10),)),)
+    got = cache.resolve(("k",), pending)
+    assert len(got) == 1 and got[0].length == 10
+    assert len(cache) == 0, "pending extents must bypass the index"
+
+
+# ------------------------------------------------- commit-time compaction
+def test_compact_region_commute_differential():
+    """CompactRegion.apply must equal full compact() over randomized
+    histories, preserve ``end``/``indirect``, and no-op below threshold."""
+    rng = random.Random(11)
+    for _ in range(100):
+        entries = tuple(_rand_entries(rng, rng.randrange(0, 25)))
+        rd = RegionData(entries, end=400, indirect=None)
+        new, dropped = CompactRegion(1).apply(rd)
+        if new is rd:
+            assert tuple(compact(entries)) == entries
+        else:
+            assert new.entries == tuple(compact(entries))
+            assert new.end == rd.end and new.indirect is rd.indirect
+            assert dropped == len(entries) - len(new.entries)
+    rd = RegionData(tuple(_rand_entries(rng, 5)), end=100)
+    assert CompactRegion(10).apply(rd)[0] is rd, "below threshold: no-op"
+    assert CompactRegion(2).apply(None)[0] is None, "wiped region: no-op"
+
+
+def test_commit_time_compaction_bounds_entries(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path),
+                region_size=1 << 20, region_compact_threshold=8)
+    try:
+        fs = c.client()
+        fd = fs.open("/hot", "w")
+        for i in range(100):
+            fs.append(fd, bytes([i % 256]) * 16)
+        ino = fs.stat("/hot")["inode"]
+        rd = c.kv.get("regions", region_key(ino, 0))
+        assert len(rd.entries) <= 8
+        assert c.kv.stats.compactions > 0
+        assert fs.pread(fd, 1600, 0) == b"".join(
+            bytes([i % 256]) * 16 for i in range(100))
+        fs.close(fd)
+    finally:
+        c.close()
+
+
+def test_compaction_disabled_keeps_full_history(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path),
+                region_size=1 << 20, region_compact_threshold=None)
+    try:
+        fs = c.client()
+        fd = fs.open("/hot", "w")
+        for i in range(40):
+            fs.append(fd, b"x" * 16)
+        fs.close(fd)
+        ino = fs.stat("/hot")["inode"]
+        rd = c.kv.get("regions", region_key(ino, 0))
+        assert len(rd.entries) == 40
+        assert c.kv.stats.compactions == 0
+    finally:
+        c.close()
+
+
+def test_compaction_preserves_region_version():
+    """The §2.5 contract sharpened: a compaction that preserves resolved
+    bytes must not bump reader-visible versions.  A reader holding a read
+    dependency on the region must survive a pure-compaction commit."""
+    kv = WarpKV()
+    ptrs = tuple(Extent(i * 4, 4, (SlicePointer(0, "b", i * 4, 4),))
+                 for i in range(20))
+    kv.put("regions", ("r", 0), RegionData(ptrs, end=80))
+    ver_before, _ = kv._read_versioned("regions", ("r", 0))
+
+    reader = kv.begin()
+    reader.get("regions", ("r", 0))          # read dependency at ver_before
+
+    t = kv.begin()
+    t.commute("regions", ("r", 0), CompactRegion(2))
+    t.commit()
+
+    ver_after, val = kv._read_versioned("regions", ("r", 0))
+    assert len(val.entries) < 20, "compaction must have applied"
+    assert ver_after == ver_before, \
+        "version-preserving compaction must not bump the version"
+    reader.put("s", "out", 1)
+    reader.commit()                          # must NOT conflict
+    assert kv.stats.compactions == 1
+
+
+def test_append_plus_compaction_bumps_version_once():
+    """An appending commit that also compacts bumps the region version
+    exactly once (for the append) — compaction adds no extra bump."""
+    kv = WarpKV()
+    ptrs = tuple(Extent(i * 4, 4, (SlicePointer(0, "b", i * 4, 4),))
+                 for i in range(10))
+    kv.put("regions", ("r", 0), RegionData(ptrs, end=40))
+    ver0, _ = kv._read_versioned("regions", ("r", 0))
+    from repro.core.inode import AppendExtents
+    t = kv.begin()
+    t.commute("regions", ("r", 0),
+              AppendExtents([Extent(40, 4, (SlicePointer(0, "b", 40, 4),))]))
+    t.commute("regions", ("r", 0), CompactRegion(2))
+    t.commit()
+    ver1, val = kv._read_versioned("regions", ("r", 0))
+    assert ver1 == ver0 + 1
+    assert len(val.entries) < 11
+
+
+def test_parallel_appends_never_conflict_with_compaction(tmp_path):
+    """§2.5 conflict behavior is unchanged: concurrent appenders to one
+    region never abort each other, compaction threshold or not."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path),
+                region_size=1 << 20, region_compact_threshold=4)
+    try:
+        setup = c.client()
+        setup.time_fn = lambda: 1000
+        fd = setup.open("/log", "w")
+        # warm: the FIRST append to an empty file bumps max_region -1 -> 0
+        # (a real inode change that rightly invalidates concurrent inode
+        # readers); §2.5 zero-conflict applies to appends within a region
+        setup.append(fd, b"\xff" * 8)
+        setup.close(fd)
+        n_threads, n_appends = 4, 30
+        clients = [c.client() for _ in range(n_threads)]
+        for cl in clients:
+            cl.time_fn = lambda: 1000    # mtime rollover is the other
+            # benign inode bump; pin the clock so the test is exact
+
+        def work(i):
+            fs = clients[i]
+            fd = fs.open("/log", "rw")
+            for _ in range(n_appends):
+                fs.append(fd, bytes([i]) * 8)
+            fs.close(fd)
+
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sum(cl.stats.txn_aborts for cl in clients) == 0
+        assert sum(cl.stats.txn_retries for cl in clients) == 0, \
+            "parallel appends must not even retry (§2.5)"
+        fd = setup.open("/log", "r")
+        data = setup.read(fd)
+        assert len(data) == (n_threads * n_appends + 1) * 8
+        counts = {i: data.count(bytes([i]) * 8) for i in range(n_threads)}
+        assert all(v >= n_appends for v in counts.values())
+    finally:
+        c.close()
+
+
+def test_compaction_and_gc_interact_safely(tmp_path):
+    """Compaction drops obscured extents; the tier-3 GC may then reclaim
+    their slices — reads must stay correct through full GC cycles, and
+    GC tier-1 must not version-bump regions that are already compact."""
+    from repro.core import GarbageCollector
+
+    c = Cluster(n_servers=2, data_dir=str(tmp_path),
+                region_size=1 << 20, region_compact_threshold=4)
+    try:
+        fs = c.client()
+        fd = fs.open("/f", "w")
+        for i in range(30):                   # repeated overwrites
+            fs.pwrite(fd, bytes([i]) * 1000, 0)
+        want = bytes([29]) * 1000
+        gc = GarbageCollector(c)
+        gc.full_cycle()
+        gc.full_cycle()
+        assert fs.pread(fd, 1000, 0) == want
+        ino = fs.stat("/f")["inode"]
+        ver_before, _ = c.kv._read_versioned("regions", region_key(ino, 0))
+        r = gc.compact_region(ino, 0)
+        assert r.get("noop") or r["before"] == r["after"]
+        ver_after, _ = c.kv._read_versioned("regions", region_key(ino, 0))
+        assert ver_after == ver_before, \
+            "tier-1 GC must not bump versions of already-compact regions"
+        fs.close(fd)
+    finally:
+        c.close()
+
+
+# ------------------------------------------------- scatter-gather retrieval
+def test_retrieve_slices_server_roundtrip(cluster):
+    srv = cluster.servers[0]
+    p1 = srv.create_slice(b"a" * 100, locality_hint=1)
+    srv.create_slice(b"junk" * 500, locality_hint=1)   # the disk gap
+    p2 = srv.create_slice(b"b" * 50, locality_hint=1)
+    before = srv.stats.snapshot()
+    got = srv.retrieve_slices([p2, p1.sub(10, 20)])
+    assert bytes(got[0]) == b"b" * 50
+    assert bytes(got[1]) == b"a" * 20
+    after = srv.stats.snapshot()
+    assert after["read_rounds"] - before["read_rounds"] == 1
+    assert after["slices_read"] - before["slices_read"] == 2
+    assert after["bytes_read"] - before["bytes_read"] == 70
+    with pytest.raises(StorageError):
+        srv.retrieve_slices([SlicePointer(99, "b", 0, 4)])
+
+
+def _interleaved_cluster(tmp_path, k, **kw):
+    c = Cluster(n_servers=1, data_dir=str(tmp_path), region_size=1 << 20,
+                num_backing_files=1, fetch_gap_bytes=1, **kw)
+    fs = c.client()
+    fa, fb = fs.open("/a", "w"), fs.open("/b", "w")
+    for i in range(k):
+        fs.pwrite(fa, bytes([i]) * 4096, i * 4096)
+        fs.pwrite(fb, b"\xee" * 4096, i * 4096)
+    return c, fs, fa
+
+
+def test_scatter_gather_one_round(tmp_path):
+    k = 6
+    c, fs, fa = _interleaved_cluster(tmp_path / "sg", k)
+    try:
+        c.reset_io_stats()
+        out = fs.readv(fa, [(i * 4096, 4096) for i in range(k)])
+        assert out == [bytes([i]) * 4096 for i in range(k)]
+        st = c.total_stats()["servers"][0]
+        assert st["read_rounds"] == 1, \
+            "non-adjacent same-file batches must share one round"
+        assert st["slices_read"] == k
+        assert fs.stats.fetch_batches == 1
+        assert fs.stats.slices_coalesced == k - 1
+        # no gap bytes fetched: exactly the requested bytes moved
+        assert st["bytes_read"] == k * 4096
+    finally:
+        c.close()
+
+
+def test_scatter_gather_off_one_round_per_run(tmp_path):
+    k = 6
+    c, fs, fa = _interleaved_cluster(tmp_path / "nosg", k,
+                                     scatter_gather=False)
+    try:
+        c.reset_io_stats()
+        out = fs.readv(fa, [(i * 4096, 4096) for i in range(k)])
+        assert out == [bytes([i]) * 4096 for i in range(k)]
+        assert c.total_stats()["servers"][0]["read_rounds"] == k
+    finally:
+        c.close()
+
+
+def test_scatter_gather_degrades_on_failure(tmp_path):
+    """An injected retrieve_slices failure must fall back to per-batch /
+    per-extent retrieval with correct bytes (§2.9 availability)."""
+    k = 5
+    c, fs, fa = _interleaved_cluster(tmp_path / "flaky", k)
+    try:
+        flaky = make_flaky_server(c, 0, {"retrieve_slices": {1}})
+        out = fs.readv(fa, [(i * 4096, 4096) for i in range(k)])
+        assert out == [bytes([i]) * 4096 for i in range(k)]
+        assert flaky.injected == 1
+    finally:
+        c.close()
+
+
+def test_scatter_gather_replica_failover(tmp_path):
+    """With replication, killing the scatter-gather target mid-plan still
+    serves every extent from the surviving replica."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                region_size=1 << 20, num_backing_files=1, fetch_gap_bytes=1)
+    try:
+        fs = c.client()
+        fa, fb = fs.open("/a", "w"), fs.open("/b", "w")
+        k = 4
+        for i in range(k):
+            fs.pwrite(fa, bytes([i + 1]) * 4096, i * 4096)
+            fs.pwrite(fb, b"\xee" * 4096, i * 4096)
+        c.fail_server(0)
+        out = fs.readv(fa, [(i * 4096, 4096) for i in range(k)])
+        assert out == [bytes([i + 1]) * 4096 for i in range(k)]
+    finally:
+        c.close()
+
+
+# ------------------------------------------------- KV group commit
+def test_group_commit_single_threaded_semantics():
+    kv = WarpKV(group_commit=True)
+    kv.put("s", "k", 1)
+    t1 = kv.begin()
+    assert t1.get("s", "k") == 1
+    kv.put("s", "k", 2)
+    t1.put("s", "other", 99)
+    with pytest.raises(KVConflict):
+        t1.commit()
+    assert kv.get("s", "other") is None
+    assert kv.stats.commit_lock_passes == kv.stats.commits \
+        + kv.stats.aborts
+
+
+def test_group_commit_concurrent_correctness_and_batching():
+    kv = WarpKV(group_commit=True)
+    n, m = 8, 60
+
+    def worker(i):
+        for j in range(m):
+            txn = kv.begin()
+            txn.commute("s", "lst", ListAppend([(i, j)]))
+            txn.commit()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    lst = kv.get("s", "lst")
+    assert len(lst) == n * m and len(set(lst)) == n * m
+    assert kv.stats.aborts == 0
+    assert kv.stats.commits == n * m
+    assert kv.stats.commit_lock_passes + kv.stats.grouped_commits \
+        == kv.stats.commits
+
+
+def test_group_commit_batch_isolates_failures():
+    """A conflicting transaction in a batch aborts alone; batch-mates
+    commit, exactly as back-to-back commits would."""
+    kv = WarpKV(group_commit=True)
+    kv.put("s", "k", 0)
+    stale = kv.begin()
+    stale.get("s", "k")
+    kv.put("s", "k", 1)                      # invalidates `stale`
+    ok = kv.begin()
+    ok.commute("s", "lst", ListAppend(["x"]))
+    ok.commit()
+    stale.put("s", "w", 1)
+    with pytest.raises(KVConflict):
+        stale.commit()
+    assert kv.get("s", "lst") == ["x"]
+    assert kv.get("s", "w") is None
+
+
+def test_group_commit_off_counts_every_pass():
+    kv = WarpKV(group_commit=False)
+    for i in range(10):
+        kv.put("s", i, i)
+    assert kv.stats.commits == 10
+    assert kv.stats.commit_lock_passes == 10
+    assert kv.stats.grouped_commits == 0
+
+
+# ------------------------------------------------- bounded WAL
+def test_wal_is_bounded_and_subscribe_converges():
+    kv = WarpKV()
+    kv.WAL_TAIL_MAX = 32                      # shrink the ring for the test
+    keys = [f"k{i}" for i in range(5)]
+    for round_ in range(200):
+        for k in keys:
+            kv.put("s", k, (k, round_))
+    assert len(kv._wal_tail) <= 32
+    assert kv.wal_entries() <= 32 + len(keys), \
+        "WAL memory must be O(keyspace + tail), not O(history)"
+
+    seen = {}
+    versions = {}
+    kv.subscribe(lambda sp, k, v, ver: (seen.__setitem__((sp, k), v),
+                                        versions.__setitem__((sp, k), ver)))
+    for k in keys:
+        assert seen[("s", k)] == (k, 199), \
+            "a late subscriber must converge on the latest value per key"
+    # and the listener stays live for future commits
+    kv.put("s", "k0", "fresh")
+    assert seen[("s", "k0")] == "fresh"
+
+
+def test_wal_bounded_under_client_workload(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), region_size=1 << 20)
+    try:
+        c.kv.WAL_TAIL_MAX = 64
+        fs = c.client()
+        fd = fs.open("/f", "w")
+        for i in range(300):
+            fs.pwrite(fd, b"z" * 64, (i % 10) * 64)
+        fs.close(fd)
+        assert len(c.kv._wal_tail) <= 64
+    finally:
+        c.close()

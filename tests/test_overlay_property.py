@@ -1,11 +1,16 @@
 """Property tests for the O(n log n) overlay rewrite: byte-exact
 equivalence with a brute-force byte-map oracle, on adversarial extent
-lists (the rewrite replaced the original O(n²) algorithm — §Perf A1)."""
+lists (the rewrite replaced the original O(n²) algorithm — §Perf A1).
+Plus differential properties for the metadata-plane fast path: the
+incremental resolved index (``overlay_extend``) and the commit-time
+compacting commute (``inode.CompactRegion``) against full
+``overlay()``/``compact()``."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+from repro.core.inode import CompactRegion, RegionData
 from repro.core.slicing import (Extent, SlicePointer, compact, overlay,
-                                slice_range)
+                                overlay_extend, slice_range)
 
 
 def _mk_extent(i, offset, length):
@@ -61,6 +66,77 @@ def test_overlay_matches_byte_oracle(entries):
 def test_compact_preserves_bytes(entries):
     np.testing.assert_array_equal(_materialize(compact(entries)),
                                   _oracle(entries))
+
+
+def _oracle_z(entries, size=300):
+    """Byte map like ``_oracle`` but zero (punch) extents mark -2."""
+    m = np.full(size, -1, np.int64)
+    for i, e in enumerate(entries):
+        if e.is_zero:
+            m[e.offset:e.end] = -2
+        else:
+            for b in range(e.length):
+                m[e.offset + b] = i * 10_000 + b
+    return m
+
+
+def _materialize_z(extents, size=300):
+    m = np.full(size, -1, np.int64)
+    for ext in extents:
+        if ext.is_zero:
+            m[ext.offset:ext.end] = -2
+            continue
+        p = ext.ptrs[0]
+        i = int(p.backing_file[1:])
+        start_in_slice = p.offset - 1000 * i
+        for b in range(ext.length):
+            m[ext.offset + b] = i * 10_000 + start_in_slice + b
+    return m
+
+
+@st.composite
+def extent_lists_with_zeros(draw):
+    """Like ``extent_lists`` but ~1 in 5 entries is a punch (zero extent)."""
+    n = draw(st.integers(0, 40))
+    out = []
+    for i in range(n):
+        off = draw(st.integers(0, 200))
+        ln = draw(st.integers(1, 60))
+        if draw(st.booleans()) and draw(st.booleans()) \
+                and draw(st.booleans()):
+            out.append(Extent(off, ln, ()))
+        else:
+            out.append(_mk_extent(i, off, ln))
+    return out
+
+
+@given(extent_lists_with_zeros(), st.integers(0, 40))
+@settings(max_examples=200, deadline=None)
+def test_overlay_extend_structurally_equals_overlay(entries, split_at):
+    """The resolved index's delta update must land on the STRUCTURALLY
+    identical canonical form full ``overlay`` produces — plans and op
+    digests must not depend on which path resolved the region."""
+    split = min(split_at, len(entries))
+    base = overlay(entries[:split])
+    assert overlay_extend(base, entries[split:]) == overlay(entries)
+
+
+@given(extent_lists_with_zeros(), st.integers(1, 20))
+@settings(max_examples=150, deadline=None)
+def test_compact_region_commute_equals_compact(entries, threshold):
+    """The commit-time compacting commute is byte-identical to full
+    ``compact()`` (including punch extents), preserves ``end``, and
+    no-ops below its threshold."""
+    rd = RegionData(tuple(entries), end=300)
+    new, _ = CompactRegion(threshold).apply(rd)
+    if len(entries) < threshold:
+        assert new is rd
+    else:
+        assert new.end == rd.end
+        np.testing.assert_array_equal(_materialize_z(new.entries),
+                                      _materialize_z(compact(entries)))
+        np.testing.assert_array_equal(_materialize_z(new.entries),
+                                      _oracle_z(entries))
 
 
 @given(extent_lists(), st.integers(0, 250), st.integers(1, 80))
