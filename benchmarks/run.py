@@ -31,7 +31,8 @@ BENCHES = {
     "meta": ("metadata-plane fast path (commit-time compaction, "
              "scatter-gather retrieval, KV group commit)",
              "benchmarks.meta_bench"),
-    "scaling": ("Figs 13-14 (client scaling)", "benchmarks.scaling"),
+    "scaling": ("Figs 13-14 (client scaling: metadata ops/s vs shard "
+                "count 1/2/4, leases off/on)", "benchmarks.scaling"),
     "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
     "append": ("§2.5 (concurrent relative appends)",
                "benchmarks.append_bench"),

@@ -1,37 +1,206 @@
-"""Throughput/latency as the number of writers grows (Figs 13-14)."""
+"""Many-client metadata ops/s vs. shard count and leases (Figs 13-14).
+
+The paper scales clients against a HyperDex Warp *ensemble*; the in-process
+stand-in is the sharded metadata plane (``core/mdshard``) plus leased
+client caching (``core/lease``).  This benchmark makes the scaling claim
+physically measurable by running every cluster with a modeled per-request
+metadata service time (``kv_service_time``): each shard serializes its own
+requests on one service lock while sleeping with the GIL released, so
+
+  * N shards genuinely serve ~N clients' metadata reads concurrently, and
+  * a lease-served read skips the round trip (and its delay) entirely.
+
+Workload: W client threads each own F files and hammer ``stat`` over them
+— the pure metadata hot loop (path lookup + inode + region length), with
+all data I/O out of the picture.  File names are chosen balanced across 4
+(hence also 2) shards, so the sweep measures sharding, not hash luck; the
+SAME names and bytes are used for every configuration and the final
+read-back digest must be byte-identical to the unsharded, lease-off run.
+
+Sweep: shard count 1/2/4 (``n_meta_shards``) × leases off/on
+(``lease_ttl``).  Asserted at every scale:
+
+  * lease-off ops/s increases monotonically with shard count, and the
+    4-shard plane is >= 2x the 1-shard plane;
+  * with leases on, the timed hot loop issues ZERO KV round trips
+    (``gets``/``commits`` deltas are exactly 0, ``lease_hits`` > 0);
+  * the hot loop stays single-shard (no 2PC counters move while timing).
+"""
 from __future__ import annotations
 
-from .common import Scale, lat_summary, save_result, wtf_cluster, wtf_io
-from .seq_write import _drive_writers
+import hashlib
+import sys
+import threading
+import time
 
-WRITE_SIZE = 4 << 20
+from repro.core.placement import stable_hash
+
+from .common import Scale, save_result, wtf_cluster
+
+SHARD_SWEEP = (1, 2, 4)
+LEASE_TTL = 60.0
+SERVICE_TIME_S = 0.0005        # one modeled metadata round trip
+FILES_PER_CLIENT = 4
+
+
+def _params(scale: Scale) -> tuple:
+    """(threads, stat passes per thread) by scale."""
+    if scale.name == "smoke":
+        return 6, 25
+    if scale.name == "full":
+        return 8, 120
+    return 8, 50
+
+
+def _balanced_paths(n_files: int) -> list:
+    """File names spread exactly evenly over 4 metadata shards (and hence
+    over 2): the sweep should measure sharding, not hash luck.  Uses the
+    same routing hash as ``ShardedKV.shard_index``."""
+    buckets: dict = {0: [], 1: [], 2: [], 3: []}
+    need = (n_files + 3) // 4
+    i = 0
+    while min(len(b) for b in buckets.values()) < need:
+        name = f"/s{i:04d}"
+        buckets[stable_hash("paths", name, salt="mdshard") % 4].append(name)
+        i += 1
+    return [buckets[j % 4][j // 4] for j in range(n_files)]
+
+
+def _content(path: str) -> bytes:
+    return (path.encode() + b"|") * 32
+
+
+def _run_config(scale: Scale, n_shards: int, leases: bool) -> dict:
+    threads, iters = _params(scale)
+    paths = _balanced_paths(threads * FILES_PER_CLIENT)
+    # Round-robin assignment: each thread's file set spans the shards too.
+    mine = {t: paths[t::threads] for t in range(threads)}
+
+    kw = dict(n_meta_shards=n_shards, kv_service_time=SERVICE_TIME_S)
+    if leases:
+        kw["lease_ttl"] = LEASE_TTL
+    with wtf_cluster(scale, **kw) as cluster:
+        clients = {t: cluster.client() for t in range(threads)}
+
+        def setup(t):
+            c = clients[t]
+            for p in mine[t]:
+                fd = c.open(p, "w")
+                c.write(fd, _content(p))
+                c.close(fd)
+                c.stat(p)          # warm: grants leases, pins versions
+
+        def hot(t):
+            c = clients[t]
+            for _ in range(iters):
+                for p in mine[t]:
+                    c.stat(p)
+
+        def fanout(fn):
+            ts = [threading.Thread(target=fn, args=(t,))
+                  for t in range(threads)]
+            for th in ts:
+                th.start()
+            for th in ts:
+                th.join()
+
+        fanout(setup)
+
+        before = cluster.total_stats()
+        t0 = time.perf_counter()
+        fanout(hot)
+        wall = time.perf_counter() - t0
+        after = cluster.total_stats()
+
+        ops = threads * iters * FILES_PER_CLIENT
+        row = {
+            "shards": n_shards,
+            "leases": leases,
+            "ops": ops,
+            "wall_s": wall,
+            "opss": ops / wall,
+            "kv_gets_delta": after["kv"]["gets"] - before["kv"]["gets"],
+            "kv_commits_delta": (after["kv"]["commits"]
+                                 - before["kv"]["commits"]),
+        }
+        if n_shards > 1:
+            row["mdshard"] = after["mdshard"]
+            row["cross_shard_delta"] = (
+                after["mdshard"]["cross_shard_commits"]
+                - before["mdshard"]["cross_shard_commits"])
+        if leases:
+            row["lease_stats"] = after["leases"]
+
+        # Byte-identical verification: a fresh client reads every file.
+        verifier = cluster.client()
+        h = hashlib.blake2b(digest_size=16)
+        for p in sorted(paths):
+            fd = verifier.open(p, "r")
+            data = verifier.read(fd)
+            verifier.close(fd)
+            h.update(p.encode() + b"=" + data + b";")
+        row["digest"] = h.hexdigest()
+        return row
 
 
 def run(scale: Scale) -> dict:
     rows = []
-    for n in (1, 2, scale.n_clients, scale.n_clients * 2):
-        with wtf_cluster(scale) as cluster:
-            clients = [cluster.client() for _ in range(n)]
-            fds = [c.open(f"/s{i}", "w") for i, c in enumerate(clients)]
+    for n_shards in SHARD_SWEEP:
+        for leases in (False, True):
+            row = _run_config(scale, n_shards, leases)
+            rows.append(row)
+            extra = ""
+            if leases:
+                ls = row["lease_stats"]
+                extra = (f", lease_hits={ls['lease_hits']}, "
+                         f"kv gets delta={row['kv_gets_delta']}")
+            print(f"[scaling] shards={n_shards} leases={leases!s:5}: "
+                  f"{row['opss']:8.0f} ops/s ({row['wall_s']:.2f}s)"
+                  f"{extra}")
 
-            def writer(i):
-                return lambda buf: clients[i].write(fds[i], buf)
+    by = {(r["shards"], r["leases"]): r for r in rows}
 
-            secs, lats = _drive_writers(n, scale.total_bytes, WRITE_SIZE,
-                                        writer)
-            io = wtf_io(cluster)
-            rows.append({"clients": n,
-                         "throughput_mbs": io["bytes_written"] / secs / 1e6,
-                         **lat_summary(lats)})
-            print(f"[scaling] {n} clients: "
-                  f"{rows[-1]['throughput_mbs']:.0f} MB/s, median "
-                  f"{rows[-1]['median_ms']:.1f}ms")
+    # Correctness: every configuration returns byte-identical file data
+    # to the unsharded, lease-off plane.
+    base_digest = by[(1, False)]["digest"]
+    assert all(r["digest"] == base_digest for r in rows), \
+        "configurations diverged: " \
+        + str([(r["shards"], r["leases"], r["digest"]) for r in rows])
+
+    # Scaling: lease-off ops/s strictly increases with shard count, and
+    # 4 shards clear 2x the single-shard plane.
+    off = [by[(n, False)]["opss"] for n in SHARD_SWEEP]
+    assert off[0] < off[1] < off[2], \
+        f"ops/s not monotonic in shard count: {off}"
+    speedup = off[2] / off[0]
+    assert speedup >= 2.0, f"4-shard speedup {speedup:.2f}x < 2x"
+
+    # Leases: the hot loop re-reads unchanged files with ZERO KV round
+    # trips — request counters flat, hits observed, commits skipped.
+    for n in SHARD_SWEEP:
+        r = by[(n, True)]
+        assert r["kv_gets_delta"] == 0, \
+            f"{n}-shard lease run issued {r['kv_gets_delta']} KV gets"
+        assert r["kv_commits_delta"] == 0, \
+            f"{n}-shard lease run issued {r['kv_commits_delta']} KV commits"
+        assert r["lease_stats"]["lease_hits"] > 0
+        assert r["lease_stats"]["lease_commit_skips"] > 0
+        assert r["opss"] > by[(n, False)]["opss"], \
+            f"leases did not speed up the {n}-shard hot loop"
+        if n > 1:
+            assert r["cross_shard_delta"] == 0, \
+                "hot single-file loop crossed shards"
+
     out = {"rows": rows, "scale": scale.name,
-           "saturates": rows[-1]["throughput_mbs"]
-           < 1.5 * rows[-2]["throughput_mbs"]}
+           "service_time_s": SERVICE_TIME_S,
+           "speedup_4x1": speedup,
+           "lease_speedup_1shard":
+               by[(1, True)]["opss"] / by[(1, False)]["opss"]}
+    print(f"[scaling] 4-shard/1-shard (leases off): {speedup:.2f}x; "
+          f"leases on 1 shard: {out['lease_speedup_1shard']:.2f}x")
     save_result("scaling", out)
     return out
 
 
 if __name__ == "__main__":
-    run(Scale.of("quick"))
+    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))

@@ -54,4 +54,13 @@ echo "== smoke: metadata-plane fast path (compaction / scatter-gather / group co
 # under group commit.  Leaves meta_bench.json for CI to upload.
 timeout "${META_BENCH_TIMEOUT:-300}" python -m benchmarks.meta_bench smoke
 
+echo "== smoke: sharded metadata plane (shard sweep 1/2/4, leases off/on) =="
+# asserts metadata ops/s increases monotonically with shard count (4-shard
+# >= 2x 1-shard under the modeled per-shard service time), lease-enabled
+# hot re-reads issue ZERO KV round trips (request counters flat, lease
+# hits observed), and every configuration reads back byte-identical to
+# the unsharded, lease-off plane.  Covers the "2 shards + leases" config
+# the tentpole requires.  Leaves scaling.json for CI to upload.
+timeout "${SCALING_BENCH_TIMEOUT:-300}" python -m benchmarks.scaling smoke
+
 echo "CI OK"

@@ -21,6 +21,8 @@ from .iort import IoFuture, IoRuntime, IoTask, PlanCache
 from .iosched import SliceScheduler
 from .wbuf import PendingPtr, WriteBehindBuffer
 from .wsched import StoreRequest, WriteScheduler
+from .lease import LeaseHub, LeaseStats, LeaseTable
+from .mdshard import MdShardStats, PhaseCrash, ShardedKV
 from .metadata import CommutingOp, ListAppend, Transaction, WarpKV
 from .placement import HashRing, stable_hash
 from .slicing import (Extent, SlicePointer, compact, decode_extents,
@@ -34,6 +36,8 @@ __all__ = [
     "IoRuntime", "IoFuture", "IoTask", "PlanCache",
     "WriteBehindBuffer", "PendingPtr",
     "WarpKV", "StorageServer",
+    "ShardedKV", "MdShardStats", "PhaseCrash",
+    "LeaseHub", "LeaseTable", "LeaseStats",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",
     "Extent", "SlicePointer", "Inode", "RegionData",
     "compact", "overlay", "slice_range", "merge_adjacent",

@@ -39,6 +39,8 @@ from .handle import WtfFile  # noqa: F401  (re-export)
 from .inode import DEFAULT_REGION_SIZE, REGION_COMPACT_THRESHOLD
 from .iort import IoRuntime, PlanCache, run_with_failover
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
+from .lease import LeaseHub, LeaseTable
+from .mdshard import ShardedKV
 from .wsched import DEFAULT_MAX_COALESCE, StoreRequest, WriteScheduler
 from .metadata import WarpKV
 from .posix_ops import PosixOps
@@ -74,6 +76,12 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         self.cluster = cluster
         self.kv: WarpKV = cluster.kv
         self.stats = ClientStats()
+        # Leased metadata cache (``lease``): on lease-enabled clusters every
+        # transaction this client begins serves reads from (and grants)
+        # time/version-bounded leases, and read-only transactions whose
+        # whole read set is lease-covered commit with zero KV round trips.
+        self._lease_table = (LeaseTable(cluster.lease_hub)
+                             if cluster.lease_hub is not None else None)
         self._client_id = (client_id if client_id is not None
                            else cluster._next_client_id())
         self._fd_counter = itertools.count(3)
@@ -90,9 +98,14 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         # Read-plan cache (``iort.PlanCache``): hot re-reads skip overlay
         # resolution when the touched regions' KV versions are unchanged —
         # the commutes a commit applies bump them, which is the whole
-        # invalidation story.  Per-client: validation records the same read
-        # dependencies a fresh plan would.
-        self._plan_cache = PlanCache()
+        # invalidation story.  Per-client by default: validation records
+        # the same read dependencies a fresh plan would.  Lease-enabled
+        # clusters share ONE cache across all clients under the same rule
+        # (hits are version-validated per transaction), with the lease hub
+        # evicting an inode's plans when its region metadata changes.
+        self._plan_cache = (cluster.shared_plan_cache
+                            if cluster.shared_plan_cache is not None
+                            else PlanCache())
         # Resolved-region index (``slicing.ResolvedIndexCache``): when a
         # hot region's overlay list grows by k extents, its resolved form
         # is extended in O(k log n) instead of re-resolved over the whole
@@ -138,7 +151,10 @@ class Cluster:
                  resolved_index: bool = True,
                  region_compact_threshold: Optional[int] =
                  REGION_COMPACT_THRESHOLD,
-                 kv_group_commit: bool = True):
+                 kv_group_commit: bool = True,
+                 n_meta_shards: int = 1,
+                 lease_ttl: Optional[float] = None,
+                 kv_service_time: float = 0.0):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -174,8 +190,41 @@ class Cluster:
             raise ValueError(
                 f"region_compact_threshold must be >= 2 (or None to "
                 f"disable), got {region_compact_threshold}")
+        if n_meta_shards < 1:
+            raise ValueError(
+                f"n_meta_shards must be >= 1, got {n_meta_shards}")
+        if lease_ttl is not None and lease_ttl <= 0:
+            raise ValueError(
+                f"lease_ttl must be > 0 (or None to disable leases), "
+                f"got {lease_ttl}")
+        if kv_service_time < 0:
+            raise ValueError(
+                f"kv_service_time must be >= 0, got {kv_service_time}")
 
-        self.kv = WarpKV(group_commit=kv_group_commit)
+        # Metadata plane: ONE WarpKV by default — the exact single-store
+        # fast path — or a ``mdshard.ShardedKV`` partitioning the keyspace
+        # across ``n_meta_shards`` independent WarpKV shards, with
+        # cross-shard transactions (rare by construction: inode ids are
+        # colocated with their paths) going through 2PC.
+        self.n_meta_shards = n_meta_shards
+        if n_meta_shards == 1:
+            self.kv = WarpKV(group_commit=kv_group_commit,
+                             service_time_s=kv_service_time)
+        else:
+            self.kv = ShardedKV(n_meta_shards, group_commit=kv_group_commit,
+                                service_time_s=kv_service_time)
+        # Leases (``lease``): time/version-bounded client metadata caching.
+        # The hub wires revocation (writer-side invalidation barrier + the
+        # per-shard WAL subscribe stream) and owns the cluster-shared
+        # version-validated plan cache.
+        self.lease_ttl = lease_ttl
+        if lease_ttl is not None:
+            self.shared_plan_cache = PlanCache()
+            self.lease_hub = LeaseHub(self.kv, ttl=lease_ttl,
+                                      plan_cache=self.shared_plan_cache)
+        else:
+            self.shared_plan_cache = None
+            self.lease_hub = None
         # Metadata-plane fast-path knobs (all default on; each has an off
         # position so benchmarks/tests can compare like for like):
         #   scatter_gather — one retrieve_slices round per (server,
@@ -331,6 +380,15 @@ class Cluster:
             s["slices_written"] for s in agg["servers"].values())
         agg["degraded_stores"] = self.degraded_stores
         agg["io_runtime"] = self.runtime.snapshot()
+        # Sharded metadata plane: per-shard KVStats plus the 2PC
+        # coordinator's counters (each snapshot is atomic, like the
+        # ``io_runtime`` section; the top-level "kv" stays the aggregate).
+        kv = self.kv
+        if isinstance(kv, ShardedKV):
+            agg["kv_shards"] = [sh.stats.snapshot() for sh in kv.shards]
+            agg["mdshard"] = kv.stats_2pc.snapshot()
+        if self.lease_hub is not None:
+            agg["leases"] = self.lease_hub.stats.snapshot()
         return agg
 
     def reset_io_stats(self) -> None:

@@ -180,10 +180,27 @@ class ClientRuntime:
     MAX_RETRIES = 16
 
     # ------------------------------------------------------------ plumbing
+    def _begin_txn(self):
+        """Begin a KV transaction wired to this client's lease table (when
+        the cluster runs leases) — every op/transaction/replay path MUST
+        come through here so lease-served reads and the read-only commit
+        skip apply uniformly, including op bodies on runtime pool threads
+        (the lease table is thread-safe)."""
+        txn = self.kv.begin()
+        if self._lease_table is not None:
+            txn.attach_leases(self._lease_table)
+        return txn
+
     def _alloc_inode_id(self) -> int:
         # Unique without coordination (no read dependency on a counter →
         # creates never conflict with each other).
         return (self._client_id << 40) | next(self._id_counter)
+
+    def _alloc_inode_id_for(self, path: str) -> int:
+        """Allocate an inode id placed on the same metadata shard as
+        ``path``, so the hot single-file transactions (open/read/write)
+        stay single-shard by construction.  Identity on a 1-shard plane."""
+        return self.kv.colocated_inode_id(path, self._alloc_inode_id())
 
     def _fd_state(self) -> dict:
         return {fd: f.snap() for fd, f in self._fds.items()}
@@ -260,7 +277,7 @@ class ClientRuntime:
             if attempt:
                 self.stats.add(txn_retries=1)
                 self._restore_fd_state(fd_snap)
-            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
             try:
                 result = self._exec(op, ctx)
                 # Write-behind (auto-commit scope): stores the op deferred
@@ -321,7 +338,7 @@ class WtfTransaction:
             raise WtfError("client already has an open transaction")
         self.client._txn = self
         self._fd_snap = self.client._fd_state()
-        self._ctx = _Ctx(self.client.kv.begin(), first=True)
+        self._ctx = _Ctx(self.client._begin_txn(), first=True)
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
@@ -401,7 +418,7 @@ class WtfTransaction:
     def _replay(self) -> None:
         """Re-execute the op log against a fresh KV transaction (§2.6)."""
         self.client._restore_fd_state(self._fd_snap)
-        self._ctx = _Ctx(self.client.kv.begin(), first=False)
+        self._ctx = _Ctx(self.client._begin_txn(), first=False)
         for op in self._ops:
             try:
                 result = self.client._exec(op, self._ctx)

@@ -85,10 +85,24 @@ class GarbageCollector:
         return {"skipped": False, "before": before,
                 "after": len(compacted), "spilled": spilled}
 
+    def _walk_keys(self, space: str):
+        """Deterministic space walk across the whole metadata plane.  On a
+        sharded plane (``mdshard.ShardedKV``) the walk goes shard by shard
+        in shard order — each shard's keys are a consistent snapshot of
+        that shard, and a scan never straddles a shard boundary mid-shard —
+        which also keeps the GC's iteration order stable across runs."""
+        kv = self.cluster.kv
+        shards = getattr(kv, "shards", None)
+        if shards is None:
+            yield from kv.keys(space)
+            return
+        for shard in shards:
+            yield from shard.keys(space)
+
     def compact_all(self) -> dict:
         stats = {"regions": 0, "entries_before": 0, "entries_after": 0,
                  "spilled": 0, "noop": 0}
-        for key in self.cluster.kv.keys("regions"):
+        for key in self._walk_keys("regions"):
             inode_id, region_idx = key
             r = self.compact_region(inode_id, region_idx)
             if r.get("noop"):
@@ -115,7 +129,7 @@ class GarbageCollector:
                     live[p.server_id].append(p)
 
         kv = self.cluster.kv
-        for key in kv.keys("regions"):
+        for key in self._walk_keys("regions"):
             rd: RegionData = kv.get("regions", key)
             if rd is None:
                 continue

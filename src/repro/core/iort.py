@@ -207,12 +207,24 @@ class PlanCache:
     as serializable as a re-plan); any commit whose commutes touched a
     region bumped its version, which is the whole invalidation story.
     Thread-safe: async ops consult it from pool workers.
+
+    Because hits are version-validated per transaction, one cache is safe
+    to share across *clients*: on lease-enabled clusters the cluster owns a
+    single shared instance (see ``client.Cluster``), so a file one client
+    has planned is a plan-cache hit for every other client — the same
+    lease rule that lets hot re-reads skip the KV.  The lease hub evicts a
+    whole inode's plans when its region metadata changes (``drop_inode``,
+    fed by the WAL subscribe stream); stale entries could only fail their
+    validation anyway, eviction just keeps the shared LRU useful.
     """
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
         self._lock = threading.Lock()
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # inode id → set of live keys, so lease-driven invalidation of one
+        # inode's plans is O(its entries), not a scan of the whole LRU.
+        self._by_inode: dict = {}
 
     def get(self, key: tuple) -> Optional[tuple]:
         with self._lock:
@@ -225,8 +237,27 @@ class PlanCache:
         with self._lock:
             self._entries[key] = value
             self._entries.move_to_end(key)
+            self._by_inode.setdefault(key[0], set()).add(key)
             while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
+                old, _ = self._entries.popitem(last=False)
+                self._drop_index(old)
+
+    def _drop_index(self, key: tuple) -> None:
+        keys = self._by_inode.get(key[0])
+        if keys is not None:
+            keys.discard(key)
+            if not keys:
+                del self._by_inode[key[0]]
+
+    def drop_inode(self, inode_id: int) -> int:
+        """Evict every plan for ``inode_id``; returns entries dropped."""
+        with self._lock:
+            keys = self._by_inode.pop(inode_id, None)
+            if not keys:
+                return 0
+            for key in keys:
+                self._entries.pop(key, None)
+            return len(keys)
 
     def __len__(self) -> int:
         with self._lock:
@@ -235,6 +266,7 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._by_inode.clear()
 
 
 class IoRuntime:

@@ -54,6 +54,7 @@ memory is O(keyspace + tail), not O(history).
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, List, Optional
@@ -112,10 +113,21 @@ class ListAppend(CommutingOp):
 
 
 class Transaction:
-    """One optimistic multi-key transaction."""
+    """One optimistic multi-key transaction.
+
+    When a lease table is attached (``attach_leases``), reads are served
+    from valid client-side leases without touching the KV, and a read-only
+    transaction whose every read dependency is covered by a still-valid
+    lease commits without any KV round trip at all (``commit`` revalidates
+    the leases and skips ``_commit`` entirely).  A revoked or expired lease
+    simply falls back to the normal path: the recorded read versions are
+    validated by the KV at commit, so a stale lease can never produce a
+    stale commit — it produces a ``KVConflict`` and a §2.6 replay.
+    """
 
     __slots__ = ("_kv", "_reads", "_writes", "_commutes",
-                 "_commutes_by_key", "committed")
+                 "_commutes_by_key", "committed",
+                 "_lease_tab", "_lease_used", "_phase_hook")
 
     def __init__(self, kv: "WarpKV"):
         self._kv = kv
@@ -126,6 +138,31 @@ class Transaction:
         # queue (bulk paste/concat transactions queue thousands of ops)
         self._commutes_by_key: dict[tuple[str, Any], list] = {}
         self.committed = False
+        self._lease_tab = None            # lease.LeaseTable, duck-typed
+        self._lease_used: dict[tuple[str, Any], int] = {}
+        self._phase_hook = None           # 2PC fault injection (testing)
+
+    def attach_leases(self, table) -> None:
+        """Serve this transaction's reads through a client lease table."""
+        self._lease_tab = table
+
+    def _read_dep(self, space: str, key: Any) -> tuple[int, Any]:
+        """Committed (version, value) for a read dependency: from a valid
+        lease when one is held (zero KV round trips), else from the KV —
+        granting a lease on the way out so the *next* transaction hits."""
+        sk = (space, key)
+        tab = self._lease_tab
+        if tab is not None:
+            hit = tab.lookup(sk)
+            if hit is not None:
+                self._lease_used[sk] = hit[0]
+                return hit
+            tok = tab.begin_grant(sk)
+            ver, val = self._kv._read_versioned(space, key)
+            if tab.commit_grant(sk, tok, ver, val):
+                self._lease_used[sk] = ver
+            return ver, val
+        return self._kv._read_versioned(space, key)
 
     # -- read set -----------------------------------------------------------
     def get(self, space: str, key: Any, default: Any = None) -> Any:
@@ -133,7 +170,7 @@ class Transaction:
         if sk in self._writes:
             v = self._writes[sk]
             return default if v is _TOMBSTONE else v
-        ver, val = self._kv._read_versioned(space, key)
+        ver, val = self._read_dep(space, key)
         # Record the *first* observed version; seeing a different version on
         # a later read of the same key inside one txn is itself a conflict.
         prev = self._reads.setdefault(sk, ver)
@@ -152,7 +189,7 @@ class Transaction:
         sk = (space, key)
         if sk in self._writes:
             return None
-        ver, _ = self._kv._read_versioned(space, key)
+        ver, _ = self._read_dep(space, key)
         prev = self._reads.setdefault(sk, ver)
         if prev != ver:
             raise KVConflict(f"non-repeatable read of {space}:{key!r}")
@@ -220,7 +257,12 @@ class Transaction:
             v = self._writes[sk]
             val = None if v is _TOMBSTONE else v
         else:
-            _, val = self._kv._read_versioned(space, key)
+            tab = self._lease_tab
+            hit = tab.lookup(sk) if tab is not None else None
+            if hit is not None:
+                val = hit[1]       # lease-served snapshot; no dep recorded
+            else:
+                _, val = self._kv._read_versioned(space, key)
         return self._apply_queued(space, key, val, default)
 
     def _apply_queued(self, space: str, key: Any, val: Any,
@@ -231,14 +273,33 @@ class Transaction:
 
     # -- commit -------------------------------------------------------------
     def commit(self) -> None:
+        if self._lease_commit_skip():
+            self.committed = True
+            return
         self._kv._commit(self)
         self.committed = True
+
+    def _lease_commit_skip(self) -> bool:
+        """True iff this txn is read-only, every read dependency was served
+        or covered by a lease, and all those leases revalidate atomically at
+        their recorded versions right now — in which case committing at the
+        KV would be a pure no-op validation pass, so we skip it entirely.
+        Revalidation failing is NOT an abort: we fall through to the normal
+        KV commit, which re-validates against real versions (and conflicts
+        only if the data truly moved, not merely because a lease expired)."""
+        tab = self._lease_tab
+        if tab is None or self._writes or self._commutes or not self._reads:
+            return False
+        if len(self._lease_used) != len(self._reads):
+            return False              # some read dep isn't lease-covered
+        return tab.revalidate(self._lease_used)
 
     def abort(self) -> None:
         self._reads.clear()
         self._writes.clear()
         self._commutes.clear()
         self._commutes_by_key.clear()
+        self._lease_used.clear()
 
 
 class _Deferred:
@@ -305,12 +366,25 @@ class WarpKV:
     # latest-value-per-key snapshot (see the module docstring).
     WAL_TAIL_MAX = 4096
 
-    def __init__(self, group_commit: bool = True):
+    def __init__(self, group_commit: bool = True,
+                 service_time_s: float = 0.0):
         self._spaces: dict[str, dict[Any, _Versioned]] = {}
         self._space_lock = threading.Lock()
         self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
         self.stats = KVStats()
         self.group_commit = group_commit
+        # Modeled per-request service time of ONE metadata server: each
+        # read and each commit pass serializes on a single service lock
+        # while sleeping (GIL released), so a store has bounded capacity
+        # and shard counts / lease hit rates become physically measurable.
+        # 0.0 (the default) adds zero overhead on every path.
+        self._service_time = float(service_time_s)
+        self._service_lock = threading.Lock()
+        # Pre-apply lease barrier: called with the keys a commit is about
+        # to mutate, under the stripe locks, BEFORE the first store — so a
+        # lease holder that revalidates successfully is guaranteed not to
+        # have observed any part of an in-flight commit (see core/lease.py).
+        self._inval_listeners: list[Callable[[list], None]] = []
         self._commit_queue: List[_CommitReq] = []
         self._commit_queue_lock = threading.Lock()
         self._commit_mutex = threading.Lock()
@@ -337,7 +411,14 @@ class WarpKV:
     def _stripe_of(self, space: str, key: Any) -> int:
         return hash((space, key)) % self.N_STRIPES
 
+    def _service_delay(self) -> None:
+        """One modeled server round trip (no-op when service time is 0)."""
+        if self._service_time:
+            with self._service_lock:
+                time.sleep(self._service_time)
+
     def _read_versioned(self, space: str, key: Any) -> tuple[int, Any]:
+        self._service_delay()
         self.stats.add(gets=1)
         sp = self._space(space)
         with self._stripes[self._stripe_of(space, key)]:
@@ -407,6 +488,7 @@ class WarpKV:
         commit would have.  Failures are isolated per transaction — each
         request carries its own exception back to its waiting committer.
         """
+        self._service_delay()        # one modeled round trip per pass
         touched: set[tuple[str, Any]] = set()
         for req in reqs:
             t = req.txn
@@ -435,6 +517,17 @@ class WarpKV:
 
     def _apply_txn_locked(self, txn: Transaction) -> None:
         """Validate and apply one transaction; caller holds its stripes."""
+        self._apply_staged(txn, self._validate_and_stage(txn))
+
+    def _validate_and_stage(self, txn) -> list:
+        """Prepare phase: validate read versions and commutative
+        preconditions, compute commute results against the post-write view
+        — WITHOUT mutating anything.  Caller holds this shard's stripes
+        for every touched key.  Raises on conflict; on success the returned
+        staged list can be applied with ``_apply_staged`` (which cannot
+        fail), so validate-everywhere-then-apply-everywhere is exactly the
+        2PC contract ``mdshard.ShardedKV`` needs.  ``txn`` is duck-typed:
+        anything carrying ``_reads``/``_writes``/``_commutes``."""
         if self._fail_next_commits > 0:
             self._fail_next_commits -= 1
             self.stats.add(aborts=1)
@@ -469,6 +562,24 @@ class WarpKV:
             new, result = op.apply(cur)
             view[sk] = new
             staged.append((space, key, new, result, op, cell))
+        return staged
+
+    def _apply_staged(self, txn, staged: list) -> None:
+        """Apply phase: make a validated transaction's effects visible.
+        Caller holds the stripes; this cannot fail (all validation already
+        happened in ``_validate_and_stage``)."""
+        # Lease barrier first: revoke leases on every key about to change
+        # BEFORE any store, so no lease can outlive the pre-commit value
+        # while part of this commit is already visible.
+        if self._inval_listeners:
+            changing = list(txn._writes)
+            for space, key, new, _result, _op, _cell in staged:
+                ent = self._space(space).get(key)
+                if ent is None or ent.value != new:
+                    changing.append((space, key))
+            if changing:
+                for fn in self._inval_listeners:
+                    fn(changing)
         # 3. apply buffered writes.  Deletes keep a versioned tombstone
         # (value None) so a delete+recreate can never satisfy a stale
         # reader's version check (no ABA).
@@ -500,6 +611,31 @@ class WarpKV:
             cell.append(result)
             self.stats.add(commutes=1)
         self.stats.add(commits=1)
+
+    # -- shard hooks (used by mdshard.ShardedKV) ----------------------------
+    def lock_keys(self, touched: Iterable[tuple]) -> list[int]:
+        """Acquire the stripe locks covering ``touched`` in canonical
+        (sorted) order and return the stripe ids for ``unlock_keys``."""
+        stripe_ids = sorted({self._stripe_of(s, k) for s, k in touched})
+        for sid in stripe_ids:
+            self._stripes[sid].acquire()
+        return stripe_ids
+
+    def unlock_keys(self, stripe_ids: list[int]) -> None:
+        for sid in reversed(stripe_ids):
+            self._stripes[sid].release()
+
+    def add_invalidation_listener(self, fn: Callable[[list], None]) -> None:
+        """Register a pre-apply lease barrier: ``fn(keys)`` is called under
+        the commit's stripe locks with every (space, key) about to change,
+        before the first store (see ``_apply_staged``)."""
+        self._inval_listeners.append(fn)
+
+    def colocated_inode_id(self, path: str, raw_id: int) -> int:
+        """Map a unique raw inode id to the id actually stored.  A single
+        shard has no placement constraint, so this is the identity; the
+        sharded KV overrides it to colocate an inode with its path."""
+        return raw_id
 
     # -- replication hooks ---------------------------------------------------
     def _log(self, space: str, key: Any, value: Any, version: int) -> None:

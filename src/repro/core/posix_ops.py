@@ -65,9 +65,9 @@ class PosixOps:
     def mkfs(self) -> None:
         """Create the root directory and GC directory (idempotent)."""
         from .client import GC_DIR
-        txn = self.kv.begin()
+        txn = self._begin_txn()
         if txn.get("paths", "/") is None:
-            root = Inode(self._alloc_inode_id(), "dir",
+            root = Inode(self._alloc_inode_id_for("/"), "dir",
                          mtime=self.time_fn(),
                          region_size=self.cluster.region_size)
             txn.put("paths", "/", root.inode_id)
@@ -316,7 +316,8 @@ class PosixOps:
         pino = ctx.txn.get("inodes", parent_id)
         if pino.kind != "dir":
             raise NotADirectory(parent)
-        ino_id = op.artifacts.setdefault("ino", self._alloc_inode_id())
+        ino_id = op.artifacts.setdefault(
+            "ino", self._alloc_inode_id_for(path))
         now = op.artifacts.setdefault("mtime", self.time_fn())
         ino = Inode(ino_id, "file", mtime=now,
                     region_size=region_size or self.cluster.region_size)
@@ -430,7 +431,8 @@ class PosixOps:
         pino = ctx.txn.get("inodes", parent_id)
         if pino.kind != "dir":
             raise NotADirectory(parent)
-        ino_id = op.artifacts.setdefault("ino", self._alloc_inode_id())
+        ino_id = op.artifacts.setdefault(
+            "ino", self._alloc_inode_id_for(path))
         now = op.artifacts.setdefault("mtime", self.time_fn())
         ino = Inode(ino_id, "dir", mtime=now,
                     region_size=self.cluster.region_size)

@@ -643,7 +643,7 @@ class SliceOps:
         for attempt in range(self.MAX_RETRIES):
             if attempt:
                 self.stats.add(txn_retries=1)
-            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
             try:
                 ino = self._inode(ctx, inode_id)
                 length = self._file_length(ctx, ino)
@@ -679,7 +679,7 @@ class SliceOps:
         for attempt in range(self.MAX_RETRIES):
             if attempt:
                 self.stats.add(txn_retries=1)
-            ctx = _Ctx(self.kv.begin(), first=(attempt == 0))
+            ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
             try:
                 n = self._writev_at(ctx, op, inode_id, offset, chunks,
                                     key="wv", defer=False)

@@ -113,27 +113,78 @@ def make_flaky_server(cluster, server_id: int,
 
 
 class FlakyKV:
-    """Proxy around ``WarpKV`` that fails chosen commits by number.
+    """Proxy around ``WarpKV``/``ShardedKV`` that fails chosen commits —
+    and, on a sharded KV, chosen 2PC *phases* — by number.
 
     ``fail_commits`` holds 1-based commit-attempt numbers (counted across
     the proxy) that raise ``KVConflict`` *before* the real commit runs —
     the filesystem is untouched, exactly the HyperDex-abort contract the
-    §2.6 replay layer assumes.  Transactions begun through the proxy route
-    their commits here; install with ``cluster.kv = FlakyKV(cluster.kv)``
-    before creating clients.
+    §2.6 replay layer assumes.
+
+    For cross-shard transactions on a ``mdshard.ShardedKV``:
+
+      * ``fail_prepares`` — 1-based per-shard *prepare* call numbers
+        (counted across the proxy) that raise ``KVConflict`` right before
+        that shard validates.  Nothing has been applied anywhere yet, so
+        the injected abort must leave nothing visible on ANY shard.
+      * ``fail_applies`` — 1-based *commit-point* numbers (one per
+        cross-shard transaction) that raise ``mdshard.PhaseCrash`` between
+        prepare and apply, i.e. a coordinator crash.  ``apply_resolution``
+        is what crash recovery reads from the decision record: ``"abort"``
+        rolls everything back (retryable ``KVConflict``), ``"commit"``
+        rolls forward and the commit completes.
+
+    Transactions begun through the proxy route their commits here; install
+    with ``cluster.kv = FlakyKV(cluster.kv)`` before creating clients.
     """
 
-    def __init__(self, inner, fail_commits: Iterable[int] = ()):
+    def __init__(self, inner, fail_commits: Iterable[int] = (),
+                 fail_prepares: Iterable[int] = (),
+                 fail_applies: Iterable[int] = (),
+                 apply_resolution: str = "abort"):
         self._inner = inner
         self._fail_commits = set(fail_commits)
+        self._fail_prepares = set(fail_prepares)
+        self._fail_applies = set(fail_applies)
+        if apply_resolution not in ("abort", "commit"):
+            raise ValueError("apply_resolution must be 'abort' or 'commit'")
+        self._apply_resolution = apply_resolution
         self._lock = threading.Lock()
         self.commit_calls: int = 0
+        self.prepare_calls: int = 0
+        self.decide_calls: int = 0
         self.injected: int = 0
 
     def begin(self):
         txn = self._inner.begin()
         txn._kv = self           # commits route through _commit below
+        if self._fail_prepares or self._fail_applies:
+            txn._phase_hook = self._on_phase
         return txn
+
+    def _on_phase(self, phase: str, pos: int) -> None:
+        """Called by the 2PC coordinator before each shard's prepare and at
+        the commit point (``decide``)."""
+        if phase == "prepare":
+            with self._lock:
+                self.prepare_calls += 1
+                hit = self.prepare_calls in self._fail_prepares
+                if hit:
+                    self.injected += 1
+                    n = self.prepare_calls
+            if hit:
+                raise KVConflict(
+                    f"injected prepare failure: prepare #{n} "
+                    f"(shard position {pos})")
+        elif phase == "decide":
+            with self._lock:
+                self.decide_calls += 1
+                hit = self.decide_calls in self._fail_applies
+                if hit:
+                    self.injected += 1
+            if hit:
+                from .mdshard import PhaseCrash
+                raise PhaseCrash(self._apply_resolution)
 
     def _commit(self, txn) -> None:
         with self._lock:
@@ -151,9 +202,13 @@ class FlakyKV:
         return getattr(self._inner, name)
 
 
-def make_flaky_kv(cluster, fail_commits: Iterable[int]) -> FlakyKV:
+def make_flaky_kv(cluster, fail_commits: Iterable[int] = (),
+                  fail_prepares: Iterable[int] = (),
+                  fail_applies: Iterable[int] = (),
+                  apply_resolution: str = "abort") -> FlakyKV:
     """Swap ``cluster.kv`` for a ``FlakyKV``; affects clients created
     AFTER this call (clients capture ``cluster.kv`` at construction)."""
-    flaky = FlakyKV(cluster.kv, fail_commits)
+    flaky = FlakyKV(cluster.kv, fail_commits, fail_prepares, fail_applies,
+                    apply_resolution)
     cluster.kv = flaky
     return flaky

@@ -1,0 +1,283 @@
+"""Leased client metadata caching (core/lease): zero-round-trip hot
+re-reads, revocation on writes, staleness safety, expiry, the grant-race
+protocol, and shared plan-cache eviction."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (Cluster, LeaseHub, LeaseTable, TransactionAborted,
+                        WarpKV)
+
+TTL = 60.0
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"), lease_ttl=TTL)
+    yield c
+    c.close()
+
+
+def _mk(cl, path, data=b"hello world"):
+    fd = cl.open(path, "w")
+    cl.write(fd, data)
+    cl.close(fd)
+
+
+def _kv_reqs(cluster):
+    s = cluster.kv.stats.snapshot()
+    return s["gets"], s["commits"]
+
+
+# ----------------------------------------------------------- hot re-reads
+def test_hot_stat_zero_kv_round_trips(cluster):
+    cl = cluster.client()
+    _mk(cl, "/hot")
+    cl.stat("/hot")                        # warm: grants the leases
+    before = _kv_reqs(cluster)
+    hits0 = cluster.lease_hub.stats.lease_hits
+    for _ in range(20):
+        st = cl.stat("/hot")
+        assert st["size"] == len(b"hello world")
+    after = _kv_reqs(cluster)
+    assert after == before, \
+        f"leased hot re-reads hit the KV: gets/commits {before} -> {after}"
+    assert cluster.lease_hub.stats.lease_hits > hits0
+    assert cluster.lease_hub.stats.lease_commit_skips > 0
+
+
+def test_leases_off_by_default(tmp_path):
+    c = Cluster(n_servers=1, data_dir=str(tmp_path / "d"))
+    try:
+        assert c.lease_hub is None
+        assert c.shared_plan_cache is None
+        cl = c.client()
+        _mk(cl, "/f")
+        cl.stat("/f")
+        before = _kv_reqs(c)
+        cl.stat("/f")
+        assert _kv_reqs(c) != before       # every stat round-trips
+        assert "leases" not in c.total_stats()
+    finally:
+        c.close()
+
+
+# ------------------------------------------------------------- revocation
+def test_write_by_other_client_revokes_and_reader_sees_fresh(cluster):
+    ca, cb = cluster.client(), cluster.client()
+    _mk(ca, "/x", b"v1")
+    fd = ca.open("/x", "r")
+    assert ca.read(fd) == b"v1"            # warms ca's leases on /x
+    ca.close(fd)
+    revs0 = cluster.lease_hub.stats.lease_revocations
+    fd = cb.open("/x", "rw")
+    cb.pwrite(fd, b"v2", 0)
+    cb.close(fd)
+    assert cluster.lease_hub.stats.lease_revocations > revs0
+    fd = ca.open("/x", "r")
+    assert ca.read(fd) == b"v2", "reader served stale leased metadata"
+    ca.close(fd)
+
+
+def test_stale_lease_never_commits_stale(cluster):
+    """A transaction that observed leased metadata which a concurrent
+    writer then changed must NOT commit on the stale snapshot: the commit
+    falls through to the KV, conflicts, and the §2.6 replay — seeing a
+    different outcome — aborts to the application."""
+    ca, cb = cluster.client(), cluster.client()
+    _mk(ca, "/shared", b"AAAA")
+    _mk(ca, "/out", b"....")
+    fd = ca.open("/shared", "r")
+    ca.read(fd)
+    ca.close(fd)                           # leases on /shared now warm
+    with pytest.raises(TransactionAborted):
+        with ca.transaction():
+            fd = ca.open("/shared", "r")
+            observed = ca.read(fd)         # app observes (leased) AAAA
+            ca.close(fd)
+            assert observed == b"AAAA"
+            # concurrent writer commits BBBB mid-transaction
+            wfd = cb.open("/shared", "rw")
+            cb.pwrite(wfd, b"BBBB", 0)
+            cb.close(wfd)
+            ofd = ca.open("/out", "rw")
+            ca.pwrite(ofd, b"obs=" + observed, 0)
+            ca.close(ofd)
+    # the aborted transaction left no trace
+    fd = ca.open("/out", "r")
+    assert ca.read(fd) == b"...."
+    ca.close(fd)
+
+
+def test_lease_expiry_forces_refetch(cluster):
+    cl = cluster.client()
+    _mk(cl, "/exp")
+    cl.stat("/exp")
+    before = _kv_reqs(cluster)
+    cl.stat("/exp")
+    assert _kv_reqs(cluster) == before     # leased while fresh
+    # jump the hub clock past every TTL
+    real = cluster.lease_hub.clock
+    cluster.lease_hub.clock = lambda: real() + TTL + 1
+    exp0 = cluster.lease_hub.stats.lease_expirations
+    st = cl.stat("/exp")
+    assert st["size"] == len(b"hello world")
+    assert cluster.lease_hub.stats.lease_expirations > exp0
+    assert _kv_reqs(cluster) != before, \
+        "expired leases must fall back to real KV reads"
+
+
+def test_grant_race_killed_placeholder_never_activates():
+    """The two-step grant protocol: a revocation landing between
+    ``begin_grant`` and ``commit_grant`` kills the placeholder, so a lease
+    can never be born from a read that predates the revoking commit."""
+    hub = LeaseHub(WarpKV(), ttl=TTL)
+    tab = LeaseTable(hub)
+    sk = ("inodes", 7)
+    tok = tab.begin_grant(sk)
+    tab.revoke([sk])                       # writer's barrier fires here
+    assert tab.commit_grant(sk, tok, version=3, value="stale") is False
+    assert tab.lookup(sk) is None
+    assert hub.stats.lease_grants == 0
+    # an untouched grant does activate
+    tok2 = tab.begin_grant(sk)
+    assert tab.commit_grant(sk, tok2, version=4, value="fresh") is True
+    assert tab.lookup(sk) == (4, "fresh")
+    assert hub.stats.lease_grants == 1
+
+
+def test_lease_table_lru_bounded():
+    hub = LeaseHub(WarpKV(), ttl=TTL)
+    tab = LeaseTable(hub)
+    tab.MAX_LEASES = 8
+    for i in range(32):
+        tok = tab.begin_grant(("inodes", i))
+        tab.commit_grant(("inodes", i), tok, version=1, value=i)
+    assert len(tab) <= 8
+    assert tab.lookup(("inodes", 31)) == (1, 31)     # newest survives
+    assert tab.lookup(("inodes", 0)) is None         # oldest evicted
+
+
+def test_revalidate_rejects_version_skew():
+    hub = LeaseHub(WarpKV(), ttl=TTL)
+    tab = LeaseTable(hub)
+    sk = ("paths", "/p")
+    tok = tab.begin_grant(sk)
+    tab.commit_grant(sk, tok, version=5, value=1)
+    assert tab.revalidate({sk: 5}) is True
+    assert tab.revalidate({sk: 4}) is False
+    assert tab.revalidate({sk: 5, ("paths", "/q"): 1}) is False
+
+
+# ---------------------------------------------------- shared plan cache
+def test_plan_cache_shared_across_clients(cluster):
+    ca, cb = cluster.client(), cluster.client()
+    assert ca._plan_cache is cb._plan_cache \
+        is cluster.shared_plan_cache
+    payload = b"p" * 4096
+    _mk(ca, "/plans", payload)
+    fd = ca.open("/plans", "r")
+    assert ca.preadv(fd, [4096], 0) == [payload]   # installs the plan
+    ca.close(fd)
+    assert ca.stats.plan_cache_misses > 0
+    misses_b0 = cb.stats.plan_cache_misses
+    fd = cb.open("/plans", "r")
+    assert cb.preadv(fd, [4096], 0) == [payload]   # same (inode, ranges)
+    cb.close(fd)
+    assert cb.stats.plan_cache_hits > 0, \
+        "client B never hit the plan client A installed"
+    assert cb.stats.plan_cache_misses == misses_b0
+
+
+def test_plan_cache_dropped_on_region_write(cluster):
+    ca, cb = cluster.client(), cluster.client()
+    payload = b"q" * 4096
+    _mk(ca, "/pinv", payload)
+    fd = ca.open("/pinv", "r")
+    assert ca.preadv(fd, [4096], 0) == [payload]   # plan now cached
+    ca.close(fd)
+    assert cluster.shared_plan_cache.get((ca.stat("/pinv")["inode"],
+                                          ((0, 4096),))) is not None
+    inv0 = cluster.lease_hub.stats.plan_invalidations
+    fd = cb.open("/pinv", "rw")
+    cb.pwrite(fd, b"Z" * 128, 0)
+    cb.close(fd)
+    assert cluster.lease_hub.stats.plan_invalidations > inv0, \
+        "region write did not evict the shared plan cache"
+    fd = ca.open("/pinv", "r")
+    assert ca.read(fd) == b"Z" * 128 + payload[128:]
+    ca.close(fd)
+
+
+# --------------------------------------------------- leases x sharding
+def test_leases_on_sharded_plane_zero_round_trips(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"),
+                n_meta_shards=2, lease_ttl=TTL)
+    try:
+        cl = c.client()
+        for i in range(6):
+            _mk(cl, f"/sh{i}")
+            cl.stat(f"/sh{i}")
+        before = _kv_reqs(c)
+        for _ in range(5):
+            for i in range(6):
+                cl.stat(f"/sh{i}")
+        assert _kv_reqs(c) == before
+        ts = c.total_stats()
+        assert ts["leases"]["lease_hits"] > 0
+        assert len(ts["kv_shards"]) == 2
+    finally:
+        c.close()
+
+
+def test_concurrent_readers_and_writer_converge(cluster):
+    """Hammer leased stats from reader threads while a writer keeps
+    appending: no stale size is ever observed after the writer finishes."""
+    cl = cluster.client()
+    _mk(cl, "/conv", b"")
+    stop = threading.Event()
+    errs = []
+
+    def reader():
+        c = cluster.client()
+        try:
+            while not stop.is_set():
+                c.stat("/conv")
+        except Exception as e:            # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=reader) for _ in range(3)]
+    for t in ts:
+        t.start()
+    w = cluster.client()
+    fd = w.open("/conv", "rw")
+    total = 0
+    for i in range(20):
+        w.pwrite(fd, b"x" * 50, total)
+        total += 50
+    w.close(fd)
+    time.sleep(0.01)
+    stop.set()
+    for t in ts:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert not errs
+    fresh = cluster.client()
+    assert fresh.stat("/conv")["size"] == total
+    assert cl.stat("/conv")["size"] == total, \
+        "long-lived client stuck on a stale lease"
+
+
+def test_lease_stats_in_total_stats(cluster):
+    cl = cluster.client()
+    _mk(cl, "/ts")
+    cl.stat("/ts")
+    cl.stat("/ts")
+    ls = cluster.total_stats()["leases"]
+    for key in ("lease_grants", "lease_hits", "lease_revocations",
+                "lease_expirations", "lease_commit_skips",
+                "plan_invalidations"):
+        assert key in ls
+    assert ls["lease_grants"] > 0
+    assert ls["lease_hits"] > 0

@@ -1,0 +1,405 @@
+"""Sharded metadata plane (core/mdshard): routing, single-shard fast path,
+cross-shard 2PC atomicity under fault injection, subscribe fan-in."""
+import threading
+
+import pytest
+
+from repro.core import (Cluster, KVConflict, ShardedKV, TransactionAborted,
+                        WarpKV)
+from repro.core.testing import make_flaky_kv
+
+N_SHARDS = 4
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"),
+                n_meta_shards=N_SHARDS)
+    yield c
+    c.close()
+
+
+def _paths_on_distinct_shards(kv, n=2, prefix="/x"):
+    """Deterministically find n paths whose shards all differ."""
+    out, seen = [], set()
+    i = 0
+    while len(out) < n:
+        p = f"{prefix}{i}"
+        s = kv.shard_index("paths", p)
+        if s not in seen:
+            seen.add(s)
+            out.append(p)
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------- routing
+def test_default_cluster_uses_plain_warpkv(tmp_path):
+    c = Cluster(n_servers=1, data_dir=str(tmp_path / "d"))
+    try:
+        # n_meta_shards=1 must be the EXACT single-store fast path — the
+        # plain WarpKV object, not a 1-shard router in front of it.
+        assert isinstance(c.kv, WarpKV)
+        assert "kv_shards" not in c.total_stats()
+    finally:
+        c.close()
+
+
+def test_knob_validation(tmp_path):
+    with pytest.raises(ValueError):
+        Cluster(n_servers=1, data_dir=str(tmp_path / "a"), n_meta_shards=0)
+    with pytest.raises(ValueError):
+        Cluster(n_servers=1, data_dir=str(tmp_path / "b"), lease_ttl=0)
+    with pytest.raises(ValueError):
+        Cluster(n_servers=1, data_dir=str(tmp_path / "c"),
+                kv_service_time=-1)
+
+
+def test_inode_colocated_with_path(cluster):
+    """Created files land their inode (and regions) on the path's shard,
+    so per-file transactions are single-shard by construction."""
+    cl = cluster.client()
+    for i in range(12):
+        p = f"/colo{i}"
+        fd = cl.open(p, "w")
+        cl.write(fd, b"data")
+        cl.close(fd)
+        ino = cluster.kv.get("paths", p)
+        assert cluster.kv.shard_index("inodes", ino) \
+            == cluster.kv.shard_index("paths", p)
+        assert cluster.kv.shard_index("regions", (ino, 0)) \
+            == cluster.kv.shard_index("paths", p)
+
+
+def test_single_file_ops_stay_single_shard(cluster):
+    """The hot per-file loop takes the group-commit path: 2PC counters
+    must not move at all."""
+    cl = cluster.client()
+    fd = cl.open("/hot", "w")
+    cl.write(fd, b"x" * 1000)
+    cl.close(fd)
+    before = cluster.kv.stats_2pc.snapshot()
+    fd = cl.open("/hot", "rw")
+    for i in range(10):
+        cl.pwrite(fd, b"y" * 100, i * 100)
+        assert cl.pread(fd, 100, i * 100) == b"y" * 100
+        cl.stat("/hot")
+    cl.close(fd)
+    after = cluster.kv.stats_2pc.snapshot()
+    assert after["cross_shard_commits"] == before["cross_shard_commits"]
+    assert after["prepare_aborts"] == before["prepare_aborts"]
+    assert after["single_shard_commits"] > before["single_shard_commits"]
+
+
+def test_sharded_end_to_end_correctness(cluster):
+    cl = cluster.client()
+    blobs = {}
+    for i in range(10):
+        p = f"/e2e{i}"
+        blobs[p] = (f"payload-{i}".encode()) * 50
+        fd = cl.open(p, "w")
+        cl.write(fd, blobs[p])
+        cl.close(fd)
+    cl2 = cluster.client()
+    for p, want in blobs.items():
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == want
+        cl2.close(fd)
+    # files spread over more than one shard (balanced hash routing)
+    used = {cluster.kv.shard_index("paths", p) for p in blobs}
+    assert len(used) > 1
+
+
+# ------------------------------------------------------------- 2PC commits
+def test_cross_shard_txn_commits_atomically(cluster):
+    cl = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl.open(p, "w")
+        cl.write(fd, b"old")
+        cl.close(fd)
+    before = cluster.kv.stats_2pc.snapshot()
+    with cl.transaction():
+        for p in (pa, pb):
+            fd = cl.open(p, "rw")
+            cl.pwrite(fd, b"NEW", 0)
+            cl.close(fd)
+    after = cluster.kv.stats_2pc.snapshot()
+    assert after["cross_shard_commits"] > before["cross_shard_commits"]
+    cl2 = cluster.client()
+    for p in (pa, pb):
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == b"NEW"
+        cl2.close(fd)
+
+
+def _write_both(client, pa, pb, payload):
+    with client.transaction():
+        for p in (pa, pb):
+            fd = client.open(p, "rw")
+            client.pwrite(fd, payload, 0)
+            client.close(fd)
+
+
+def test_prepare_failure_retries_and_leaves_consistent_state(cluster):
+    """A prepare failure on either shard position aborts cleanly (nothing
+    applied anywhere), surfaces as a retryable KVConflict, and the §2.6
+    replay commits the transaction on a later attempt."""
+    cl0 = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl0.open(p, "w")
+        cl0.write(fd, b"old")
+        cl0.close(fd)
+    # fail prepare #1 (first shard of attempt 1) and prepare #3 (second
+    # shard of attempt 2) — a mid-sequence abort with locks already held
+    flaky = make_flaky_kv(cluster, fail_prepares={1, 3})
+    cl = cluster.client()
+    _write_both(cl, pa, pb, b"NEW")
+    assert flaky.injected == 2
+    assert cluster.kv.stats_2pc.prepare_aborts >= 2
+    cl2 = cluster.client()
+    for p in (pa, pb):
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == b"NEW"
+        cl2.close(fd)
+
+
+def test_prepare_failure_exhausts_retries_nothing_visible(cluster):
+    """When every attempt's prepare fails, the transaction aborts to the
+    application and NO shard shows any effect — all-or-nothing."""
+    cl0 = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl0.open(p, "w")
+        cl0.write(fd, b"old")
+        cl0.close(fd)
+    make_flaky_kv(cluster, fail_prepares=set(range(1, 200)))
+    cl = cluster.client()
+    with pytest.raises(TransactionAborted):
+        _write_both(cl, pa, pb, b"NEW")
+    cl2 = cluster.client()
+    for p in (pa, pb):
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == b"old", \
+            "aborted 2PC transaction leaked state onto a shard"
+        cl2.close(fd)
+
+
+def test_crash_between_prepare_and_apply_resolved_abort(cluster):
+    """Coordinator crash at the commit point with an 'abort' decision:
+    fully rolled back, then the replay commits cleanly."""
+    cl0 = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl0.open(p, "w")
+        cl0.write(fd, b"old")
+        cl0.close(fd)
+    flaky = make_flaky_kv(cluster, fail_applies={1},
+                          apply_resolution="abort")
+    cl = cluster.client()
+    _write_both(cl, pa, pb, b"NEW")
+    assert flaky.injected == 1
+    cl2 = cluster.client()
+    for p in (pa, pb):
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == b"NEW"
+        cl2.close(fd)
+
+
+def test_crash_between_prepare_and_apply_resolved_commit(cluster):
+    """Coordinator crash at the commit point whose decision record says
+    COMMIT: recovery rolls forward and the transaction applies exactly
+    once on every shard — never partially."""
+    cl0 = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl0.open(p, "w")
+        cl0.write(fd, b"old")
+        cl0.close(fd)
+    flaky = make_flaky_kv(cluster, fail_applies={1},
+                          apply_resolution="commit")
+    cl = cluster.client()
+    _write_both(cl, pa, pb, b"NEW")
+    assert flaky.injected == 1
+    assert cluster.kv.stats_2pc.recovered_commits == 1
+    cl2 = cluster.client()
+    for p in (pa, pb):
+        fd = cl2.open(p, "r")
+        assert cl2.read(fd) == b"NEW"
+        cl2.close(fd)
+
+
+def test_concurrent_cross_shard_commits_no_deadlock(cluster):
+    """Cross-shard committers + single-shard group commits running
+    concurrently: global (shard, stripe) lock order means no deadlock and
+    every write lands."""
+    cl0 = cluster.client()
+    pa, pb = _paths_on_distinct_shards(cluster.kv)
+    for p in (pa, pb):
+        fd = cl0.open(p, "w")
+        cl0.write(fd, b"0" * 8)
+        cl0.close(fd)
+    errs = []
+
+    def cross(i):
+        try:
+            c = cluster.client()
+            for _ in range(5):
+                _write_both(c, pa, pb, f"c{i:02d}data".encode())
+        except Exception as e:          # noqa: BLE001
+            errs.append(e)
+
+    def single(i):
+        try:
+            c = cluster.client()
+            fd = c.open(f"/solo{i}", "w")
+            for _ in range(10):
+                c.write(fd, b"z" * 64)
+            c.close(fd)
+        except Exception as e:          # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=cross, args=(i,)) for i in range(3)] \
+        + [threading.Thread(target=single, args=(i,)) for i in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+        assert not t.is_alive(), "deadlocked cross-shard commit"
+    assert not errs
+    # both files always end at the same value (atomicity under races)
+    cl2 = cluster.client()
+    fd = cl2.open(pa, "r")
+    va = cl2.read(fd)
+    cl2.close(fd)
+    fd = cl2.open(pb, "r")
+    vb = cl2.read(fd)
+    cl2.close(fd)
+    assert va == vb
+
+
+# ------------------------------------------------------- subscribe fan-in
+def test_sharded_wal_bounded_and_subscribe_converges():
+    """The PR 5 bounded-WAL replay contract survives sharding: bounded
+    per-shard WAL memory, late subscriber converges on the latest value
+    per key, listener stays live — through the fan-in."""
+    kv = ShardedKV(3)
+    for sh in kv.shards:
+        sh.WAL_TAIL_MAX = 32
+    keys = [f"k{i}" for i in range(5)]
+    for round_ in range(200):
+        for k in keys:
+            kv.put("s", k, (k, round_))
+    for sh in kv.shards:
+        assert len(sh._wal_tail) <= 32
+    assert kv.wal_entries() <= 3 * 32 + len(keys), \
+        "WAL memory must be O(keyspace + tail) per shard, not O(history)"
+
+    seen = {}
+    kv.subscribe(lambda sp, k, v, ver: seen.__setitem__((sp, k), v))
+    for k in keys:
+        assert seen[("s", k)] == (k, 199), \
+            "a late subscriber must converge on the latest value per key"
+    kv.put("s", "k0", "fresh")
+    assert seen[("s", "k0")] == "fresh"
+
+
+def test_fanin_per_shard_sequence_numbers_ordered():
+    """with_meta delivery: per-shard seqs are 1-based and gap-free, and
+    each shard's events arrive in its commit order."""
+    kv = ShardedKV(4)
+    events = []
+    kv.subscribe(
+        lambda sp, k, v, ver, shard, seq: events.append((shard, seq, k, v)),
+        with_meta=True)
+    for i in range(50):
+        kv.put("s", f"k{i}", i)
+    per_shard = {}
+    for shard, seq, _k, _v in events:
+        per_shard.setdefault(shard, []).append(seq)
+    assert sum(len(v) for v in per_shard.values()) == len(events) >= 50
+    for shard, seqs in per_shard.items():
+        assert seqs == list(range(1, len(seqs) + 1)), \
+            f"shard {shard} fan-in seqs not contiguous: {seqs[:10]}"
+
+
+def test_fanin_replay_is_deterministic():
+    """Two identically-populated sharded KVs replay the same event order
+    to a late subscriber (shard-by-shard, snapshot then tail)."""
+    def build():
+        kv = ShardedKV(3)
+        for i in range(30):
+            kv.put("s", f"k{i}", i * 7)
+        got = []
+        kv.subscribe(lambda sp, k, v, ver: got.append((sp, k, v, ver)))
+        return got
+
+    assert build() == build()
+
+
+# ------------------------------------------------------------------ stats
+def test_total_stats_sections(cluster):
+    cl = cluster.client()
+    fd = cl.open("/st", "w")
+    cl.write(fd, b"abc")
+    cl.close(fd)
+    ts = cluster.total_stats()
+    assert len(ts["kv_shards"]) == N_SHARDS
+    for snap in ts["kv_shards"]:
+        assert "commits" in snap and "gets" in snap
+    md = ts["mdshard"]
+    for key in ("single_shard_commits", "cross_shard_commits",
+                "prepare_aborts", "recovered_commits"):
+        assert key in md
+    # the aggregate "kv" section equals the per-shard sum
+    assert ts["kv"]["commits"] == sum(s["commits"] for s in ts["kv_shards"])
+
+
+def test_gc_walks_all_shards(cluster):
+    from repro.core import GarbageCollector
+
+    cl = cluster.client()
+    for i in range(8):
+        fd = cl.open(f"/gcf{i}", "w")
+        for _ in range(6):
+            cl.write(fd, b"frag" * 64)
+        cl.close(fd)
+    gc = GarbageCollector(cluster)
+    stats = gc.compact_all()
+    # regions from every shard were visited (the walk isn't single-shard)
+    region_shards = {cluster.kv.shard_index("regions", k)
+                     for k in cluster.kv.keys("regions")}
+    assert len(region_shards) > 1
+    assert stats["regions"] + stats["noop"] > 0
+    live = gc.scan_filesystem()
+    assert sum(len(v) for v in live.values()) > 0
+
+
+def test_inject_aborts_on_sharded_kv(cluster):
+    cl = cluster.client()
+    fd = cl.open("/inj", "w")
+    cl.write(fd, b"first")
+    cl.close(fd)
+    cluster.kv.inject_aborts(1)
+    retries0 = cl.stats.txn_retries
+    fd = cl.open("/inj", "rw")
+    cl.pwrite(fd, b"SECOND", 0)
+    cl.close(fd)
+    assert cl.stats.txn_retries > retries0
+    fd = cl.open("/inj", "r")
+    assert cl.read(fd) == b"SECOND"
+    cl.close(fd)
+
+
+def test_plain_kvconflict_retry_still_works_sharded(cluster):
+    """FlakyKV's classic whole-commit injection composes with ShardedKV."""
+    flaky = make_flaky_kv(cluster, fail_commits={2})
+    cl = cluster.client()
+    fd = cl.open("/fc", "w")
+    cl.write(fd, b"payload")
+    cl.close(fd)
+    assert flaky.injected == 1
+    fd = cl.open("/fc", "r")
+    assert cl.read(fd) == b"payload"
+    cl.close(fd)
