@@ -36,6 +36,8 @@ BENCHES = {
     "gc": ("Fig 15 (garbage-collection rate)", "benchmarks.gc_bench"),
     "append": ("§2.5 (concurrent relative appends)",
                "benchmarks.append_bench"),
+    "wlog": ("streaming multi-producer log over one file (§2.5 + "
+             "bounded-WAL subscribe tailing)", "benchmarks.wlog_bench"),
     "pipeline": ("beyond-paper (shuffle/checkpoint/reshard zero-copy)",
                  "benchmarks.pipeline_bench"),
     "pipeline_overlap": ("async I/O runtime (sync vs async prefetch "

@@ -1,0 +1,169 @@
+"""Streaming multi-producer log (``core.wlog``): the workload the
+unserialized append path opens up.
+
+N producers append length-prefixed records to ONE log file concurrently —
+every batch is a §2.5 commutative relative append, so producers never
+conflict — while M consumers tail the committed prefix through the
+bounded-WAL ``subscribe`` stream (no length polling).  A further LATE
+consumer attaches only after production finished and must catch up purely
+from the WAL snapshot replay.
+
+Asserted, per cluster configuration (metadata shards 1/2 x leases off/on):
+
+  * every consumer delivers exactly N*R records, in per-producer FIFO
+    order, with a byte-identical delivery stream (same payloads, same
+    file order) across all consumers — including the late one;
+  * consumers end exactly at the file's committed length.
+
+``kv_conflicts`` is reported, not asserted zero: producers never conflict
+with each other (§2.5 — the append bench asserts that in isolation), but
+a tailing consumer's ``pread`` carries a read dependency on the region,
+so a read racing a commit occasionally revalidates.  Those retries are
+invisible to delivery (the counts/digests above still hold exactly).
+
+Across configurations the file-order interleaving legitimately differs,
+so the cross-config check is the order-independent ``content_digest`` of
+the delivered record multiset: all four configurations must deliver the
+exact same records, byte for byte.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core.wlog import WtfLog, content_digest
+
+from .common import Scale, save_result, wtf_cluster
+
+N_PRODUCERS = 4
+N_CONSUMERS = 2                 # tailing from the start; +1 late consumer
+BATCH_RECORDS = 4               # records per append (one txn per batch)
+CONSUME_DEADLINE_S = 120.0
+CONFIGS = ((1, None), (1, 0.5), (2, None), (2, 0.5))
+
+
+def _record(producer: int, seq: int, pad: int) -> bytes:
+    return f"p{producer:02d}s{seq:06d}|".encode() + b"x" * pad
+
+
+def _check_fifo(payloads) -> None:
+    last = {}
+    for p in payloads:
+        head = bytes(p[:12]).decode()        # pPPsSSSSSS|
+        prod, seq = int(head[1:3]), int(head[4:10])
+        assert seq == last.get(prod, -1) + 1, (
+            f"producer {prod} out of order: {seq} after {last.get(prod)}")
+        last[prod] = seq
+
+
+def run(scale: Scale) -> dict:
+    n_records = {"smoke": 48, "quick": 150, "full": 400}[scale.name]
+    pad = 120
+    want = N_PRODUCERS * n_records + 1        # +1 warmup record
+    rows = []
+    contents = []
+    for shards, lease in CONFIGS:
+        with wtf_cluster(scale, n_meta_shards=shards,
+                         lease_ttl=lease) as cluster:
+            log = WtfLog(cluster, "/stream")
+            # Warmup: the log's first-ever append flips max_region -1 -> 0
+            # (structural) and may race; commit it before the timed phase
+            # so steady-state producers are conflict-free.  Deterministic,
+            # so it is part of every configuration's record multiset.
+            w = log.producer()
+            w.produce(_record(99, 0, pad))
+            w.close()
+
+            consumers = [log.consumer() for _ in range(N_CONSUMERS)]
+            streams = [[] for _ in range(N_CONSUMERS)]
+
+            def consume(c, out):
+                deadline = time.monotonic() + CONSUME_DEADLINE_S
+                while c.records < want and time.monotonic() < deadline:
+                    out.extend(c.poll(timeout=0.5))
+
+            ctreads = [threading.Thread(target=consume, args=(c, out))
+                       for c, out in zip(consumers, streams)]
+            for t in ctreads:
+                t.start()
+
+            producers = [log.producer(batch_records=BATCH_RECORDS)
+                         for _ in range(N_PRODUCERS)]
+            barrier = threading.Barrier(N_PRODUCERS)
+
+            def produce(i):
+                barrier.wait()
+                for j in range(n_records):
+                    producers[i].produce(_record(i, j, pad))
+                producers[i].close()
+
+            pthreads = [threading.Thread(target=produce, args=(i,))
+                        for i in range(N_PRODUCERS)]
+            t0 = time.perf_counter()
+            for t in pthreads:
+                t.start()
+            for t in pthreads:
+                t.join()
+            produce_secs = time.perf_counter() - t0
+            for t in ctreads:
+                t.join()
+            drain_secs = time.perf_counter() - t0
+
+            # Late consumer: attaches after ALL commits; its watermark
+            # comes entirely from the WAL snapshot replay.
+            late = log.consumer()
+            late_stream = []
+            consume(late, late_stream)
+            consumers.append(late)
+            streams.append(late_stream)
+
+            kv = cluster.total_stats()["kv"]
+            length = cluster.client().file_length("/stream")
+            digests = [c.digest() for c in consumers]
+            for c, stream in zip(consumers, streams):
+                assert c.records == want, \
+                    f"consumer delivered {c.records}/{want} records"
+                assert c.position == length, \
+                    f"cursor {c.position} != committed length {length}"
+                _check_fifo(stream)
+            assert len(set(digests)) == 1, \
+                f"consumers diverged: {digests}"
+            for c in consumers:
+                c.close()
+
+            contents.append(content_digest(streams[0]))
+            rows.append({
+                "n_meta_shards": shards,
+                "lease_ttl": lease,
+                "producers": N_PRODUCERS,
+                "consumers": N_CONSUMERS + 1,
+                "records": want,
+                "produce_records_per_s": round(
+                    N_PRODUCERS * n_records / produce_secs, 1),
+                "drain_secs": round(drain_secs, 3),
+                "flushes": sum(p.flushes for p in producers),
+                "kv_conflicts": kv.get("conflicts", 0),
+                "delivery_digest": digests[0],
+                "content_digest": contents[-1],
+            })
+            r = rows[-1]
+            print(f"[wlog] shards={shards} lease={lease}: "
+                  f"{r['produce_records_per_s']:.0f} rec/s produced, "
+                  f"{r['records']} delivered x{r['consumers']} consumers, "
+                  f"conflicts={r['kv_conflicts']}, "
+                  f"content={r['content_digest'][:12]}…")
+
+    assert len(set(contents)) == 1, (
+        f"record multiset differs across configurations: {contents}")
+    out = {"rows": rows,
+           "cross_config_content_match": True,
+           "content_digest": contents[0]}
+    print(f"[wlog] all {len(CONFIGS)} configurations delivered the same "
+          f"record multiset: {contents[0][:16]}…")
+    save_result("wlog_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(Scale.of(sys.argv[1] if len(sys.argv) > 1 else "quick"))

@@ -63,4 +63,25 @@ echo "== smoke: sharded metadata plane (shard sweep 1/2/4, leases off/on) =="
 # the tentpole requires.  Leaves scaling.json for CI to upload.
 timeout "${SCALING_BENCH_TIMEOUT:-300}" python -m benchmarks.scaling smoke
 
+echo "== smoke: concurrent appends (§2.5 relative append, O_APPEND fds) =="
+# asserts no appended bytes are lost (exact file length), zero OCC
+# conflicts among commuting appenders, 2-appender parallel_speedup >= 1.5
+# and monotonically non-decreasing appends/s through 8 appenders; leaves
+# append_bench.json for CI to upload
+timeout "${APPEND_BENCH_TIMEOUT:-300}" python -m benchmarks.append_bench smoke
+python - <<'PY'
+import json
+r = json.load(open("benchmarks/results/append_bench.json"))
+assert r["parallel_speedup"] > 1.5, r["parallel_speedup"]
+print(f"append_bench parallel_speedup={r['parallel_speedup']:.2f} OK")
+PY
+
+echo "== smoke: streaming multi-producer log (wlog) =="
+# 4 producers + 3 consumers (one attaching late, via WAL snapshot replay)
+# per configuration over metadata shards 1/2 x leases off/on: asserts
+# byte-identical delivery across consumers, per-producer FIFO, zero OCC
+# conflicts, and an identical record multiset across all configurations;
+# leaves wlog_bench.json for CI to upload as a build artifact
+timeout "${WLOG_BENCH_TIMEOUT:-300}" python -m benchmarks.wlog_bench smoke
+
 echo "CI OK"

@@ -29,6 +29,7 @@ from .slicing import (Extent, SlicePointer, compact, decode_extents,
                       encode_extents, merge_adjacent, overlay, slice_range,
                       split_by_regions)
 from .storage import StorageServer
+from .wlog import LogConsumer, LogProducer, WtfLog
 
 __all__ = [
     "Cluster", "WtfClient", "WtfTransaction", "WtfFile", "ClientStats",
@@ -36,6 +37,7 @@ __all__ = [
     "IoRuntime", "IoFuture", "IoTask", "PlanCache",
     "WriteBehindBuffer", "PendingPtr",
     "WarpKV", "StorageServer",
+    "WtfLog", "LogProducer", "LogConsumer",
     "ShardedKV", "MdShardStats", "PhaseCrash",
     "LeaseHub", "LeaseTable", "LeaseStats",
     "ReplicatedCoordinator", "GarbageCollector", "HashRing",

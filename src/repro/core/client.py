@@ -154,7 +154,8 @@ class Cluster:
                  kv_group_commit: bool = True,
                  n_meta_shards: int = 1,
                  lease_ttl: Optional[float] = None,
-                 kv_service_time: float = 0.0):
+                 kv_service_time: float = 0.0,
+                 storage_service_time: float = 0.0):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import StorageServer
@@ -200,6 +201,10 @@ class Cluster:
         if kv_service_time < 0:
             raise ValueError(
                 f"kv_service_time must be >= 0, got {kv_service_time}")
+        if storage_service_time < 0:
+            raise ValueError(
+                f"storage_service_time must be >= 0, "
+                f"got {storage_service_time}")
 
         # Metadata plane: ONE WarpKV by default — the exact single-store
         # fast path — or a ``mdshard.ShardedKV`` partitioning the keyspace
@@ -240,12 +245,19 @@ class Cluster:
         self.servers: Dict[int, Any] = {}
         self._ring = HashRing()
         self._ring_epoch = -1
+        # Memoized ring walks for the scalar store path: every append to
+        # the same region re-derives the same owner list, and the walk
+        # was measurable GIL-held time under many appenders.  Cleared on
+        # every ring refresh (stale reads race exactly like ``_ring``
+        # itself and are caught by the per-store failover walk).
+        self._owners_cache: Dict[Any, List[int]] = {}
         self._lock = threading.Lock()
         self._client_ids = itertools.count(1)
         for sid in range(n_servers):
             root = os.path.join(data_dir, f"server_{sid:03d}")
             srv = StorageServer(sid, root,
-                                num_backing_files=num_backing_files)
+                                num_backing_files=num_backing_files,
+                                service_time_s=storage_service_time)
             self.servers[sid] = srv
             self.coordinator.register_server(sid, root)
         self._refresh_ring()
@@ -283,6 +295,7 @@ class Cluster:
 
         cfg = self.coordinator.config()
         ring = HashRing(cfg["online"])
+        self._owners_cache.clear()
         with self._lock:
             self._ring = ring
             self._ring_epoch = cfg["epoch"]
@@ -309,7 +322,10 @@ class Cluster:
         write path never blocks on a single faulty node.
         """
         want = self.replication
-        candidates = self._ring.owners(placement_key, len(self.servers))
+        candidates = self._owners_cache.get(placement_key)
+        if candidates is None:
+            candidates = self._ring.owners(placement_key, len(self.servers))
+            self._owners_cache[placement_key] = candidates
         ptrs: list[SlicePointer] = []
         for sid in candidates:
             if len(ptrs) == want:
@@ -345,6 +361,20 @@ class Cluster:
                                            else 0))
         return out
 
+    def release_slices(self, ptrs: Sequence[SlicePointer]) -> None:
+        """End-of-transaction ACK for the tier-3 GC handoff window: the
+        transaction that created ``ptrs`` has committed or finally
+        aborted, so the servers may stop shielding those ranges from the
+        sparse rewrite (§2.8).  Safe to call with foreign/stale pointers;
+        releasing twice is a no-op."""
+        by_server: dict[int, list[SlicePointer]] = {}
+        for p in ptrs:
+            by_server.setdefault(p.server_id, []).append(p)
+        for sid, plist in by_server.items():
+            srv = self.servers.get(sid)
+            if srv is not None:
+                srv.release_slices(plist)
+
     def note_degraded_stores(self, n: int) -> None:
         with self._lock:
             self.degraded_stores += n
@@ -378,6 +408,8 @@ class Cluster:
             s["slices_read"] for s in agg["servers"].values())
         agg["slices_written"] = sum(
             s["slices_written"] for s in agg["servers"].values())
+        agg["append_lock_wait_s"] = sum(
+            s["append_lock_wait_s"] for s in agg["servers"].values())
         agg["degraded_stores"] = self.degraded_stores
         agg["io_runtime"] = self.runtime.snapshot()
         # Sharded metadata plane: per-shard KVStats plus the 2PC

@@ -29,6 +29,7 @@ from .errors import (BadFileDescriptor, KVConflict, NotOpenForWriting,
                      PreconditionFailed, TransactionAborted, WtfError)
 from .iort import AtomicStatsMixin
 from .metadata import Transaction
+from .slicing import Extent, SlicePointer
 
 SEEK_SET, SEEK_CUR, SEEK_END = 0, 1, 2
 
@@ -40,9 +41,14 @@ class _Fd:
     path: str
     offset: int = 0
     writable: bool = True
+    # O_APPEND semantics: every write() lands at the file's CURRENT end,
+    # not at the offset this fd cached when it was opened.  Routed through
+    # the §2.5 relative append so concurrent appenders commute.
+    append: bool = False
 
     def snap(self) -> tuple:
-        return (self.fd, self.inode_id, self.path, self.offset, self.writable)
+        return (self.fd, self.inode_id, self.path, self.offset,
+                self.writable, self.append)
 
     @staticmethod
     def restore(t: tuple) -> "_Fd":
@@ -127,6 +133,23 @@ class _Op:
         self.kwargs = kwargs
         self.digest: Any = None
         self.artifacts: dict = {}        # slices created, ids allocated, ...
+
+
+def _iter_slice_pointers(obj: Any):
+    """Every ``SlicePointer`` reachable from an op-artifact value: bare
+    pointers, replica tuples inside ``Extent``s, and arbitrary nesting in
+    tuples/lists/dicts.  Unresolved write-behind placeholders simply have
+    no pointers yet and yield nothing."""
+    if isinstance(obj, SlicePointer):
+        yield obj
+    elif isinstance(obj, Extent):
+        yield from _iter_slice_pointers(obj.ptrs)
+    elif isinstance(obj, (tuple, list)):
+        for v in obj:
+            yield from _iter_slice_pointers(v)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            yield from _iter_slice_pointers(v)
 
 
 def _digest(value: Any) -> Any:
@@ -256,6 +279,17 @@ class ClientRuntime:
             op.digest = resolve_value(op.digest)
 
     # -------------------------------------------------------- txn dispatch
+    def _release_handoffs(self, ops) -> None:
+        """End-of-transaction ACK to the storage servers: every slice these
+        ops created (recorded in their artifacts for §2.6 replay) has
+        either been published by the commit or become plain garbage via
+        the final abort — the tier-3 GC no longer needs to protect its
+        create→commit handoff window.  Idempotent and exception-free."""
+        ptrs = [p for op in ops
+                for p in _iter_slice_pointers(op.artifacts)]
+        if ptrs:
+            self.cluster.release_slices(ptrs)
+
     def transaction(self) -> "WtfTransaction":
         """Begin a fully general multi-file transaction (§2.6)."""
         if self._txn is not None:
@@ -273,30 +307,38 @@ class ClientRuntime:
         op = _Op(name, args, kwargs)
         fd_snap = self._fd_state()
         last: Optional[Exception] = None
-        for attempt in range(self.MAX_RETRIES):
-            if attempt:
-                self.stats.add(txn_retries=1)
-                self._restore_fd_state(fd_snap)
-            ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
-            try:
-                result = self._exec(op, ctx)
-                # Write-behind (auto-commit scope): stores the op deferred
-                # flush here, in one scheduler pass, before the metadata
-                # commits.  Retries hit the op's resolved artifacts and
-                # leave the buffer empty.
-                self._flush_writeback(ctx, (op,))
-                ctx.txn.commit()
-                return result
-            except (KVConflict, PreconditionFailed) as e:
-                last = e
-                continue
-            except BaseException:
-                # Op body or flush failed outright: deferred payloads from
-                # the dead op must not leak into a later commit scope, and
-                # fd state the op advanced before failing rolls back.
-                self._wb.clear()
-                self._restore_fd_state(fd_snap)
-                raise
+        try:
+            for attempt in range(self.MAX_RETRIES):
+                if attempt:
+                    self.stats.add(txn_retries=1)
+                    self._restore_fd_state(fd_snap)
+                ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
+                try:
+                    result = self._exec(op, ctx)
+                    # Write-behind (auto-commit scope): stores the op
+                    # deferred flush here, in one scheduler pass, before
+                    # the metadata commits.  Retries hit the op's resolved
+                    # artifacts and leave the buffer empty.
+                    self._flush_writeback(ctx, (op,))
+                    ctx.txn.commit()
+                    return result
+                except (KVConflict, PreconditionFailed) as e:
+                    last = e
+                    continue
+                except BaseException:
+                    # Op body or flush failed outright: deferred payloads
+                    # from the dead op must not leak into a later commit
+                    # scope, and fd state the op advanced before failing
+                    # rolls back.
+                    self._wb.clear()
+                    self._restore_fd_state(fd_snap)
+                    raise
+        finally:
+            # Commit or final abort, the create→commit handoff is over:
+            # un-shield this op's slices from the tier-3 GC.  Must run
+            # after the LAST attempt, never between retries — replays
+            # reuse the recorded pointers (§2.6).
+            self._release_handoffs((op,))
         self.stats.add(txn_aborts=1)
         # the aborted op leaves no trace — including fd offsets the op
         # body advanced before its commit failed, and any deferred stores
@@ -372,24 +414,30 @@ class WtfTransaction:
         # re-store data.
         self._flush_or_abort()
         last: Optional[Exception] = None
-        for attempt in range(self.MAX_RETRIES):
-            if attempt:
-                self.client.stats.add(txn_retries=1)
+        try:
+            for attempt in range(self.MAX_RETRIES):
+                if attempt:
+                    self.client.stats.add(txn_retries=1)
+                    try:
+                        self._replay()
+                    except (KVConflict, PreconditionFailed) as e:
+                        last = e
+                        continue
+                    # Normally a no-op: replays hit the resolved artifact
+                    # cache.  If a replayed op took a branch that planned a
+                    # NEW store, it must flush before the commit too.
+                    self._flush_or_abort()
                 try:
-                    self._replay()
+                    self._ctx.txn.commit()
+                    self._done = True
+                    return
                 except (KVConflict, PreconditionFailed) as e:
                     last = e
-                    continue
-                # Normally a no-op: replays hit the resolved artifact
-                # cache.  If a replayed op took a branch that planned a
-                # NEW store, it must flush before the commit too.
-                self._flush_or_abort()
-            try:
-                self._ctx.txn.commit()
-                self._done = True
-                return
-            except (KVConflict, PreconditionFailed) as e:
-                last = e
+        finally:
+            # The transaction is over either way (commit, divergent
+            # replay, or give-up below): release the GC handoff shield on
+            # every slice the op log created.
+            self.client._release_handoffs(self._ops)
         self._done = True
         self.client.stats.add(txn_aborts=1)
         self.client._wb.clear()
@@ -413,6 +461,7 @@ class WtfTransaction:
                 self._ctx.txn.abort()
             finally:
                 self.client._restore_fd_state(self._fd_snap)
+                self.client._release_handoffs(self._ops)
             raise
 
     def _replay(self) -> None:
@@ -446,4 +495,6 @@ class WtfTransaction:
         # transaction leaves zero storage-server garbage.
         self.client._wb.clear()
         self.client._restore_fd_state(self._fd_snap)
+        # Eagerly-stored slices ARE garbage now — hand them to the GC.
+        self.client._release_handoffs(self._ops)
         self._done = True

@@ -17,6 +17,7 @@ closes the race with slices created but not yet referenced.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 from .client import GC_DIR, Cluster, WtfClient
@@ -79,7 +80,14 @@ class GarbageCollector:
             spilled = False
         txn.put("regions", region_key(inode_id, region_idx), new)
         try:
-            txn.commit()
+            try:
+                txn.commit()
+            finally:
+                # Spill slices were stored outside any client op, so the
+                # create→commit GC shield is released here: published by
+                # the commit, or plain garbage after the abort.
+                if spilled:
+                    self.cluster.release_slices(ptrs)
         except (KVConflict, PreconditionFailed):
             return {"skipped": True}
         return {"skipped": False, "before": before,
@@ -170,6 +178,11 @@ class GarbageCollector:
 
     def storage_gc_pass(self, max_files_per_server: Optional[int] = None) -> dict:
         """One full tier-3 cycle: scan → publish → per-server collect."""
+        # Stamp the walk start BEFORE reading any metadata: the servers
+        # shield handoff releases newer than the previous pass's stamp,
+        # because neither that walk nor this one can be trusted about
+        # ranges whose commit raced the scan pipeline.
+        walk_started_at = time.monotonic()
         live = self.scan_filesystem()
         self.publish_live_lists(live)
         # Re-scan after publishing so the live lists include the GC files
@@ -180,7 +193,8 @@ class GarbageCollector:
             if not server.alive:
                 continue
             result = server.gc_pass(live.get(sid, []),
-                                    max_files=max_files_per_server)
+                                    max_files=max_files_per_server,
+                                    walk_started_at=walk_started_at)
             for k in totals:
                 totals[k] += result[k]
         return totals

@@ -206,6 +206,14 @@ class BumpInode(CommutingOp):
     value unchanged, appends that stay within the current last region do not
     invalidate concurrent readers of the inode — this is what keeps parallel
     appends conflict-free end to end.
+
+    An *mtime-only* advance additionally keeps the inode's version
+    (``preserves_version``): timestamps carry no serializability promise
+    in POSIX, so ticking ``mtime`` must not abort concurrent appenders
+    holding an inode read dependency, nor invalidate cached read plans.
+    Any structural change (``max_region`` growth, link count) still bumps
+    the version — that is what serializes appends against truncate and
+    namespace ops.
     """
 
     __slots__ = ("max_region", "mtime", "link_delta")
@@ -230,6 +238,10 @@ class BumpInode(CommutingOp):
         if self.link_delta:
             kw["links"] = ino.links + self.link_delta
         return (ino.replace(**kw) if kw else ino), None
+
+    def preserves_version(self, old, new) -> bool:
+        return (isinstance(old, Inode) and isinstance(new, Inode)
+                and new.replace(mtime=old.mtime) == old)
 
     def coalesce(self, nxt: "BumpInode") -> "BumpInode":
         def mx(a, b):

@@ -294,6 +294,12 @@ class IoRuntime:
         self._ewma_round_s: Optional[float] = None   # fixed per-round cost
         self._ewma_bw: Optional[float] = None        # bytes / second
         self._rounds_observed = 0
+        # Pool admission delay: how long a submitted async op sat queued
+        # before a worker picked it up — the runtime-side analogue of the
+        # KV plane's ``commit_wait_s`` (queueing here means concurrent ops
+        # are serializing on pool capacity, not on locks).
+        self._ewma_op_wait_s: Optional[float] = None
+        self._ops_observed = 0
 
     # ----------------------------------------------------------------- pool
     def _pool_get(self) -> ThreadPoolExecutor:
@@ -392,9 +398,22 @@ class IoRuntime:
         result).
         """
         task = IoTask("op")
-        fut = self._pool_get().submit(self._execute, task,
-                                      lambda _t: fn())
+        t0 = time.perf_counter()
+
+        def body(_t):
+            self._observe_op_wait(time.perf_counter() - t0)
+            return fn()
+
+        fut = self._pool_get().submit(self._execute, task, body)
         return IoFuture(fut, stats)
+
+    def _observe_op_wait(self, seconds: float) -> None:
+        with self._model_lock:
+            self._ops_observed += 1
+            prev = self._ewma_op_wait_s
+            self._ewma_op_wait_s = (
+                seconds if prev is None
+                else prev + _EWMA_ALPHA * (seconds - prev))
 
     # ------------------------------------------------------- adaptive model
     def observe_round(self, server_id: Optional[int], seconds: float,
@@ -448,7 +467,10 @@ class IoRuntime:
             rtt = dict(self._rtt_by_server)
             round_s, bw = self._ewma_round_s, self._ewma_bw
             rounds = self._rounds_observed
+            op_wait, ops = self._ewma_op_wait_s, self._ops_observed
         return {
+            "ops_observed": ops,
+            "ewma_op_wait_s": op_wait,
             "adaptive_gap_bytes": self.gap_bytes(),
             "adaptive_coalesce_bytes": self.coalesce_bytes(),
             "gap_pinned": self._gap_override is not None,

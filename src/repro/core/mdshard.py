@@ -200,7 +200,8 @@ class ShardedKV:
         self._fail_next_commits = n
 
     # -- replication / subscribe fan-in -------------------------------------
-    def subscribe(self, fn: Callable, with_meta: bool = False) -> None:
+    def subscribe(self, fn: Callable, with_meta: bool = False
+                  ) -> Callable[[], None]:
         """Single totally-ordered stream over all shards.
 
         Replay delivers shard 0's compacted snapshot + tail, then shard
@@ -211,6 +212,9 @@ class ShardedKV:
         order.  ``with_meta=True`` delivers ``fn(space, key, value,
         version, shard, seq)`` where ``seq`` is that shard's 1-based,
         gap-free sequence number for this subscriber.
+
+        Returns a zero-argument cancel callable that detaches every
+        per-shard forwarder (mirrors ``WarpKV.subscribe``).
         """
         sub_lock = threading.RLock()
         seqs = [0] * self.n_shards
@@ -225,8 +229,14 @@ class ShardedKV:
                         fn(space, key, value, version)
             return forward
 
-        for i, sh in enumerate(self.shards):
-            sh.subscribe(forwarder(i))
+        cancels = [sh.subscribe(forwarder(i))
+                   for i, sh in enumerate(self.shards)]
+
+        def cancel() -> None:
+            for c in cancels:
+                c()
+
+        return cancel
 
     def wal_entries(self) -> int:
         return sum(sh.wal_entries() for sh in self.shards)

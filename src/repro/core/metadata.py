@@ -86,6 +86,11 @@ class CommutingOp:
     recorded read dependencies and version-validated plan caches survive.
     Only set it when that property genuinely holds — a version-preserving
     op that changes observable content would break serializability.
+
+    ``preserves_version(old, new)`` refines the class-level flag per
+    application: an op whose effect is *sometimes* invisible to
+    serializability (e.g. ``BumpInode`` advancing only ``mtime``) can
+    keep the version for exactly those applications.
     """
 
     version_preserving = False
@@ -96,6 +101,12 @@ class CommutingOp:
 
     def apply(self, value: Any):  # -> tuple[Any, Any]
         raise NotImplementedError
+
+    def preserves_version(self, old: Any, new: Any) -> bool:
+        """Whether replacing ``old`` with ``new`` may keep the version.
+        Called under the commit locks, after ``apply``; default is the
+        class-level declaration."""
+        return self.version_preserving
 
 
 class ListAppend(CommutingOp):
@@ -329,33 +340,55 @@ class KVStats(AtomicStatsMixin):
     is the number of acquisition passes the batching saved.
     ``compactions`` counts version-preserving commutes that actually
     rewrote a value (commit-time region compactions applied).
+
+    ``conflicts`` counts true optimistic-concurrency losses — a commit
+    aborted because a *read version* moved underneath it.  It is a strict
+    subset of ``aborts``: precondition failures (e.g. a bounded append
+    hitting a region boundary) and injected aborts are part of their
+    protocols, not contention, and only bump ``aborts``.  §2.5's claim is
+    exactly "parallel appends never conflict", i.e. ``conflicts == 0``.
+
+    ``commit_wait_s`` / ``commit_hold_s`` / ``leader_drains`` expose the
+    group-commit admission queue: wall-seconds committers spent waiting
+    for a batch outcome, wall-seconds leaders spent draining batches, and
+    the number of batches drained.  If commits serialize, waits grow with
+    committer count while holds stay flat — that asymmetry is how the
+    append serialization point was localized.
     """
 
     commits: int = 0
     aborts: int = 0
+    conflicts: int = 0               # read-version validation failures
     gets: int = 0
     puts: int = 0
     commutes: int = 0
     compactions: int = 0             # version-preserving rewrites applied
     commit_lock_passes: int = 0      # stripe-lock acquisition passes made
     grouped_commits: int = 0         # txns that shared a leader's pass
+    leader_drains: int = 0           # group-commit batches drained
+    commit_wait_s: float = 0.0       # committer time queued for an outcome
+    commit_hold_s: float = 0.0       # leader time spent draining batches
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False, compare=False)
 
 
 class _CommitReq:
-    """One queued commit: its transaction, outcome slot, and done flag.
+    """One queued commit: its transaction, outcome slot, and wakeup event.
 
-    ``done``/``exc`` are written by the leader while it holds the commit
-    mutex and read by the owner after acquiring the same mutex — the mutex
-    is the memory barrier."""
+    ``done``/``exc`` are written by the batch leader before it sets
+    ``evt``; the owner reads them after ``evt.wait()`` returns — the
+    event is the memory barrier.  ``lead`` is written only under the
+    commit-queue lock (at enqueue, or by the previous leader handing
+    off) and read by the owner after the same lock or event."""
 
-    __slots__ = ("txn", "exc", "done")
+    __slots__ = ("txn", "exc", "done", "evt", "lead")
 
     def __init__(self, txn: Transaction):
         self.txn = txn
         self.exc: Optional[BaseException] = None
         self.done = False
+        self.evt = threading.Event()
+        self.lead = False
 
 
 class WarpKV:
@@ -387,7 +420,12 @@ class WarpKV:
         self._inval_listeners: list[Callable[[list], None]] = []
         self._commit_queue: List[_CommitReq] = []
         self._commit_queue_lock = threading.Lock()
-        self._commit_mutex = threading.Lock()
+        # True while some committer owns batch leadership.  Leadership is
+        # granted at enqueue (queue empty, no leader) or handed off by the
+        # retiring leader to the head of the queue — always under
+        # ``_commit_queue_lock``, so there is at most one leader and the
+        # flag can never be left set without a live owner.
+        self._leader_active = False
         self._leader_thread: Optional[int] = None
         # Bounded write-ahead log of committed mutations for chain
         # replication: compacted snapshot + recent-mutation tail ring.
@@ -452,30 +490,55 @@ class WarpKV:
         if not self.group_commit \
                 or self._leader_thread == threading.get_ident():
             # Group commit off — or a re-entrant commit from inside a
-            # batch (a WAL listener committing): the stripe RLocks are
-            # reentrant, the commit mutex is not, so commit directly.
+            # batch (a WAL listener committing): parking on the admission
+            # queue would deadlock against ourselves (we ARE the leader),
+            # and the stripe RLocks are reentrant, so commit directly.
             self._commit_batch([req])
             if req.exc is not None:
                 raise req.exc
             return
-        # Group commit (leader/follower): enqueue, then pass through the
-        # commit mutex.  Whoever holds it drains the queue and commits the
-        # whole batch under ONE sorted stripe-lock acquisition pass;
-        # committers that arrive while a leader is working pile up behind
-        # the mutex and the first one through leads the next batch.
+        # Group commit with leader *handoff*: enqueue; if nobody is
+        # leading, lead immediately, otherwise park on our own event.
+        # A leader drains exactly one batch under ONE sorted stripe-lock
+        # acquisition pass, then passes leadership to the head of the
+        # queue (a committer that arrived while it worked) and wakes its
+        # own followers.  Unlike the old global commit mutex, retired
+        # followers never re-acquire anything — they wake and return —
+        # and the next batch's leader starts without waiting for this
+        # batch's followers to drain through a mutex convoy.
+        t0 = time.perf_counter()
         with self._commit_queue_lock:
             self._commit_queue.append(req)
-        with self._commit_mutex:
-            if not req.done:
+            if not self._leader_active:
+                self._leader_active = True
+                req.lead = True
+        if not req.lead:
+            req.evt.wait()
+        if req.lead:
+            with self._commit_queue_lock:
+                batch = self._commit_queue
+                self._commit_queue = []
+            self.stats.add(leader_drains=1,
+                           commit_wait_s=time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            self._leader_thread = threading.get_ident()
+            try:
+                self._commit_batch(batch)
+            finally:
+                self._leader_thread = None
+                self.stats.add(commit_hold_s=time.perf_counter() - t1)
                 with self._commit_queue_lock:
-                    batch = self._commit_queue
-                    self._commit_queue = []
-                if batch:
-                    self._leader_thread = threading.get_ident()
-                    try:
-                        self._commit_batch(batch)
-                    finally:
-                        self._leader_thread = None
+                    if self._commit_queue:
+                        nxt = self._commit_queue[0]
+                        nxt.lead = True
+                        nxt.evt.set()
+                    else:
+                        self._leader_active = False
+                for r in batch:
+                    if r is not req:
+                        r.evt.set()
+        else:
+            self.stats.add(commit_wait_s=time.perf_counter() - t0)
         if req.exc is not None:
             raise req.exc
 
@@ -537,7 +600,7 @@ class WarpKV:
             ent = self._space(space).get(key)
             cur = ent.version if ent is not None else 0
             if cur != seen:
-                self.stats.add(aborts=1)
+                self.stats.add(aborts=1, conflicts=1)
                 raise KVConflict(
                     f"version conflict on {space}:{key!r} "
                     f"(saw {seen}, now {cur})")
@@ -583,6 +646,7 @@ class WarpKV:
         # 3. apply buffered writes.  Deletes keep a versioned tombstone
         # (value None) so a delete+recreate can never satisfy a stale
         # reader's version check (no ABA).
+        n_compactions = 0
         for (space, key), value in txn._writes.items():
             sp = self._space(space)
             ent = sp.get(key)
@@ -590,7 +654,6 @@ class WarpKV:
             stored = None if value is _TOMBSTONE else value
             sp[key] = _Versioned(ver, stored)
             self._log(space, key, stored, ver)
-            self.stats.add(puts=1)
         # 4. apply commutative results; bump version only on real change,
         # and not at all for a version-preserving rewrite (compaction):
         # the bytes any reader can observe are unchanged, so recorded
@@ -600,17 +663,21 @@ class WarpKV:
             ent = sp.get(key)
             if ent is not None and ent.value == new:
                 pass                      # no-op merge: no invalidation
-            elif op.version_preserving and ent is not None:
+            elif ent is not None and op.preserves_version(ent.value, new):
                 sp[key] = _Versioned(ent.version, new)
                 self._log(space, key, new, ent.version)
-                self.stats.add(compactions=1)
+                if op.version_preserving:
+                    n_compactions += 1
             else:
                 ver = (ent.version if ent is not None else 0) + 1
                 sp[key] = _Versioned(ver, new)
                 self._log(space, key, new, ver)
             cell.append(result)
-            self.stats.add(commutes=1)
-        self.stats.add(commits=1)
+        # One atomic bump for the whole transaction: each ``add`` takes
+        # the stats lock, and per-key bumps were a measurable slice of
+        # GIL-held commit time under many appenders.
+        self.stats.add(commits=1, puts=len(txn._writes),
+                       commutes=len(staged), compactions=n_compactions)
 
     # -- shard hooks (used by mdshard.ShardedKV) ----------------------------
     def lock_keys(self, touched: Iterable[tuple]) -> list[int]:
@@ -647,19 +714,47 @@ class WarpKV:
             for fn in self._wal_listeners:
                 fn(space, key, value, version)
 
-    def subscribe(self, fn: Callable[[str, Any, Any, int], None]) -> None:
+    def subscribe(self, fn: Callable, with_meta: bool = False) -> Callable[[], None]:
         """Replay the WAL into ``fn`` and register it for future commits.
 
         Replay is the compacted snapshot (latest folded value per key)
         followed by the tail ring, so a late subscriber converges on the
         exact current state in O(keyspace + tail) calls — not O(history).
+
+        Replay and registration happen atomically under ``_wal_lock`` —
+        the same lock every committer's ``_log`` takes — so there is no
+        window between snapshot replay and live-tail attach: a mutation
+        committing concurrently either lands in the replayed tail or is
+        delivered live after registration, never both, never neither.
+
+        ``with_meta=True`` delivers ``fn(space, key, value, version,
+        shard, seq)`` with ``shard == 0`` and a per-subscriber 1-based
+        gap-free ``seq`` — the same contract as ``ShardedKV.subscribe``,
+        so stream consumers are agnostic to the shard count.
+
+        Returns a zero-argument cancel callable that detaches the
+        subscription (no further deliveries once it returns).
         """
+        if with_meta:
+            raw, box = fn, [0]
+
+            def fn(space, key, value, version):  # noqa: F811
+                box[0] += 1
+                raw(space, key, value, version, 0, box[0])
+
         with self._wal_lock:
             for (space, key), (value, version) in self._wal_snapshot.items():
                 fn(space, key, value, version)
             for space, key, value, version in self._wal_tail:
                 fn(space, key, value, version)
             self._wal_listeners.append(fn)
+
+        def cancel() -> None:
+            with self._wal_lock:
+                if fn in self._wal_listeners:
+                    self._wal_listeners.remove(fn)
+
+        return cancel
 
     def wal_entries(self) -> int:
         """Retained WAL size (snapshot keys + tail ring), for tests."""

@@ -209,6 +209,12 @@ class PosixOps:
         self._check_async_scope()     # before the eager offset mutation
         f = self._get_wfd(fd)
         chunks = tuple(bytes(c) for c in chunks)
+        if f.append:
+            # O_APPEND fds cannot pin an offset at submission — the EOF
+            # is resolved at commit time.  Run the relative append inline
+            # and hand back an already-resolved future.
+            self.stats.add(async_ops=1)
+            return IoFuture.resolved(self._run("writev", fd, chunks))
         offset = f.offset
         f.offset += sum(len(c) for c in chunks)
         return self._async_write(f, chunks, offset)
@@ -303,6 +309,11 @@ class PosixOps:
         f = _Fd(op.artifacts.setdefault("fd", next(self._fd_counter)),
                 ino_id, path, writable=("r" != mode))
         if "a" in mode:
+            # O_APPEND: the offset is advisory (tell/read); writes are
+            # routed to the file's current EOF at commit time, never to
+            # this snapshot — concurrent appenders from other clients may
+            # move the EOF between our writes.
+            f.append = True
             f.offset = self._file_length(ctx, ino)
         self._fds[f.fd] = f
         return f.fd
@@ -362,7 +373,15 @@ class PosixOps:
 
     def _op_write(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
         f = self._get_wfd(fd)
-        n = self._write_at(ctx, op, f.inode_id, f.offset, data, key="w")
+        if f.append:
+            # O_APPEND: land at the CURRENT end of file, atomically.  A
+            # positional write at the fd's cached offset would silently
+            # overwrite concurrent appenders that opened at the same EOF;
+            # the §2.5 relative append makes them commute instead.
+            n = self._append_fd(ctx, op, f, data)
+        else:
+            n = self._write_at(ctx, op, f.inode_id, f.offset, data,
+                               key="w")
         f.offset += n
         return n
 
@@ -376,7 +395,14 @@ class PosixOps:
     def _op_writev(self, ctx: _Ctx, op: _Op, fd: int,
                    chunks: Tuple[bytes, ...]) -> int:
         f = self._get_wfd(fd)
-        n = self._writev_at(ctx, op, f.inode_id, f.offset, chunks, key="wv")
+        if f.append:
+            # O_APPEND gather-write: the whole batch is one contiguous
+            # relative append (chunks stay adjacent, like writev's
+            # single-offset contract).
+            n = self._append_fd(ctx, op, f, b"".join(chunks))
+        else:
+            n = self._writev_at(ctx, op, f.inode_id, f.offset, chunks,
+                                key="wv")
         f.offset += n
         self.stats.add(vectored_ops=1)
         return n

@@ -161,6 +161,11 @@ class SliceOps:
 
     def _op_append(self, ctx: _Ctx, op: _Op, fd: int, data: bytes) -> int:
         f = self._get_wfd(fd)
+        return self._append_fd(ctx, op, f, data)
+
+    def _append_fd(self, ctx: _Ctx, op: _Op, f, data: bytes) -> int:
+        """Append ``data`` at the file's current EOF — shared by the
+        ``append`` op and by ``write``/``writev`` on O_APPEND fds."""
         ino = self._inode(ctx, f.inode_id)
         last = max(ino.max_region, 0)
         # Unvalidated fit check: the commit-time bound precondition is the
@@ -170,12 +175,15 @@ class SliceOps:
         if rd.end + len(data) <= ino.region_size:
             # Fast path (§2.5): commutative bounded append — resolved against
             # the region's end at commit time, so concurrent appends all
-            # commit without conflicting.
+            # commit without conflicting.  The peek above already counted
+            # the region's overlay entries, so pass that down rather than
+            # paying a second KV read for the compaction-threshold check.
             full = self._data_slice(ctx, op, ino, last, data, key="a")
             self._commute_region_append(
                 ctx, ino.inode_id, last,
                 AppendExtents([Extent(0, len(data), full.ptrs)],
-                              relative=True, bound=ino.region_size))
+                              relative=True, bound=ino.region_size),
+                base_hint=len(rd.entries))
             self._bump(ctx, ino.inode_id, op, max_region=last)
         else:
             # Fallback: read end-of-file and write at that offset (§2.5);
@@ -228,7 +236,8 @@ class SliceOps:
         return self._inode(ctx, ino_id)
 
     def _commute_region_append(self, ctx: _Ctx, inode_id: int, region: int,
-                               append_op: AppendExtents) -> None:
+                               append_op: AppendExtents,
+                               base_hint: Optional[int] = None) -> None:
         """Queue a region-list append, piggybacking a commit-time compaction
         (``CompactRegion``) when the overlay list has outgrown the cluster
         threshold.
@@ -242,7 +251,13 @@ class SliceOps:
         at commit time, so a stale estimate only costs a no-op.  One
         compaction per (transaction, region) is enough: it runs at its
         queue position and the threshold keeps post-compaction growth
-        bounded until the next committing writer."""
+        bounded until the next committing writer.
+
+        ``base_hint`` lets a caller that just peeked the region (the
+        append fast path) supply its entry count, saving the snapshot
+        read; a hint that includes this transaction's queued extents only
+        *over*estimates, which at worst queues a compaction early — the
+        same harmless no-op as any stale estimate."""
         txn = ctx.txn
         rk = region_key(inode_id, region)
         txn.commute("regions", rk, append_op)
@@ -263,6 +278,8 @@ class SliceOps:
             rd = txn.peek("regions", rk)
             base = len(rd.entries) if rd is not None else 0
             queued = 0                       # peek already applied the queue
+        elif base_hint is not None:
+            base = base_hint
         else:
             _, val = self.kv._read_versioned("regions", rk)
             base = len(val.entries) if val is not None else 0
@@ -676,19 +693,24 @@ class SliceOps:
         """
         op = _Op("pwritev_async", (), {})
         last: Optional[Exception] = None
-        for attempt in range(self.MAX_RETRIES):
-            if attempt:
-                self.stats.add(txn_retries=1)
-            ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
-            try:
-                n = self._writev_at(ctx, op, inode_id, offset, chunks,
-                                    key="wv", defer=False)
-                ctx.txn.commit()
-                self.stats.add(vectored_ops=1)
-                return n
-            except (KVConflict, PreconditionFailed) as e:
-                last = e
-                continue
+        try:
+            for attempt in range(self.MAX_RETRIES):
+                if attempt:
+                    self.stats.add(txn_retries=1)
+                ctx = _Ctx(self._begin_txn(), first=(attempt == 0))
+                try:
+                    n = self._writev_at(ctx, op, inode_id, offset, chunks,
+                                        key="wv", defer=False)
+                    ctx.txn.commit()
+                    self.stats.add(vectored_ops=1)
+                    return n
+                except (KVConflict, PreconditionFailed) as e:
+                    last = e
+                    continue
+        finally:
+            # commit or give-up: the GC handoff window for the slices this
+            # worker stored is closed (retries reuse them, so only here).
+            self._release_handoffs((op,))
         self.stats.add(txn_aborts=1)
         raise TransactionAborted(
             f"async pwritev failed after {self.MAX_RETRIES} attempts: {last}")

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -58,6 +59,11 @@ class StorageStats(AtomicStatsMixin):
     read_rounds: int = 0
     gc_bytes_reclaimed: int = 0
     gc_bytes_rewritten: int = 0
+    # Seconds spent waiting to *reserve* an append offset.  The write
+    # syscall itself happens outside the reservation lock, so this is
+    # pure queueing delay — if concurrent appenders serialize anywhere
+    # in the storage layer, it shows up here first.
+    append_lock_wait_s: float = 0.0
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False, compare=False)
 
@@ -90,34 +96,164 @@ def _intersect_intervals(a: List[Tuple[int, int]],
     return out
 
 
-class _BackingFile:
-    """One sequentially-appended slice container."""
+def _subtract_intervals(a: List[Tuple[int, int]],
+                        sub: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """``a`` minus ``sub``; both sorted disjoint (start, end) lists."""
+    out: List[Tuple[int, int]] = []
+    j = 0
+    for s, e in a:
+        cur = s
+        while j < len(sub) and sub[j][1] <= cur:
+            j += 1
+        k = j
+        while k < len(sub) and sub[k][0] < e:
+            if sub[k][0] > cur:
+                out.append((cur, sub[k][0]))
+            cur = max(cur, sub[k][1])
+            k += 1
+        if cur < e:
+            out.append((cur, e))
+    return out
 
-    def __init__(self, path: str):
+
+class _BackingFile:
+    """One sequentially-appended slice container.
+
+    Appends *reserve* an offset range under the lock, then issue the
+    positional write syscall OUTSIDE it, so concurrent appenders overlap
+    their disk I/O instead of serializing on one file lock (§2.5's
+    parallel-append guarantee has to survive the storage layer too).
+    The reservation protocol:
+
+    - ``_reserve`` bumps ``size`` and an in-flight counter under the lock
+      and captures the file descriptor; the caller then ``os.pwrite``s
+      into its private range — disjoint ranges never conflict.
+    - GC's sparse rewrite and ``close`` must not swap the fd out from
+      under an in-flight write: they set ``_blocked`` (new reservations
+      park) and wait on the condition until ``_inflight`` drains.
+    - Every reservation is also marked *pending handoff* until the client
+      acknowledges the end of the creating transaction
+      (``release_range``).  A slice is durable on disk before the commit
+      publishes its pointer (§2.1), so between ``create_slice`` returning
+      and the commit landing the bytes look like garbage to a metadata
+      scan — and a commit can take longer than two whole GC scans.  The
+      tier-3 rewrite therefore never collects a pending range, no matter
+      how many scans called it garbage.
+    """
+
+    def __init__(self, path: str, stats: Optional[StorageStats] = None):
         self.path = path
         self.lock = threading.Lock()
+        self._idle = threading.Condition(self.lock)
         self.size = 0
+        self._inflight = 0
+        self._blocked = False
+        self._stats = stats
         self._fh = open(path, "wb+", buffering=0)
+        # Sorted disjoint (start, end) ranges reserved but not yet
+        # acknowledged as committed/abandoned by the creating client.
+        self.pending: List[Tuple[int, int]] = []
+        # Handoff ACKs race the GC's scan pipeline: a commit lands AFTER
+        # the metadata walk built the live list but BEFORE the server's
+        # pass runs, so the just-released range still looks like garbage
+        # to that pass.  Releases therefore stay shielded until a walk
+        # that STARTED after the release has confirmed them garbage:
+        # (monotonic-timestamp, start, end), pruned once old enough.
+        # Only recorded while GC is live on this server (``gc_active``).
+        self._released: List[Tuple[float, int, int]] = []
+        self.gc_active = False
+
+    def _reserve(self, length: int) -> Tuple[int, int]:
+        """Claim ``[size, size+length)``; returns (offset, fileno)."""
+        t0 = time.perf_counter()
+        with self.lock:
+            while self._blocked:
+                self._idle.wait()
+            wait = time.perf_counter() - t0
+            off = self.size
+            self.size += length
+            self._inflight += 1
+            self.pending.append((off, off + length))
+            fd = self._fh.fileno()
+        if self._stats is not None and wait > 1e-7:
+            self._stats.add(append_lock_wait_s=wait)
+        return off, fd
+
+    def release_range(self, offset: int, length: int) -> None:
+        """Handoff over: the creating transaction committed (the range is
+        referenced) or finally aborted (it is ordinary garbage) — either
+        way scans whose walk starts after this instant see the truth.
+        Idempotent."""
+        with self.lock:
+            self.pending = _subtract_intervals(
+                self.pending, [(offset, offset + length)])
+            if self.gc_active:
+                self._released.append(
+                    (time.monotonic(), offset, offset + length))
+
+    def gc_shield(self, cutoff: float) -> List[Tuple[int, int]]:
+        """Ranges the GC rewrite must preserve regardless of the two-scan
+        verdict: everything still pending, plus every range released at or
+        after ``cutoff`` (the start of the walk behind the PREVIOUS scan —
+        older releases were either live in that walk or garbage it could
+        trust).  Returns sorted disjoint intervals; prunes the log."""
+        with self.lock:
+            self._released = [r for r in self._released if r[0] >= cutoff]
+            ivs = list(self.pending) + [(s, e)
+                                        for _, s, e in self._released]
+        ivs.sort()
+        out: List[Tuple[int, int]] = []
+        for s, e in ivs:
+            if out and s <= out[-1][1]:
+                out[-1] = (out[-1][0], max(out[-1][1], e))
+            else:
+                out.append((s, e))
+        return out
+
+    def _release(self) -> None:
+        with self.lock:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._idle.notify_all()
+
+    def _quiesce_locked(self) -> None:
+        """With ``self.lock`` held: park new reservations and wait until
+        every in-flight write has retired.  Caller must ``_unblock``."""
+        self._blocked = True
+        while self._inflight:
+            self._idle.wait()
+
+    def _unblock_locked(self) -> None:
+        self._blocked = False
+        self._idle.notify_all()
+
+    @staticmethod
+    def _pwrite_all(fd: int, data, off: int) -> None:
+        view = memoryview(data)
+        written = 0
+        while written < len(view):
+            written += os.pwrite(fd, view[written:], off + written)
 
     def append(self, data: bytes) -> int:
-        with self.lock:
-            off = self.size
-            self._fh.seek(off)
-            self._fh.write(data)
-            self.size += len(data)
-            return off
+        off, fd = self._reserve(len(data))
+        try:
+            self._pwrite_all(fd, data, off)
+        finally:
+            self._release()
+        return off
 
     def append_many(self, parts: Sequence[bytes]) -> int:
-        """Append ``parts`` back-to-back under ONE lock acquisition; returns
-        the offset of the first part.  Parts are contiguous on disk, so the
+        """Append ``parts`` back-to-back in ONE reservation; returns the
+        offset of the first part.  Parts are contiguous on disk, so the
         per-part pointers carved from the return value are adjacent —
         exactly what ``Extent.can_merge`` collapses at the metadata layer."""
-        with self.lock:
-            off = self.size
-            self._fh.seek(off)
-            self._fh.write(b"".join(parts))
-            self.size += sum(len(p) for p in parts)
-            return off
+        blob = b"".join(parts)
+        off, fd = self._reserve(len(blob))
+        try:
+            self._pwrite_all(fd, blob, off)
+        finally:
+            self._release()
+        return off
 
     def read(self, offset: int, length: int) -> bytes:
         # Positional read: no shared file-offset state between readers.
@@ -136,6 +272,7 @@ class _BackingFile:
 
     def close(self) -> None:
         with self.lock:
+            self._quiesce_locked()
             self._fh.close()
 
 
@@ -144,13 +281,21 @@ class StorageServer:
 
     def __init__(self, server_id: int, root_dir: str,
                  num_backing_files: int = 8,
-                 fail_injected: bool = False):
+                 fail_injected: bool = False,
+                 service_time_s: float = 0.0):
         self.server_id = server_id
         self.root_dir = root_dir
         self.num_backing_files = num_backing_files
         self.stats = StorageStats()
         self.alive = True
         self._fail_injected = fail_injected
+        # Modeled per-round service time (network RTT + device latency)
+        # for scaling benchmarks, mirroring the metadata plane's
+        # ``kv_service_time``: in-process calls return in microseconds,
+        # which hides round-trip *overlap* — the very thing parallel
+        # appenders buy.  The sleep releases the GIL and is taken outside
+        # every lock, so concurrent rounds genuinely overlap.
+        self.service_time_s = service_time_s
         os.makedirs(root_dir, exist_ok=True)
         self._files: Dict[str, _BackingFile] = {}
         self._files_lock = threading.Lock()
@@ -160,6 +305,13 @@ class StorageServer:
         # filesystem scans (per-file garbage interval lists, intersected
         # pass over pass).
         self._gc_prev_garbage: Dict[str, List[Tuple[int, int]]] = {}
+        # Start of the metadata walk behind the previous pass's live list;
+        # -inf = no previous walk, shield every recorded release.
+        self._gc_prev_walk_start = float("-inf")
+
+    def _service_delay(self) -> None:
+        if self.service_time_s > 0.0:
+            time.sleep(self.service_time_s)
 
     # ------------------------------------------------------------------ API
     def create_slice(self, data: bytes,
@@ -172,6 +324,7 @@ class StorageServer:
         """
         if not self.alive:
             raise StorageError(f"server {self.server_id} is down")
+        self._service_delay()
         bf = self._pick_backing_file(locality_hint)
         off = bf.append(data)
         self.stats.add(bytes_written=len(data), slices_created=1,
@@ -195,6 +348,7 @@ class StorageServer:
             raise StorageError(f"server {self.server_id} is down")
         if not parts:
             return []
+        self._service_delay()
         bf = self._pick_backing_file(locality_hint)
         base = bf.append_many(parts)
         total = sum(len(p) for p in parts)
@@ -208,6 +362,20 @@ class StorageServer:
             off += len(p)
         return out
 
+    def release_slices(self, ptrs: Iterable[SlicePointer]) -> None:
+        """Close the create→commit handoff window for ``ptrs`` (see
+        ``_BackingFile``): called by the client once the transaction that
+        created the slices has committed or finally aborted.  Unknown
+        pointers and pointers for other servers are ignored; releasing a
+        range twice is a no-op."""
+        for p in ptrs:
+            if p.server_id != self.server_id:
+                continue
+            with self._files_lock:
+                bf = self._files.get(p.backing_file)
+            if bf is not None:
+                bf.release_range(p.offset, p.length)
+
     def retrieve_slice(self, ptr: SlicePointer) -> bytes:
         """Follow a pointer: open the named file, read, return (§2.2)."""
         if not self.alive:
@@ -215,6 +383,7 @@ class StorageServer:
         if ptr.server_id != self.server_id:
             raise StorageError(
                 f"pointer for server {ptr.server_id} sent to {self.server_id}")
+        self._service_delay()
         bf = self._get_backing_file(ptr.backing_file)
         data = bf.read(ptr.offset, ptr.length)
         if len(data) != ptr.length:
@@ -243,6 +412,7 @@ class StorageServer:
             raise StorageError(f"server {self.server_id} is down")
         if not ptrs:
             return []
+        self._service_delay()
         total = sum(p.length for p in ptrs)
         buf = memoryview(bytearray(total))
         out: List[memoryview] = []
@@ -287,7 +457,7 @@ class StorageServer:
                     path = os.path.join(self.root_dir, name)
                     if not create and not os.path.exists(path):
                         raise StorageError(f"no backing file {name}")
-                    bf = _BackingFile(path)
+                    bf = _BackingFile(path, stats=self.stats)
                     if not create:
                         bf.size = os.path.getsize(path)
                     self._files[name] = bf
@@ -308,15 +478,30 @@ class StorageServer:
         return total
 
     def gc_pass(self, live: Iterable[SlicePointer],
-                max_files: Optional[int] = None) -> dict:
+                max_files: Optional[int] = None,
+                walk_started_at: Optional[float] = None) -> dict:
         """One garbage-collection pass given the filesystem-wide live list.
 
         ``live`` is the in-use pointer list the metadata scan produced for
         this server (delivered via a reserved WTF directory in the real
         system — the driver in ``gc.py`` does exactly that).  Applies the
         two-consecutive-scans rule, then sparse-rewrites the files with the
-        most garbage first.
+        most garbage first.  ``walk_started_at`` (``time.monotonic``) is
+        when the metadata walk behind ``live`` began — handoff releases
+        newer than the *previous* pass's walk start stay shielded, since
+        neither walk can have observed their commit.
         """
+        now = time.monotonic()
+        if walk_started_at is None:
+            walk_started_at = now
+        # Releases older than the previous walk's start were visible to
+        # it: committed→live (not garbage) or abandoned→trustable garbage.
+        cutoff = self._gc_prev_walk_start
+        self._gc_prev_walk_start = walk_started_at
+        with self._files_lock:
+            for bf in self._files.values():
+                bf.gc_active = True
+
         live_by_file: Dict[str, List[Tuple[int, int]]] = {}
         for p in live:
             if p.server_id != self.server_id:
@@ -339,11 +524,21 @@ class StorageServer:
             garbage_now[name] = gaps
             garbage_per_file[name] = sum(e - s for s, e in gaps)
 
-        # Two-scan rule: only byte ranges that were garbage last scan too.
+        # Two-scan rule: only byte ranges that were garbage last scan too
+        # may be reclaimed — and never a range still pending its
+        # create→commit handoff (a commit can outlast any number of
+        # scans, so the scan-count rule alone cannot close that window).
+        # The confirmed intervals — not the live list — drive the rewrite
+        # below: every unconfirmed byte is preserved verbatim.
+        confirmed: Dict[str, List[Tuple[int, int]]] = {}
         collectable: Dict[str, int] = {}
         for name, gaps in garbage_now.items():
             both = _intersect_intervals(
                 gaps, self._gc_prev_garbage.get(name, []))
+            bf = self._files.get(name)
+            if bf is not None:
+                both = _subtract_intervals(both, bf.gc_shield(cutoff))
+            confirmed[name] = both
             collectable[name] = sum(e - s for s, e in both)
         self._gc_prev_garbage = garbage_now
 
@@ -355,7 +550,7 @@ class StorageServer:
         for name, garbage in by_garbage:
             if garbage == 0 or collectable.get(name, 0) == 0:
                 continue
-            r, w = self._sparse_rewrite(name, live_by_file.get(name, []))
+            r, w = self._sparse_rewrite(name, confirmed.get(name, []))
             reclaimed += r
             rewritten += w
             files_compacted += 1
@@ -367,27 +562,49 @@ class StorageServer:
                 "files": files_compacted}
 
     def _sparse_rewrite(self, name: str,
-                        live: List[Tuple[int, int]]) -> Tuple[int, int]:
-        """Rewrite a backing file keeping only live extents, seeking past
-        garbage (→ sparse file, offsets preserved, pointers stay valid)."""
+                        punch: List[Tuple[int, int]]) -> Tuple[int, int]:
+        """Rewrite a backing file punching holes ONLY in ``punch`` — the
+        (start, end) ranges confirmed garbage by two consecutive scans.
+        Every other byte is copied verbatim: data appended after the scan
+        built its live list (durable but not yet visible to the metadata
+        walk) must survive the rewrite.  Offsets are preserved, so
+        pointers stay valid."""
         bf = self._get_backing_file(name)
         with bf.lock:
-            tmp = bf.path + ".gc"
-            written = 0
-            with open(tmp, "wb") as out:
-                for off, ln in sorted(live):
-                    data = os.pread(bf._fh.fileno(), ln, off)
-                    out.seek(off)           # seek past garbage → hole
-                    out.write(data)
-                    written += ln
-                out.truncate(max(bf.size, 0))
-            old_real = os.stat(bf.path).st_blocks * 512
-            os.replace(tmp, bf.path)
-            bf._fh.close()
-            bf._fh = open(bf.path, "rb+", buffering=0)
-            new_real = os.stat(bf.path).st_blocks * 512
-            reclaimed = max(0, old_real - new_real)
-            return reclaimed, written
+            # The rewrite swaps the file descriptor; an append writing
+            # through the old fd would land in the replaced inode and be
+            # lost.  Park new reservations and drain in-flight writes
+            # before touching the fd (appends resume once we unblock).
+            bf._quiesce_locked()
+            try:
+                size = bf.size
+                keep: List[Tuple[int, int]] = []
+                cursor = 0
+                for s, e in punch:              # sorted disjoint (s, e)
+                    s, e = max(0, min(s, size)), max(0, min(e, size))
+                    if s > cursor:
+                        keep.append((cursor, s))
+                    cursor = max(cursor, e)
+                if size > cursor:
+                    keep.append((cursor, size))
+                tmp = bf.path + ".gc"
+                written = 0
+                with open(tmp, "wb") as out:
+                    for off, end in keep:
+                        data = os.pread(bf._fh.fileno(), end - off, off)
+                        out.seek(off)           # seek past garbage → hole
+                        out.write(data)
+                        written += end - off
+                    out.truncate(max(size, 0))
+                old_real = os.stat(bf.path).st_blocks * 512
+                os.replace(tmp, bf.path)
+                bf._fh.close()
+                bf._fh = open(bf.path, "rb+", buffering=0)
+                new_real = os.stat(bf.path).st_blocks * 512
+                reclaimed = max(0, old_real - new_real)
+                return reclaimed, written
+            finally:
+                bf._unblock_locked()
 
     # ------------------------------------------------------------- failures
     def crash(self) -> None:

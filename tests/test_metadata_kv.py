@@ -173,3 +173,103 @@ def test_concurrent_commutative_appends_threaded():
     assert len(lst) == N * M
     assert len(set(lst)) == N * M
     assert kv.stats.aborts == 0, "commutative appends must never abort"
+
+
+# ------------------------------------------------ commit-path diagnostics
+def test_conflicts_counter_counts_only_version_validation():
+    """``conflicts`` is the §2.5 signal — true OCC read-version validation
+    failures.  Injected aborts and precondition failures bump ``aborts``
+    (or raise) without polluting it."""
+    kv = WarpKV()
+    kv.put("s", "k", 0)
+
+    t1 = kv.begin()
+    t1.get("s", "k")
+    kv.put("s", "k", 1)                    # move the version under t1
+    t1.put("s", "k", 99)
+    with pytest.raises(KVConflict):
+        t1.commit()
+    assert kv.stats.conflicts == 1
+    assert kv.stats.aborts == 1
+
+    kv.inject_aborts(1)
+    t2 = kv.begin()
+    t2.put("s", "k", 2)
+    with pytest.raises(KVConflict):
+        t2.commit()
+    assert kv.stats.conflicts == 1, "injected aborts are not conflicts"
+    assert kv.stats.aborts == 2
+
+    class Never(ListAppend):
+        def precondition(self, value):
+            return False
+
+    t3 = kv.begin()
+    t3.commute("s", "lst", Never(["x"]))
+    with pytest.raises(PreconditionFailed):
+        t3.commit()
+    assert kv.stats.conflicts == 1, "precondition failures are not conflicts"
+
+
+def test_group_commit_leader_handoff_under_contention():
+    """The leader-handoff group commit: a retiring leader hands the batch
+    leadership to the queue head instead of letting every follower race a
+    mutex.  Under contention some drains must batch more than one commit,
+    every commit lands, and the wait/hold clocks tick."""
+    kv = WarpKV()
+    N, M = 8, 50
+
+    def worker(i):
+        for j in range(M):
+            txn = kv.begin()
+            txn.put("s", (i, j), j)
+            txn.commit()
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+
+    s = kv.stats.snapshot()
+    assert s["commits"] == N * M
+    assert 0 < s["leader_drains"] <= N * M
+    assert len(kv.keys("s")) == N * M
+    assert s["commit_hold_s"] > 0.0
+    assert s["commit_wait_s"] >= 0.0
+
+
+def test_subscribe_attach_mid_stream_no_gap():
+    """Regression for the snapshot-then-tail handoff: a subscriber that
+    attaches WHILE commits are in flight must see a gap-free per-shard
+    sequence and converge on the exact latest value of every key — no
+    event may fall between the replay and the live tail."""
+    kv = WarpKV()
+    M = 300
+    seen = {}
+    seqs = []
+    started = threading.Event()
+
+    def committer():
+        for j in range(M):
+            kv.put("s", j % 7, j)
+            if j == M // 4:
+                started.set()
+
+    th = threading.Thread(target=committer)
+    th.start()
+    started.wait()
+    cancel = kv.subscribe(
+        lambda sp, k, v, ver, shard, seq: (
+            seen.__setitem__((sp, k), v), seqs.append(seq)),
+        with_meta=True)
+    th.join()
+
+    assert seqs == list(range(1, len(seqs) + 1)), \
+        "per-subscriber sequence must be gap-free from 1"
+    for k in range(7):
+        assert seen[("s", k)] == kv.get("s", k), \
+            "subscriber diverged from the store"
+
+    before = len(seqs)
+    cancel()
+    kv.put("s", "post-cancel", 1)
+    assert len(seqs) == before, "cancelled subscriber still delivered"

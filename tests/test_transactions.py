@@ -323,3 +323,116 @@ def test_open_w_truncates_same_txn_writes(cluster, fs):
         fs.close(fd)
     assert fs.stat("/t3")["size"] == 5
     assert read_file(fs, "/t3") == b"fresh"
+
+
+# ------------------------------------------------- O_APPEND write routing
+def test_write_on_append_fds_across_clients_loses_nothing(cluster):
+    """Regression: plain ``write`` on an ``"a"``-mode fd used to be a
+    positional write at the EOF the fd cached at open — concurrent clients
+    opened at the same EOF and silently overwrote each other (bytes lost,
+    zero conflicts).  O_APPEND writes must land at the CURRENT end of file
+    atomically: every record survives exactly once."""
+    setup = cluster.client()
+    make_file(setup, "/alog", b"")
+    N, M = 6, 25
+
+    def worker(i):
+        c = cluster.client()
+        fd = c.open("/alog", "a")
+        for j in range(M):
+            c.write(fd, f"{i:02d}:{j:03d};".encode())
+        c.close(fd)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+
+    data = read_file(setup, "/alog")
+    assert len(data) == N * M * 7, "appended bytes were lost"
+    records = [r for r in data.decode().split(";") if r]
+    assert len(set(records)) == N * M, "records overwrote each other"
+
+
+def test_append_fd_write_ignores_seek(cluster, fs):
+    """POSIX O_APPEND: the fd offset is advisory — a seek must not turn
+    the next write into an overwrite at that offset."""
+    make_file(fs, "/seeklog", b"0123456789")
+    fd = fs.open("/seeklog", "a")
+    fs.seek(fd, 0, SEEK_SET)
+    fs.write(fd, b"TAIL")
+    fs.close(fd)
+    assert read_file(fs, "/seeklog") == b"0123456789TAIL"
+
+
+def test_writev_on_append_fd_lands_at_eof(cluster, fs):
+    """Gather-writes on an O_APPEND fd append the whole batch contiguously
+    at the current EOF, concurrent-writer-safe like scalar ``write``."""
+    make_file(fs, "/vlog", b"head;")
+    fd = fs.open("/vlog", "a")
+    fs.seek(fd, 0, SEEK_SET)              # advisory; must not matter
+    n = fs.writev(fd, [b"one;", b"two;", b"three;"])
+    fs.close(fd)
+    assert n == 14
+    assert read_file(fs, "/vlog") == b"head;one;two;three;"
+
+
+def test_appends_racing_truncate_never_tear_records(cluster):
+    """Truncate is a structural inode change, so it SERIALIZES against
+    appends (§2.5's zero-conflict promise is append-vs-append only).  Under
+    a truncate storm the file must always be a clean record boundary: every
+    surviving byte belongs to a whole record, nothing is ever torn or
+    resurrected."""
+    setup = cluster.client()
+    make_file(setup, "/trunclog", b"")
+    stop = threading.Event()
+    N, M = 3, 30
+
+    def appender(i):
+        c = cluster.client()
+        fd = c.open("/trunclog", "a")
+        for j in range(M):
+            c.write(fd, f"[{i}:{j:04d}]".encode())   # 8-byte records
+        c.close(fd)
+
+    def truncator():
+        c = cluster.client()
+        fd = c.open("/trunclog", "rw")
+        while not stop.is_set():
+            c.truncate(fd, 0)
+        c.close(fd)
+
+    threads = [threading.Thread(target=appender, args=(i,))
+               for i in range(N)]
+    tt = threading.Thread(target=truncator)
+    tt.start()
+    for t in threads: t.start()
+    for t in threads: t.join()
+    stop.set()
+    tt.join()
+
+    data = read_file(setup, "/trunclog")
+    assert len(data) % 8 == 0, f"torn record: {data[-16:]!r}"
+    recs = [data[k:k + 8] for k in range(0, len(data), 8)]
+    assert len(set(recs)) == len(recs), "a truncated record was resurrected"
+    for r in recs:
+        assert r[:1] == b"[" and r[7:] == b"]", f"corrupt record {r!r}"
+
+
+def test_replayed_append_reuses_recorded_pointers(cluster, fs):
+    """§2.6 for the append path: a replayed append must paste the slice
+    pointers its first attempt recorded, not re-store the payload."""
+    make_file(fs, "/replaylog", b"!")
+    payload = b"R" * 20_000
+
+    def srv_writes():
+        return sum(s.stats.bytes_written for s in cluster.servers.values())
+
+    fd = fs.open("/replaylog", "a")
+    before = srv_writes()
+    cluster.kv.inject_aborts(2)
+    fs.write(fd, payload)                 # auto-commit; replays internally
+    fs.close(fd)
+    assert fs.stats.txn_retries >= 2
+    assert srv_writes() - before == len(payload), \
+        "replay re-stored the payload instead of reusing its pointers"
+    assert read_file(fs, "/replaylog") == b"!" + payload
