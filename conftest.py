@@ -7,6 +7,13 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "src"))
 
+# Run the whole tier-1 suite under the runtime lock-order witness: core
+# modules wrap their locks via repro.core.testing.witness_lock, so any
+# acquisition against the declared order (repro.analysis.lockspec) raises
+# LockOrderViolation at acquisition time instead of deadlocking.  Set
+# WTF_LOCK_WITNESS=0 to opt out.
+os.environ.setdefault("WTF_LOCK_WITNESS", "1")
+
 collect_ignore = []
 try:
     import hypothesis  # noqa: F401

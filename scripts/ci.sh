@@ -23,6 +23,17 @@ else
         || echo "hypothesis absent (property suites run seeded only)"
 fi
 
+echo "== analysis: concurrency invariant lints (WTF001-WTF004) =="
+# The static pass must be clean (or explicitly baselined) before we spend
+# minutes on the suite: a lock-order inversion or blocking-under-lock
+# regression fails here in seconds.  The JSON report is left in
+# benchmarks/results/ for the CI workflow to upload as a build artifact;
+# the human-readable pass prints any findings to the log.
+mkdir -p benchmarks/results
+python -m repro.analysis src/repro --format json \
+    --out benchmarks/results/analysis_report.json
+python -m repro.analysis src/repro
+
 echo "== tier-1: pytest =="
 # includes the write-scheduler, write-behind, fault-injection and
 # interleaving suites (tests/test_write_sched.py, test_write_behind.py,

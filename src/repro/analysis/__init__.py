@@ -1,0 +1,66 @@
+"""Concurrency invariant analyzer for the WTF reproduction.
+
+Run as ``python -m repro.analysis src/repro`` (add ``--format json`` for the
+machine-readable report, ``--only WTF002`` to iterate on one rule).  The
+pass is pure stdlib ``ast`` — no third-party dependencies — and is gated in
+CI by the ``analysis`` stage of ``scripts/ci.sh``: any finding that is
+neither suppressed inline nor listed in ``scripts/lint_baseline.json``
+fails the build.
+
+Declared lock order
+-------------------
+The global order lives in :mod:`repro.analysis.lockspec` and is shared with
+the runtime witness (``repro.core.testing.LockOrderWatchdog``), so the
+static declaration and the dynamic behavior can never drift apart.
+Outermost first::
+
+    kv.commit_queue < kv.stripe (sorted (shard, stripe))
+                    < lease.tables < lease.table
+                    < kv.wal < sub.fanin < wlog.consumer < cache.plan
+                    < kv.space < storage.files < storage.backing
+                    < kv.service
+
+Rule catalog
+------------
+WTF001  lock-order
+    Builds the lock-acquisition graph (which declared locks are held at
+    each acquisition site, interprocedurally one level deep through
+    same-package calls) and flags (a) acquisitions whose rank is <= an
+    already-held rank, (b) same-level multi-acquisition outside a
+    ``sorted(...)``-driven loop for ``multi="sorted"`` families, and
+    (c) cycles among unranked locks.
+
+WTF002  blocking-under-lock
+    Blocking calls (``os.pwrite``/``os.pread``/``os.preadv``/``os.fsync``/
+    ``time.sleep``/``open``/executor ``submit``/``result``/``join``/
+    ``shutdown``/non-``Condition`` ``.wait``) inside a lock's ``with``
+    body.  ``Condition.wait`` is exempt — it releases the lock.  This is
+    the PR 7 append-lock bug class.
+
+WTF003  unprotected-shared-write
+    In classes that own locks: augmented assignments to ``self.*`` outside
+    any lock, plain assignments to attributes written both under and
+    outside locks (mixed discipline), and any ``+=`` on a stats-dataclass
+    field that bypasses ``AtomicStatsMixin.add()``.  This is the PR 4
+    lost-update class.
+
+WTF004  commute-purity
+    ``CommutingOp.apply`` implementations that raise, perform I/O or read
+    clocks/randomness, read KV/transaction state, or mutate their inputs /
+    ``self`` instead of building fresh values ("apply cannot fail", paper
+    §2.5); plus ``version_preserving`` ops whose rebuilt region does not
+    carry ``end`` through verbatim.
+
+Suppression convention
+----------------------
+Append ``# wtf-lint: ignore[WTF002] -- one-line justification`` to the
+flagged line (or the line directly above it).  Multiple IDs may be listed
+comma-separated.  The justification is mandatory: bare ignores are
+reported as findings themselves.  ``scripts/lint_baseline.json`` exists for
+grandfathered findings and ships empty — prefer a fix or an inline reason.
+"""
+from __future__ import annotations
+
+from . import lockspec  # noqa: F401  (re-export the shared order spec)
+
+__all__ = ["lockspec"]

@@ -1,0 +1,83 @@
+"""CLI: ``python -m repro.analysis src/repro [--format json] [--only WTF002]``.
+
+Exit status is non-zero iff there is at least one active finding (not
+inline-suppressed, not baselined) — this is what the ``analysis`` stage of
+``scripts/ci.sh`` gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import lockspec
+from .report import (RULES, apply_baseline, apply_suppressions,
+                     active, load_baseline, render_json, render_text,
+                     write_baseline)
+from .rules import run_rules
+from .scanner import scan_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="WTF concurrency invariant analyzer (WTF001-WTF004)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--only", action="append", default=[],
+                    metavar="RULE", help="run only these rules "
+                    "(repeatable or comma-separated, e.g. WTF002)")
+    ap.add_argument("--baseline", default="scripts/lint_baseline.json",
+                    help="baseline file of grandfathered finding keys")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline file from current findings")
+    ap.add_argument("--out", metavar="FILE",
+                    help="also write the JSON report to FILE")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--show-order", action="store_true",
+                    help="print the declared lock order and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, title in sorted(RULES.items()):
+            print(f"{rid}  {title}")
+        return 0
+    if args.show_order:
+        print(lockspec.declared_order_doc())
+        return 0
+
+    only = None
+    if args.only:
+        only = {r.strip().upper() for sel in args.only
+                for r in sel.split(",") if r.strip()}
+        unknown = only - set(RULES)
+        if unknown:
+            ap.error(f"unknown rule id(s): {', '.join(sorted(unknown))}")
+
+    mods = scan_paths([Path(p) for p in args.paths])
+    findings = run_rules(mods, only=only)
+    sources = {str(m.path): m.source for m in mods}
+    findings = apply_suppressions(findings, sources)
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        write_baseline(findings, baseline_path)
+        print(f"wrote {baseline_path}", file=sys.stderr)
+    elif not args.no_baseline:
+        apply_baseline(findings, load_baseline(baseline_path))
+
+    root = " ".join(args.paths)
+    json_doc = render_json(findings, root)
+    if args.out:
+        Path(args.out).write_text(json_doc + "\n")
+    if args.format == "json":
+        print(json_doc)
+    else:
+        print(render_text(findings, root))
+    return 1 if active(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

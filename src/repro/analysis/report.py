@@ -1,0 +1,172 @@
+"""Findings, inline suppressions, baseline, and report rendering."""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "WTF001": "lock-order violation / unordered multi-acquisition",
+    "WTF002": "blocking call under a lock",
+    "WTF003": "unprotected write to shared state / stats bypass",
+    "WTF004": "impure or version-unsafe CommutingOp",
+}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*wtf-lint:\s*ignore\[([A-Za-z0-9*,\s]+)\]\s*(?:--\s*([^#]*))?")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str                    # repo-relative if possible
+    line: int
+    qualname: str
+    message: str
+    detail: str = ""
+    #: extra source lines where a suppression comment also silences this
+    #: finding (origin of an interprocedural effect, governing ``with``).
+    also_lines: Tuple[int, ...] = ()
+    suppressed: bool = False
+    suppress_reason: str = ""
+    baselined: bool = False
+
+    @property
+    def key(self) -> str:
+        """Line-number-insensitive identity used by the baseline file."""
+        return f"{self.rule}:{self.path}:{self.qualname}:{self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "title": RULES.get(self.rule, ""),
+            "path": self.path,
+            "line": self.line,
+            "function": self.qualname,
+            "message": self.message,
+            "detail": self.detail,
+            "suppressed": self.suppressed,
+            "suppress_reason": self.suppress_reason,
+            "baselined": self.baselined,
+        }
+
+
+@dataclass
+class Suppressions:
+    """Parsed ``# wtf-lint: ignore[...] -- reason`` comments of one file."""
+    #: line -> (rule ids, reason, standalone-comment-line?)
+    by_line: Dict[int, Tuple[Set[str], str, bool]] = field(
+        default_factory=dict)
+    bare: List[int] = field(default_factory=list)   # ignores missing a reason
+
+    @classmethod
+    def parse(cls, source: str) -> "Suppressions":
+        out = cls()
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            reason = (m.group(2) or "").strip()
+            if not reason:
+                out.bare.append(lineno)
+                continue
+            standalone = text.lstrip().startswith("#")
+            out.by_line[lineno] = (rules, reason, standalone)
+        return out
+
+    def match(self, rule: str, lines: Iterable[int]) -> Optional[str]:
+        # an inline suppression covers its own line; a standalone comment
+        # line covers the statement directly below it
+        for ln in lines:
+            for anchor, need_standalone in ((ln, False), (ln - 1, True)):
+                hit = self.by_line.get(anchor)
+                if hit and (rule in hit[0] or "*" in hit[0]) \
+                        and (hit[2] or not need_standalone):
+                    return hit[1]
+        return None
+
+
+def apply_suppressions(findings: List[Finding],
+                       sources: Dict[str, str]) -> List[Finding]:
+    """Mark findings silenced by inline comments; emit a finding for any
+    ignore comment that lacks a justification."""
+    parsed = {path: Suppressions.parse(src) for path, src in sources.items()}
+    for f in findings:
+        sup = parsed.get(f.path)
+        if sup is None:
+            continue
+        reason = sup.match(f.rule, (f.line, *f.also_lines))
+        if reason is not None:
+            f.suppressed = True
+            f.suppress_reason = reason
+    for path, sup in parsed.items():
+        for ln in sup.bare:
+            findings.append(Finding(
+                rule="WTF000", path=path, line=ln, qualname="<module>",
+                message="wtf-lint ignore without a '-- reason' justification"))
+    return findings
+
+
+# ---------------------------------------------------------------- baseline
+
+def load_baseline(path: Path) -> Set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text() or "[]")
+    return {entry["key"] for entry in data}
+
+
+def apply_baseline(findings: List[Finding], keys: Set[str]) -> None:
+    for f in findings:
+        if not f.suppressed and f.key in keys:
+            f.baselined = True
+
+
+def write_baseline(findings: Sequence[Finding], path: Path) -> None:
+    active = [f for f in findings if not f.suppressed]
+    path.write_text(json.dumps(
+        [{"key": f.key, "note": "grandfathered"} for f in active],
+        indent=2) + "\n")
+
+
+# --------------------------------------------------------------- rendering
+
+def active(findings: Sequence[Finding]) -> List[Finding]:
+    return [f for f in findings if not f.suppressed and not f.baselined]
+
+
+def render_text(findings: Sequence[Finding], root: str) -> str:
+    act = active(findings)
+    lines: List[str] = []
+    by_rule: Dict[str, List[Finding]] = {}
+    for f in act:
+        by_rule.setdefault(f.rule, []).append(f)
+    for rule in sorted(by_rule):
+        lines.append(f"{rule}  {RULES.get(rule, '')}")
+        for f in sorted(by_rule[rule], key=lambda x: (x.path, x.line)):
+            lines.append(f"  {f.path}:{f.line}  [{f.qualname}] {f.message}")
+            if f.detail:
+                lines.append(f"      {f.detail}")
+        lines.append("")
+    n_sup = sum(1 for f in findings if f.suppressed)
+    n_base = sum(1 for f in findings if f.baselined)
+    lines.append(f"{len(act)} finding(s) in {root} "
+                 f"({n_sup} suppressed, {n_base} baselined)")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], root: str) -> str:
+    return json.dumps({
+        "version": 1,
+        "root": root,
+        "rules": RULES,
+        "counts": {
+            "active": len(active(findings)),
+            "suppressed": sum(1 for f in findings if f.suppressed),
+            "baselined": sum(1 for f in findings if f.baselined),
+        },
+        "findings": [f.to_json() for f in findings],
+    }, indent=2)

@@ -1,0 +1,568 @@
+"""The four concurrency rules (see the package docstring for the catalog).
+
+Interprocedural reasoning is name-based and deliberately conservative:
+``self.foo()`` resolves within the class (then its scanned bases);
+``obj.foo()`` resolves only when exactly one scanned class defines
+``foo``; anything else is opaque.  Resolved callees contribute their
+transitive lock acquisitions and blocking calls to the caller's context
+(cycle-guarded memoized closure), which is what catches "holds the stripe
+locks, calls three functions down, and *that* one sleeps".
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import lockspec
+from .report import Finding
+from .scanner import (AcquireEvent, CallEvent, ClassInfo, FuncSummary,
+                      LockTok, ModuleSummary)
+
+BLOCKING_EXACT = {
+    "os.pwrite", "os.pread", "os.preadv", "os.pwritev",
+    "os.fsync", "os.fdatasync", "os.replace", "time.sleep", "open",
+}
+BLOCKING_METHODS = {"submit", "result", "join", "shutdown", "wait"}
+_CONDITION_HINT = ("_cond", "_idle")
+
+MUTATOR_METHODS = {
+    "append", "extend", "insert", "update", "setdefault", "pop", "popitem",
+    "remove", "discard", "clear", "sort", "reverse", "add", "appendleft",
+}
+IMPURE_ROOTS = {"os", "time", "random", "uuid", "socket"}
+KV_COMPONENTS = {"kv", "_kv", "txn", "_txn", "client", "_client"}
+
+
+# ------------------------------------------------------------ indexing
+
+@dataclass
+class Index:
+    exact: Dict[Tuple[str, Optional[str], str], FuncSummary]
+    by_method: Dict[str, List[FuncSummary]]
+    classes: Dict[str, List[ClassInfo]]
+
+    @classmethod
+    def build(cls, mods: Sequence[ModuleSummary]) -> "Index":
+        exact: Dict[Tuple[str, Optional[str], str], FuncSummary] = {}
+        by_method: Dict[str, List[FuncSummary]] = {}
+        classes: Dict[str, List[ClassInfo]] = {}
+        for m in mods:
+            for f in m.functions:
+                exact[(f.module, f.cls, f.name)] = f
+                by_method.setdefault(f.name, []).append(f)
+            for c in m.classes.values():
+                classes.setdefault(c.name, []).append(c)
+        return cls(exact, by_method, classes)
+
+    def resolve(self, chain: str, ctx: FuncSummary) -> Optional[FuncSummary]:
+        if "()" in chain or "[]" in chain:
+            return None
+        parts = chain.split(".")
+        if len(parts) == 1:
+            name = parts[0]
+            hit = self.exact.get((ctx.module, None, name))
+            if hit is not None:
+                return hit
+            # class constructor in the same module
+            for ci in self.classes.get(name, []):
+                if ci.module == ctx.module:
+                    return self.exact.get((ci.module, name, "__init__"))
+            return None
+        if len(parts) == 2 and parts[0] == "self" and ctx.cls is not None:
+            hit = self.exact.get((ctx.module, ctx.cls, parts[1]))
+            if hit is not None:
+                return hit
+            for ci in self.classes.get(ctx.cls, []):
+                if ci.module != ctx.module:
+                    continue
+                for base in ci.bases:
+                    for bi in self.classes.get(base, []):
+                        hit = self.exact.get((bi.module, base, parts[1]))
+                        if hit is not None:
+                            return hit
+            return None
+        if len(parts) == 2:
+            cands = [f for f in self.by_method.get(parts[1], [])
+                     if f.cls is not None]
+            if len(cands) == 1:
+                return cands[0]
+        return None
+
+
+# ------------------------------------------------------- blocking calls
+
+def _is_condition_wait(chain: str, ctx: FuncSummary,
+                       index: Index) -> bool:
+    parts = chain.split(".")
+    if parts[-1] != "wait" or len(parts) < 2:
+        return False
+    attr = parts[-2]
+    if any(h in attr for h in _CONDITION_HINT):
+        return True
+    if ctx.cls is not None:
+        for ci in index.classes.get(ctx.cls, []):
+            if ci.module == ctx.module and \
+                    ci.lock_attrs.get(attr) == "condition":
+                return True
+    return False
+
+
+def _is_blocking(chain: str, ctx: FuncSummary, index: Index) -> bool:
+    if chain in BLOCKING_EXACT:
+        return True
+    if chain.startswith("os.path."):
+        return False        # path arithmetic, not I/O ('join' collides)
+    leaf = chain.split(".")[-1]
+    if leaf in BLOCKING_METHODS and "." in chain:
+        if leaf == "wait" and _is_condition_wait(chain, ctx, index):
+            return False
+        return True
+    return False
+
+
+# -------------------------------------------------- transitive effects
+
+@dataclass
+class Effects:
+    acquires: List[Tuple[AcquireEvent, FuncSummary]] = field(
+        default_factory=list)
+    blocking: List[Tuple[CallEvent, FuncSummary]] = field(
+        default_factory=list)
+
+
+def _effects(fn: FuncSummary, index: Index,
+             memo: Dict[str, Effects],
+             stack: Set[str]) -> Effects:
+    key = f"{fn.path}:{fn.qualname}"
+    if key in memo:
+        return memo[key]
+    if key in stack:
+        return Effects()
+    stack.add(key)
+    eff = Effects()
+    eff.acquires.extend((a, fn) for a in fn.acquires)
+    for c in fn.calls:
+        if _is_blocking(c.chain, fn, index):
+            eff.blocking.append((c, fn))
+            continue
+        callee = index.resolve(c.chain, fn)
+        if callee is not None and callee is not fn:
+            sub = _effects(callee, index, memo, stack)
+            eff.acquires.extend(sub.acquires)
+            eff.blocking.extend(sub.blocking)
+    stack.discard(key)
+    memo[key] = eff
+    return eff
+
+
+# --------------------------------------------------------------- WTF001
+
+def _check_acquire(tok: LockTok, held: Tuple[LockTok, ...], kind: str,
+                   in_loop: bool, loop_sorted: bool, fn: FuncSummary,
+                   line: int, origin: Optional[FuncSummary],
+                   findings: List[Finding]) -> None:
+    path, qual = str(fn.path), fn.qualname
+    via = ""
+    also: Tuple[int, ...] = ()
+    if origin is not None and origin is not fn:
+        via = f" (via {origin.qualname})"
+        if origin.path == fn.path:
+            also = tuple(a.line for a in origin.acquires
+                         if a.tok.ident == tok.ident)[:1]
+
+    if tok.rank is not None and lockspec.LEVEL_BY_NAME[tok.level].multi \
+            == "sorted" and kind == "bare" and in_loop and not loop_sorted:
+        findings.append(Finding(
+            rule="WTF001", path=path, line=line, qualname=qual,
+            message=f"'{tok.level}' locks acquired in a loop over an "
+                    f"unsorted iterable{via}",
+            detail="the declared order requires strictly ascending "
+                   "(shard, stripe) keys; iterate sorted(...)",
+            also_lines=also))
+
+    if tok.rank is None:
+        return
+    for h in held:
+        if h.rank is None:
+            continue
+        if h.rank > tok.rank:
+            findings.append(Finding(
+                rule="WTF001", path=path, line=line, qualname=qual,
+                message=f"acquires '{tok.level}' (rank {tok.rank}) while "
+                        f"holding '{h.level}' (rank {h.rank}){via}",
+                detail=f"declared order: {h.level} is inner to {tok.level}; "
+                       f"outer lock held since line {h.line}",
+                also_lines=also))
+        elif h.rank == tok.rank:
+            level = lockspec.LEVEL_BY_NAME[tok.level]
+            if level.multi == "sorted":
+                if not (in_loop and loop_sorted):
+                    findings.append(Finding(
+                        rule="WTF001", path=path, line=line, qualname=qual,
+                        message=f"multiple '{tok.level}' locks held without "
+                                f"sorted acquisition{via}",
+                        detail="same-level families may only be "
+                               "multi-acquired in ascending key order",
+                        also_lines=also))
+            elif h.ident != tok.ident or tok.keyed:
+                findings.append(Finding(
+                    rule="WTF001", path=path, line=line, qualname=qual,
+                    message=f"holds two locks of level '{tok.level}' "
+                            f"(multi=none){via}",
+                    also_lines=also))
+
+
+def rule_wtf001(mods: Sequence[ModuleSummary], index: Index,
+                memo: Dict[str, Effects],
+                findings: List[Finding]) -> None:
+    edges: Dict[Tuple[str, str], Tuple[str, int, str]] = {}
+    for m in mods:
+        for fn in m.functions:
+            for a in fn.acquires:
+                _check_acquire(a.tok, a.held, a.kind, a.in_loop,
+                               a.loop_sorted, fn, a.line, None, findings)
+                for h in a.held:
+                    edges.setdefault(
+                        (h.ident, a.tok.ident),
+                        (str(fn.path), a.line, fn.qualname))
+            for c in fn.calls:
+                if not c.held:
+                    continue
+                callee = index.resolve(c.chain, fn)
+                if callee is None or callee is fn:
+                    continue
+                eff = _effects(callee, index, memo, set())
+                for a, origin in eff.acquires:
+                    if any(h.ident == a.tok.ident and not a.tok.keyed
+                           for h in c.held):
+                        continue  # reentrant re-acquire of the same lock
+                    _check_acquire(a.tok, c.held, a.kind,
+                                   a.in_loop, a.loop_sorted or a.kind ==
+                                   "with", fn, c.line, origin, findings)
+                    for h in c.held:
+                        edges.setdefault(
+                            (h.ident, a.tok.ident),
+                            (str(fn.path), c.line, fn.qualname))
+
+    # cycle detection over the full graph (catches unranked locks too)
+    graph: Dict[str, Set[str]] = {}
+    for (a, b) in edges:
+        if a == b:
+            continue
+        graph.setdefault(a, set()).add(b)
+    seen_cycles: Set[Tuple[str, ...]] = set()
+
+    def dfs(node: str, trail: List[str], visiting: Set[str]) -> None:
+        for nxt in graph.get(node, ()):
+            if nxt in visiting:
+                i = trail.index(nxt)
+                cycle = tuple(sorted(trail[i:]))
+                if cycle not in seen_cycles:
+                    seen_cycles.add(cycle)
+                    path, line, qual = edges[(node, nxt)]
+                    findings.append(Finding(
+                        rule="WTF001", path=path, line=line, qualname=qual,
+                        message="lock-acquisition cycle: "
+                                + " -> ".join(trail[i:] + [nxt])))
+            else:
+                visiting.add(nxt)
+                dfs(nxt, trail + [nxt], visiting)
+                visiting.discard(nxt)
+
+    for start in list(graph):
+        dfs(start, [start], {start})
+
+
+# --------------------------------------------------------------- WTF002
+
+def rule_wtf002(mods: Sequence[ModuleSummary], index: Index,
+                memo: Dict[str, Effects],
+                findings: List[Finding]) -> None:
+    emitted: Set[Tuple[str, int, str]] = set()
+
+    def emit(path: str, line: int, qual: str, message: str,
+             also: Tuple[int, ...]) -> None:
+        dkey = (path, line, message)
+        if dkey in emitted:
+            return
+        emitted.add(dkey)
+        findings.append(Finding(rule="WTF002", path=path, line=line,
+                                qualname=qual, message=message,
+                                also_lines=also))
+
+    for m in mods:
+        for fn in m.functions:
+            for c in fn.calls:
+                if not c.held:
+                    continue
+                inner = c.held[-1]
+                lockname = inner.level or inner.attr
+                if _is_blocking(c.chain, fn, index):
+                    emit(str(fn.path), c.line, fn.qualname,
+                         f"blocking call '{c.chain}' under lock "
+                         f"'{lockname}'", (inner.line,))
+                    continue
+                callee = index.resolve(c.chain, fn)
+                if callee is None or callee is fn:
+                    continue
+                eff = _effects(callee, index, memo, set())
+                for b, origin in eff.blocking:
+                    also = (c.line, inner.line) if origin.path == fn.path \
+                        else ()
+                    emit(str(origin.path), b.line, origin.qualname,
+                         f"blocking call '{b.chain}' reached under lock "
+                         f"'{lockname}' held at {fn.qualname}:{c.line}",
+                         also)
+
+
+# --------------------------------------------------------------- WTF003
+
+def rule_wtf003(mods: Sequence[ModuleSummary], index: Index,
+                findings: List[Finding]) -> None:
+    for m in mods:
+        for c in m.classes.values():
+            if not c.lock_attrs:
+                continue
+            methods = [f for f in m.functions if f.cls == c.name
+                       and f.name not in ("__init__", "__post_init__")]
+            assign_sites: Dict[str, List[Tuple[bool, int, str]]] = {}
+            for fn in methods:
+                for w in fn.writes:
+                    parts = w.chain.split(".")
+                    if parts[0] != "self" or len(parts) != 2:
+                        continue
+                    attr = parts[1]
+                    if attr in c.lock_attrs:
+                        continue
+                    if w.is_aug:
+                        if not w.held:
+                            findings.append(Finding(
+                                rule="WTF003", path=str(fn.path),
+                                line=w.line, qualname=fn.qualname,
+                                message=f"augmented write to shared "
+                                        f"'self.{attr}' outside any lock",
+                                detail="read-modify-write on an attribute "
+                                       "of a lock-owning class; lost "
+                                       "updates under concurrency"))
+                    else:
+                        assign_sites.setdefault(attr, []).append(
+                            (bool(w.held), w.line, fn.qualname))
+            for attr, sites in assign_sites.items():
+                if any(h for h, _, _ in sites) and \
+                        any(not h for h, _, _ in sites):
+                    for h, line, qual in sites:
+                        if not h:
+                            findings.append(Finding(
+                                rule="WTF003", path=str(c.path), line=line,
+                                qualname=qual,
+                                message=f"mixed locking discipline: "
+                                        f"'self.{attr}' assigned outside a "
+                                        f"lock here but under a lock "
+                                        f"elsewhere"))
+
+        # stats-bypass: '+=' on a field of an attribute this class assigned
+        # from an AtomicStatsMixin dataclass (locked class or not)
+        for fn in m.functions:
+            if fn.cls is None:
+                continue
+            info = m.classes.get(fn.cls)
+            if info is None or not info.stats_attrs:
+                continue
+            for w in fn.writes:
+                parts = w.chain.split(".")
+                if w.is_aug and len(parts) == 3 and parts[0] == "self" \
+                        and parts[1] in info.stats_attrs:
+                    findings.append(Finding(
+                        rule="WTF003", path=str(fn.path), line=w.line,
+                        qualname=fn.qualname,
+                        message=f"'{w.chain} +=' bypasses "
+                                f"AtomicStatsMixin.add()",
+                        detail="stats dataclasses are mutated from pool "
+                               "threads; use .add(field=delta)"))
+
+
+# --------------------------------------------------------------- WTF004
+
+def _stmts_in_order(node: ast.AST):
+    for st in getattr(node, "body", []):
+        yield st
+        for fld in ("body", "orelse", "finalbody"):
+            for sub in getattr(st, fld, []) or []:
+                yield from _yield_tree(sub)
+        for handler in getattr(st, "handlers", []) or []:
+            for sub in handler.body:
+                yield from _yield_tree(sub)
+
+
+def _yield_tree(st: ast.stmt):
+    yield st
+    for fld in ("body", "orelse", "finalbody"):
+        for sub in getattr(st, fld, []) or []:
+            yield from _yield_tree(sub)
+    for handler in getattr(st, "handlers", []) or []:
+        for sub in handler.body:
+            yield from _yield_tree(sub)
+
+
+def _chain(node: ast.AST) -> Optional[str]:
+    from .scanner import chain_of
+    return chain_of(node)
+
+
+def rule_wtf004(mods: Sequence[ModuleSummary], index: Index,
+                findings: List[Finding]) -> None:
+    for m in mods:
+        for c in m.classes.values():
+            if "CommutingOp" not in c.bases and c.name != "CommutingOp":
+                continue
+            fn = index.exact.get((m.module, c.name, "apply"))
+            if fn is None:
+                continue
+            _check_apply(c, fn, findings)
+            if c.flags.get("version_preserving"):
+                _check_version_preserving(c, fn, findings)
+
+
+def _check_apply(c: ClassInfo, fn: FuncSummary,
+                 findings: List[Finding]) -> None:
+    path, qual = str(fn.path), fn.qualname
+
+    def emit(line: int, message: str, detail: str = "") -> None:
+        findings.append(Finding(rule="WTF004", path=path, line=line,
+                                qualname=qual, message=message,
+                                detail=detail))
+
+    state: Dict[str, str] = {p: "alias" for p in fn.params if p != "self"}
+
+    def rooted_alias(node: ast.AST) -> Optional[str]:
+        chain = _chain(node)
+        if chain is None:
+            return None
+        root = chain.split(".")[0]
+        if root == "self":
+            return "self"
+        if state.get(root) == "alias":
+            return root
+        return None
+
+    for st in _stmts_in_order(fn.node):
+        if isinstance(st, ast.Raise):
+            exc = None
+            if st.exc is not None:
+                node = st.exc.func if isinstance(st.exc, ast.Call) else st.exc
+                exc = _chain(node)
+            if c.name == "CommutingOp" or exc == "NotImplementedError":
+                continue
+            emit(st.lineno, "raise inside CommutingOp.apply",
+                 "apply cannot fail (paper §2.5): validate in "
+                 "precondition(), not at apply time")
+            continue
+
+        if isinstance(st, ast.Assign):
+            for tgt in st.targets:
+                if isinstance(tgt, ast.Name):
+                    value = st.value
+                    if isinstance(value, ast.Call):
+                        state[tgt.id] = "fresh"
+                    elif rooted_alias(value) is not None:
+                        state[tgt.id] = "alias"
+                    else:
+                        state[tgt.id] = "fresh"
+                elif isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                    root = rooted_alias(tgt)
+                    if root == "self":
+                        emit(st.lineno,
+                             "apply mutates op state (self.*)",
+                             "ops must be immutable; build and return "
+                             "fresh values")
+                    elif root is not None:
+                        emit(st.lineno,
+                             f"apply mutates its input '{root}' in place",
+                             "copy first (e.g. list(value)) and mutate "
+                             "the copy")
+
+        if isinstance(st, ast.AugAssign):
+            root = rooted_alias(st.target)
+            if root == "self":
+                emit(st.lineno, "apply mutates op state (self.*)")
+            elif root is not None:
+                emit(st.lineno,
+                     f"apply mutates its input '{root}' in place")
+
+        for node in ast.walk(st):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _chain(node.func)
+            if chain is None:
+                continue
+            parts = chain.split(".")
+            if chain in ("open", "print", "input") or \
+                    parts[0] in IMPURE_ROOTS:
+                emit(node.lineno,
+                     f"impure call '{chain}' in apply",
+                     "apply must be deterministic and side-effect free")
+                continue
+            if set(parts) & KV_COMPONENTS:
+                emit(node.lineno,
+                     f"apply reads KV/transaction state via '{chain}'",
+                     "commuting ops receive their operand; reading live "
+                     "state breaks commutativity")
+                continue
+            if len(parts) >= 2 and parts[-1] in MUTATOR_METHODS:
+                root = parts[0]
+                if root == "self" and len(parts) > 2:
+                    emit(node.lineno,
+                         f"apply mutates op state via '{chain}'")
+                elif state.get(root) == "alias":
+                    emit(node.lineno,
+                         f"apply mutates its input via '{chain}'",
+                         "copy first (e.g. list(value)) and mutate "
+                         "the copy")
+
+
+def _check_version_preserving(c: ClassInfo, fn: FuncSummary,
+                              findings: List[Finding]) -> None:
+    for st in _stmts_in_order(fn.node):
+        if not isinstance(st, ast.Return) or \
+                not isinstance(st.value, ast.Call):
+            continue
+        call = st.value
+        ctor = (_chain(call.func) or "").split(".")[-1]
+        if ctor != "RegionData":
+            continue
+        end_arg: Optional[ast.AST] = None
+        for kw in call.keywords:
+            if kw.arg == "end":
+                end_arg = kw.value
+        if end_arg is None and len(call.args) >= 2:
+            end_arg = call.args[1]
+        if end_arg is None:
+            continue
+        if not (isinstance(end_arg, ast.Attribute)
+                and end_arg.attr == "end"):
+            findings.append(Finding(
+                rule="WTF004", path=str(fn.path), line=st.lineno,
+                qualname=fn.qualname,
+                message="version_preserving op does not carry 'end' "
+                        "through verbatim",
+                detail="validators compare region end; rebuilding it "
+                       "breaks preserves-version commits"))
+
+
+# ----------------------------------------------------------------- driver
+
+def run_rules(mods: Sequence[ModuleSummary],
+              only: Optional[Set[str]] = None) -> List[Finding]:
+    index = Index.build(mods)
+    memo: Dict[str, Effects] = {}
+    findings: List[Finding] = []
+    if only is None or "WTF001" in only:
+        rule_wtf001(mods, index, memo, findings)
+    if only is None or "WTF002" in only:
+        rule_wtf002(mods, index, memo, findings)
+    if only is None or "WTF003" in only:
+        rule_wtf003(mods, index, findings)
+    if only is None or "WTF004" in only:
+        rule_wtf004(mods, index, findings)
+    return findings

@@ -1,0 +1,482 @@
+"""AST scanner: turn each function into a linear stream of events
+(acquisitions, calls, attribute writes, raises), each annotated with the
+set of locks held at that point.
+
+The model is deliberately simple and over-approximate in the direction
+that suits a linter:
+
+* ``with self._lock:`` holds for the lexical body and releases at exit;
+* a bare ``lock.acquire()`` statement holds from that point to the end of
+  the enclosing block (the ``acquire``-loop / ``try/finally``-release
+  idiom used by group commit), and a bare ``.release()`` drops the most
+  recent matching acquisition;
+* branches (``if``/``try``) are walked with the same held set and their
+  net acquisitions leak to the following statements (union of paths).
+
+Names assigned from ``sorted(...)`` are tracked so rules can tell a
+sorted stripe-acquisition loop from an unsorted one.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import lockspec
+
+#: with-targets / acquire-targets are treated as locks when they resolve to
+#: a declared level, are a known lock attribute of the class, or just look
+#: like a lock by name.
+LOCKISH_NAME = re.compile(r"(lock|mutex|_cond\b|_idle\b|_stripes)", re.I)
+
+_LOCK_CTORS = {
+    "Lock": "lock",
+    "RLock": "rlock",
+    "Condition": "condition",
+    "witness_lock": "lock",
+}
+
+
+@dataclass(frozen=True)
+class LockTok:
+    ident: str                   # graph identity: level name or module:cls:attr
+    attr: str
+    level: Optional[str]
+    rank: Optional[int]
+    line: int
+    keyed: bool = False          # acquired through a subscript (lock family)
+
+
+@dataclass(frozen=True)
+class AcquireEvent:
+    tok: LockTok
+    held: Tuple[LockTok, ...]
+    line: int
+    kind: str                    # "with" | "bare"
+    in_loop: bool = False
+    loop_sorted: bool = False
+
+
+@dataclass(frozen=True)
+class CallEvent:
+    chain: str                   # dotted callee chain, e.g. "os.pwrite"
+    held: Tuple[LockTok, ...]
+    line: int
+
+
+@dataclass(frozen=True)
+class WriteEvent:
+    chain: str                   # dotted target, e.g. "self._rr"
+    is_aug: bool
+    held: Tuple[LockTok, ...]
+    line: int
+
+
+@dataclass(frozen=True)
+class RaiseEvent:
+    line: int
+    exc: Optional[str]
+
+
+@dataclass
+class FuncSummary:
+    module: str
+    path: Path
+    cls: Optional[str]
+    name: str
+    qualname: str
+    node: ast.AST
+    params: Tuple[str, ...]
+    acquires: List[AcquireEvent] = field(default_factory=list)
+    calls: List[CallEvent] = field(default_factory=list)
+    writes: List[WriteEvent] = field(default_factory=list)
+    raises: List[RaiseEvent] = field(default_factory=list)
+
+
+@dataclass
+class ClassInfo:
+    module: str
+    path: Path
+    name: str
+    bases: Tuple[str, ...]
+    node: ast.ClassDef
+    lock_attrs: Dict[str, str] = field(default_factory=dict)
+    stats_attrs: Set[str] = field(default_factory=set)
+    flags: Dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleSummary:
+    path: Path
+    module: str
+    source: str
+    tree: ast.Module
+    functions: List[FuncSummary] = field(default_factory=list)
+    classes: Dict[str, ClassInfo] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------- helpers
+
+def chain_of(node: ast.AST) -> Optional[str]:
+    """Dotted rendering of an attribute/name chain; ``[]``/``()`` mark
+    subscripts and intermediate calls.  Returns None for non-chains."""
+    parts: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            parts.append("[]")
+            node = node.value
+        elif isinstance(node, ast.Call):
+            parts.append("()")
+            node = node.func
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            break
+        else:
+            return None
+    return ".".join(reversed(parts))
+
+
+def _const_true(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value is True
+
+
+class _LoopCtx:
+    __slots__ = ("in_loop", "is_sorted")
+
+    def __init__(self, in_loop: bool = False, is_sorted: bool = False):
+        self.in_loop = in_loop
+        self.is_sorted = is_sorted
+
+
+_COMPOUND_BODY_FIELDS = {"body", "orelse", "finalbody", "handlers"}
+
+
+class _FuncWalker:
+    """Single-function walker producing the event stream."""
+
+    def __init__(self, module: ModuleSummary, cls: Optional[ClassInfo],
+                 qualname: str, node: ast.AST):
+        args = node.args
+        params = tuple(a.arg for a in
+                       list(args.posonlyargs) + list(args.args)
+                       + list(args.kwonlyargs))
+        self.mod = module
+        self.cls = cls
+        self.out = FuncSummary(
+            module=module.module, path=module.path,
+            cls=cls.name if cls else None, name=node.name,
+            qualname=qualname, node=node, params=params)
+        self.sorted_names: Set[str] = set()
+        self.nested: List[ast.AST] = []
+
+    # -- lock classification ---------------------------------------------
+    def _tok(self, expr: ast.AST) -> Optional[LockTok]:
+        keyed = False
+        node = expr
+        if isinstance(node, ast.Subscript):
+            keyed = True
+            node = node.value
+        attr: Optional[str] = None
+        owner_cls: Optional[str] = None
+        if isinstance(node, ast.Attribute):
+            attr = node.attr
+            base = chain_of(node.value)
+            if base == "self" and self.cls is not None:
+                owner_cls = self.cls.name
+        elif isinstance(node, ast.Name):
+            attr = node.id
+        if attr is None:
+            return None
+        level = lockspec.level_for(self.mod.module, owner_cls, attr)
+        known_lock = (owner_cls is not None and self.cls is not None
+                      and attr in self.cls.lock_attrs)
+        if level is None and not known_lock and not LOCKISH_NAME.search(attr):
+            return None
+        ident = level or f"{self.mod.module}:{owner_cls or ''}:{attr}"
+        return LockTok(ident=ident, attr=attr, level=level,
+                       rank=lockspec.rank_of(level),
+                       line=getattr(expr, "lineno", 0), keyed=keyed)
+
+    # -- event emission ---------------------------------------------------
+    def _emit_header_calls(self, st: ast.stmt, held: List[LockTok]) -> None:
+        snapshot = tuple(held)
+        stack: List[ast.AST] = []
+        for fname, value in ast.iter_fields(st):
+            if fname in _COMPOUND_BODY_FIELDS:
+                continue
+            if isinstance(value, ast.AST):
+                stack.append(value)
+            elif isinstance(value, list):
+                stack.extend(v for v in value if isinstance(v, ast.AST))
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            if isinstance(node, ast.Call):
+                chain = chain_of(node.func)
+                if chain is not None:
+                    self.out.calls.append(CallEvent(
+                        chain=chain, held=snapshot, line=node.lineno))
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _note_sorted(self, st: ast.Assign) -> None:
+        value = st.value
+        if isinstance(value, ast.Call):
+            fn = chain_of(value.func)
+            if fn == "sorted":
+                for tgt in st.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.sorted_names.add(tgt.id)
+
+    def _iter_is_sorted(self, it: ast.AST) -> bool:
+        if isinstance(it, ast.Name):
+            return it.id in self.sorted_names
+        if isinstance(it, ast.Call):
+            return chain_of(it.func) == "sorted"
+        return False
+
+    # -- statement walk ---------------------------------------------------
+    def walk(self) -> FuncSummary:
+        self._walk_block(self.out.node.body, [], _LoopCtx())
+        return self.out
+
+    def _walk_block(self, stmts: Sequence[ast.stmt], held: List[LockTok],
+                    loop: _LoopCtx) -> None:
+        for st in stmts:
+            self._walk_stmt(st, held, loop)
+
+    def _walk_stmt(self, st: ast.stmt, held: List[LockTok],
+                   loop: _LoopCtx) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.nested.append(st)
+            return
+        if isinstance(st, ast.ClassDef):
+            return
+        self._emit_header_calls(st, held)
+
+        if isinstance(st, (ast.With, ast.AsyncWith)):
+            toks: List[LockTok] = []
+            for item in st.items:
+                tok = self._tok(item.context_expr)
+                if tok is not None:
+                    self.out.acquires.append(AcquireEvent(
+                        tok=tok, held=tuple(held), line=tok.line,
+                        kind="with", in_loop=loop.in_loop,
+                        loop_sorted=loop.is_sorted))
+                    toks.append(tok)
+            held.extend(toks)
+            self._walk_block(st.body, held, loop)
+            for tok in toks:
+                self._drop(held, tok)
+            return
+
+        if isinstance(st, (ast.For, ast.AsyncFor)):
+            inner = _LoopCtx(True, self._iter_is_sorted(st.iter))
+            self._walk_block(st.body, held, inner)
+            self._walk_block(st.orelse, held, loop)
+            return
+
+        if isinstance(st, ast.While):
+            self._walk_block(st.body, held, _LoopCtx(True, False))
+            self._walk_block(st.orelse, held, loop)
+            return
+
+        if isinstance(st, ast.If):
+            self._walk_block(st.body, held, loop)
+            self._walk_block(st.orelse, held, loop)
+            return
+
+        if isinstance(st, ast.Try):
+            self._walk_block(st.body, held, loop)
+            for handler in st.handlers:
+                self._walk_block(handler.body, held, loop)
+            self._walk_block(st.orelse, held, loop)
+            self._walk_block(st.finalbody, held, loop)
+            return
+
+        if isinstance(st, ast.Expr) and isinstance(st.value, ast.Call):
+            chain = chain_of(st.value.func) or ""
+            if chain.endswith(".acquire"):
+                tok = self._tok(st.value.func.value)
+                if tok is not None:
+                    self.out.acquires.append(AcquireEvent(
+                        tok=tok, held=tuple(held), line=st.value.lineno,
+                        kind="bare", in_loop=loop.in_loop,
+                        loop_sorted=loop.is_sorted))
+                    held.append(tok)
+                return
+            if chain.endswith(".release"):
+                tok = self._tok(st.value.func.value)
+                if tok is not None:
+                    self._drop(held, tok)
+                return
+            return
+
+        if isinstance(st, ast.Assign):
+            self._note_sorted(st)
+            for tgt in st.targets:
+                chain = chain_of(tgt)
+                if chain is not None:
+                    self.out.writes.append(WriteEvent(
+                        chain=chain, is_aug=False, held=tuple(held),
+                        line=st.lineno))
+            return
+
+        if isinstance(st, ast.AugAssign):
+            chain = chain_of(st.target)
+            if chain is not None:
+                self.out.writes.append(WriteEvent(
+                    chain=chain, is_aug=True, held=tuple(held),
+                    line=st.lineno))
+            return
+
+        if isinstance(st, ast.Raise):
+            exc = None
+            if st.exc is not None:
+                node = st.exc
+                if isinstance(node, ast.Call):
+                    node = node.func
+                exc = chain_of(node)
+            self.out.raises.append(RaiseEvent(line=st.lineno, exc=exc))
+            return
+
+    @staticmethod
+    def _drop(held: List[LockTok], tok: LockTok) -> None:
+        for i in range(len(held) - 1, -1, -1):
+            if held[i].attr == tok.attr and held[i].ident == tok.ident:
+                del held[i]
+                return
+
+
+# ----------------------------------------------------------- class intro
+
+def _base_names(node: ast.ClassDef) -> Tuple[str, ...]:
+    out = []
+    for b in node.bases:
+        chain = chain_of(b)
+        if chain:
+            out.append(chain.split(".")[-1])
+    return tuple(out)
+
+
+def _lock_kind_of_value(value: ast.AST) -> Optional[str]:
+    """Classify ``threading.Lock()`` / ``witness_lock(...)`` ctor calls."""
+    if not isinstance(value, ast.Call):
+        return None
+    chain = chain_of(value.func)
+    if chain is None:
+        return None
+    name = chain.split(".")[-1]
+    kind = _LOCK_CTORS.get(name)
+    if kind is None:
+        return None
+    if name == "witness_lock" and value.args:
+        inner = _lock_kind_of_value(value.args[0])
+        return inner or "lock"
+    return kind
+
+
+def _fill_class_info(info: ClassInfo, stats_classes: Set[str]) -> None:
+    for st in info.node.body:
+        # dataclass-style:  _stats_lock: Lock = field(default_factory=Lock)
+        if isinstance(st, ast.AnnAssign) and isinstance(st.target, ast.Name):
+            value = st.value
+            if isinstance(value, ast.Call) and \
+                    (chain_of(value.func) or "").endswith("field"):
+                for kw in value.keywords:
+                    if kw.arg == "default_factory":
+                        chain = chain_of(kw.value) or ""
+                        kind = _LOCK_CTORS.get(chain.split(".")[-1])
+                        if kind:
+                            info.lock_attrs[st.target.id] = kind
+        if isinstance(st, ast.Assign):
+            for tgt in st.targets:
+                if isinstance(tgt, ast.Name) and _const_true(st.value):
+                    info.flags[tgt.id] = True
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(st):
+                if not isinstance(sub, ast.Assign):
+                    continue
+                for tgt in sub.targets:
+                    chain = chain_of(tgt)
+                    if chain is None or not chain.startswith("self.") \
+                            or chain.count(".") != 1:
+                        continue
+                    attr = chain.split(".")[1]
+                    kind = _lock_kind_of_value(sub.value)
+                    if kind is not None:
+                        info.lock_attrs.setdefault(attr, kind)
+                        continue
+                    if isinstance(sub.value, ast.Call):
+                        ctor = (chain_of(sub.value.func) or "").split(".")[-1]
+                        if ctor in stats_classes:
+                            info.stats_attrs.add(attr)
+
+
+# -------------------------------------------------------------- scanning
+
+def _scan_function(mod: ModuleSummary, cls: Optional[ClassInfo],
+                   qualname: str, node: ast.AST,
+                   out: List[FuncSummary]) -> None:
+    walker = _FuncWalker(mod, cls, qualname, node)
+    out.append(walker.walk())
+    for nested in walker.nested:
+        _scan_function(mod, cls, f"{qualname}.<locals>.{nested.name}",
+                       nested, out)
+
+
+def scan_paths(paths: Sequence[Path]) -> List[ModuleSummary]:
+    """Parse every ``*.py`` under the given files/directories and build
+    module summaries (two passes so stats classes resolve globally)."""
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(f for f in p.rglob("*.py")
+                                if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+
+    mods: List[ModuleSummary] = []
+    for f in files:
+        source = f.read_text()
+        try:
+            tree = ast.parse(source, filename=str(f))
+        except SyntaxError:
+            continue
+        mod = ModuleSummary(path=f, module=f.stem, source=source, tree=tree)
+        for st in tree.body:
+            if isinstance(st, ast.ClassDef):
+                mod.classes[st.name] = ClassInfo(
+                    module=mod.module, path=f, name=st.name,
+                    bases=_base_names(st), node=st)
+        mods.append(mod)
+
+    stats_classes = {c.name for m in mods for c in m.classes.values()
+                     if "AtomicStatsMixin" in c.bases}
+
+    for mod in mods:
+        for cls in mod.classes.values():
+            _fill_class_info(cls, stats_classes)
+        for st in mod.tree.body:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _scan_function(mod, None, st.name, st, mod.functions)
+            elif isinstance(st, ast.ClassDef):
+                cls = mod.classes[st.name]
+                for sub in st.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        _scan_function(mod, cls, f"{st.name}.{sub.name}",
+                                       sub, mod.functions)
+    return mods
+
+
+def stats_class_names(mods: Sequence[ModuleSummary]) -> Set[str]:
+    return {c.name for m in mods for c in m.classes.values()
+            if "AtomicStatsMixin" in c.bases}

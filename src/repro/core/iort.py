@@ -58,6 +58,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .errors import StorageError
+from .testing import witness_lock
 
 # Seed/floor/ceiling for the adaptive thresholds.  The seed matches the old
 # fixed constant so a fresh cluster behaves identically until it has
@@ -220,7 +221,7 @@ class PlanCache:
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
-        self._lock = threading.Lock()
+        self._lock = witness_lock(threading.Lock(), "cache.plan")
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         # inode id → set of live keys, so lease-driven invalidation of one
         # inode's plans is O(its entries), not a scan of the whole LRU.

@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 from .iort import AtomicStatsMixin
+from .testing import witness_lock
 
 # Lease states.  PENDING: placeholder installed by ``begin_grant``, value
 # not yet known.  LIVE: serving reads.  A killed lease is simply removed.
@@ -85,7 +86,7 @@ class LeaseTable:
 
     def __init__(self, hub: "LeaseHub"):
         self._hub = hub
-        self._lock = threading.Lock()
+        self._lock = witness_lock(threading.Lock(), "lease.table")
         self._entries: "OrderedDict[Tuple[str, Any], _Lease]" = OrderedDict()
         hub.register(self)
 
@@ -175,7 +176,7 @@ class LeaseHub:
         self.stats = LeaseStats()
         self._plan_cache = plan_cache
         self._tables: list[LeaseTable] = []
-        self._tables_lock = threading.Lock()
+        self._tables_lock = witness_lock(threading.Lock(), "lease.tables")
         # Pre-apply barrier on every shard: correctness (see module doc).
         kv.add_invalidation_listener(self._invalidate)
         # WAL stream: cache hygiene.  Region mutations evict the shared

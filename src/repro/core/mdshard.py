@@ -57,6 +57,7 @@ from .errors import KVConflict
 from .iort import AtomicStatsMixin
 from .metadata import Transaction, WarpKV
 from .placement import stable_hash
+from .testing import witness_lock
 
 
 class PhaseCrash(Exception):
@@ -140,8 +141,9 @@ class ShardedKV:
         self.n_shards = n_shards
         self.group_commit = group_commit
         self.shards: List[WarpKV] = [
-            WarpKV(group_commit=group_commit, service_time_s=service_time_s)
-            for _ in range(n_shards)]
+            WarpKV(group_commit=group_commit, service_time_s=service_time_s,
+                   shard_index=i)
+            for i in range(n_shards)]
         self.stats_2pc = MdShardStats()
         self._fail_next_commits = 0
 
@@ -216,7 +218,7 @@ class ShardedKV:
         Returns a zero-argument cancel callable that detaches every
         per-shard forwarder (mirrors ``WarpKV.subscribe``).
         """
-        sub_lock = threading.RLock()
+        sub_lock = witness_lock(threading.RLock(), "sub.fanin")
         seqs = [0] * self.n_shards
 
         def forwarder(i: int) -> Callable:

@@ -61,6 +61,7 @@ from typing import Any, Callable, Iterable, List, Optional
 
 from .errors import KVConflict, PreconditionFailed
 from .iort import AtomicStatsMixin
+from .testing import witness_lock
 
 _TOMBSTONE = object()
 
@@ -400,10 +401,19 @@ class WarpKV:
     WAL_TAIL_MAX = 4096
 
     def __init__(self, group_commit: bool = True,
-                 service_time_s: float = 0.0):
+                 service_time_s: float = 0.0,
+                 shard_index: int = 0):
+        # ``shard_index`` places this store in the global (shard, stripe)
+        # acquisition order; ``mdshard.ShardedKV`` passes each shard's
+        # position.  Locks are wrapped by the runtime lock-order witness
+        # when WTF_LOCK_WITNESS is set (no-op passthrough otherwise).
+        self.shard_index = shard_index
         self._spaces: dict[str, dict[Any, _Versioned]] = {}
-        self._space_lock = threading.Lock()
-        self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
+        self._space_lock = witness_lock(threading.Lock(), "kv.space")
+        self._stripes = [
+            witness_lock(threading.RLock(), "kv.stripe",
+                         key=(shard_index, i))
+            for i in range(self.N_STRIPES)]
         self.stats = KVStats()
         self.group_commit = group_commit
         # Modeled per-request service time of ONE metadata server: each
@@ -412,14 +422,15 @@ class WarpKV:
         # and shard counts / lease hit rates become physically measurable.
         # 0.0 (the default) adds zero overhead on every path.
         self._service_time = float(service_time_s)
-        self._service_lock = threading.Lock()
+        self._service_lock = witness_lock(threading.Lock(), "kv.service")
         # Pre-apply lease barrier: called with the keys a commit is about
         # to mutate, under the stripe locks, BEFORE the first store — so a
         # lease holder that revalidates successfully is guaranteed not to
         # have observed any part of an in-flight commit (see core/lease.py).
         self._inval_listeners: list[Callable[[list], None]] = []
         self._commit_queue: List[_CommitReq] = []
-        self._commit_queue_lock = threading.Lock()
+        self._commit_queue_lock = witness_lock(threading.Lock(),
+                                               "kv.commit_queue")
         # True while some committer owns batch leadership.  Leadership is
         # granted at enqueue (queue empty, no leader) or handed off by the
         # retiring leader to the head of the queue — always under
@@ -434,7 +445,8 @@ class WarpKV:
         # RLock: listeners run under this lock, and a listener that
         # commits re-enters ``_log`` on the same thread (the reentrant
         # commit path the ``_leader_thread`` guard permits).
-        self._wal_lock = threading.RLock()
+        self._wal_lock = witness_lock(threading.RLock(), "kv.wal",
+                                      key=shard_index)
         self._wal_listeners: list[Callable[[str, Any, Any, int], None]] = []
         self._fail_next_commits = 0   # test hook: forced HyperDex-level abort
 
@@ -453,6 +465,7 @@ class WarpKV:
         """One modeled server round trip (no-op when service time is 0)."""
         if self._service_time:
             with self._service_lock:
+                # wtf-lint: ignore[WTF002] -- modeled service time: serializing the sleep IS the single-server queueing model
                 time.sleep(self._service_time)
 
     def _read_versioned(self, space: str, key: Any) -> tuple[int, Any]:
@@ -592,6 +605,7 @@ class WarpKV:
         2PC contract ``mdshard.ShardedKV`` needs.  ``txn`` is duck-typed:
         anything carrying ``_reads``/``_writes``/``_commutes``."""
         if self._fail_next_commits > 0:
+            # wtf-lint: ignore[WTF003] -- test-only crash hook; every caller holds the commit stripe locks
             self._fail_next_commits -= 1
             self.stats.add(aborts=1)
             raise KVConflict("injected abort")

@@ -20,6 +20,7 @@ and reclaim the most space.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 import time
@@ -30,6 +31,7 @@ from .errors import StorageError
 from .iort import AtomicStatsMixin
 from .placement import stable_hash
 from .slicing import SlicePointer
+from .testing import witness_lock
 
 
 @dataclass(slots=True)
@@ -143,7 +145,7 @@ class _BackingFile:
 
     def __init__(self, path: str, stats: Optional[StorageStats] = None):
         self.path = path
-        self.lock = threading.Lock()
+        self.lock = witness_lock(threading.Lock(), "storage.backing")
         self._idle = threading.Condition(self.lock)
         self.size = 0
         self._inflight = 0
@@ -298,8 +300,10 @@ class StorageServer:
         self.service_time_s = service_time_s
         os.makedirs(root_dir, exist_ok=True)
         self._files: Dict[str, _BackingFile] = {}
-        self._files_lock = threading.Lock()
-        self._rr = 0
+        self._files_lock = witness_lock(threading.Lock(), "storage.files")
+        # round-robin cursor for unhinted placement; itertools.count is a
+        # single atomic step, safe to bump from concurrent pool threads
+        self._rr = itertools.count()
         # Two-scan GC safety rule (§2.8): a garbage byte range is only
         # collected once it has been unreferenced in two *consecutive*
         # filesystem scans (per-file garbage interval lists, intersected
@@ -443,8 +447,7 @@ class StorageServer:
         if hint is not None:
             idx = stable_hash(hint, salt="backing") % self.num_backing_files
         else:
-            self._rr += 1
-            idx = self._rr % self.num_backing_files
+            idx = next(self._rr) % self.num_backing_files
         name = f"backing_{idx:04d}.dat"
         return self._get_backing_file(name, create=True)
 
@@ -457,6 +460,7 @@ class StorageServer:
                     path = os.path.join(self.root_dir, name)
                     if not create and not os.path.exists(path):
                         raise StorageError(f"no backing file {name}")
+                    # wtf-lint: ignore[WTF002] -- creation is atomic under the directory lock; once per file, never on the append fast path
                     bf = _BackingFile(path, stats=self.stats)
                     if not create:
                         bf.size = os.path.getsize(path)
@@ -570,6 +574,7 @@ class StorageServer:
         walk) must survive the rewrite.  Offsets are preserved, so
         pointers stay valid."""
         bf = self._get_backing_file(name)
+        # wtf-lint: ignore[WTF002] -- rewrite I/O under the file lock is the design: the file is quiesced (appends parked, writes drained)
         with bf.lock:
             # The rewrite swaps the file descriptor; an append writing
             # through the old fd would land in the replaced inode and be

@@ -212,3 +212,177 @@ def make_flaky_kv(cluster, fail_commits: Iterable[int] = (),
                     apply_resolution)
     cluster.kv = flaky
     return flaky
+
+
+# ---------------------------------------------------------------------------
+# Runtime lock-order witness
+# ---------------------------------------------------------------------------
+#
+# The static pass (``python -m repro.analysis``) and this witness share one
+# order declaration: ``repro.analysis.lockspec``.  Core modules wrap their
+# locks with :func:`witness_lock` at construction time; when the
+# ``WTF_LOCK_WITNESS`` env flag is set (``conftest.py`` sets it for the
+# whole tier-1 suite), every acquisition is checked against the calling
+# thread's held-lock stack and an inversion raises
+# :class:`LockOrderViolation` *at acquisition time* — a clean stack trace
+# pointing at both locks, instead of a 60-second deadlock timeout.  With
+# the flag unset, ``witness_lock`` returns the raw lock: zero overhead in
+# production and benchmarks.
+
+import os as _os
+
+from ..analysis import lockspec as _lockspec
+
+_witness_tls = threading.local()
+
+
+def _witness_stack():
+    stack = getattr(_witness_tls, "stack", None)
+    if stack is None:
+        stack = _witness_tls.stack = []
+    return stack
+
+
+class LockOrderViolation(AssertionError):
+    """A lock was acquired against the declared global order."""
+
+
+class OrderedLock:
+    """Wrapper enforcing ``lockspec`` rank/key order on every acquire.
+
+    * Blocking acquires are checked *before* touching the inner lock, so a
+      would-be deadlock surfaces as an exception while the thread still
+      runs.
+    * Re-acquiring a lock this thread already holds is allowed (RLock
+      semantics) and skips the order check.
+    * Same-level families declared ``multi="sorted"`` require strictly
+      ascending ``key`` order — the global (shard, stripe) rule.
+    * Works as the lock of a ``threading.Condition``: ``_release_save`` /
+      ``_acquire_restore`` are withheld so the Condition falls back to
+      plain ``release()``/``acquire()`` (which keep the stack honest), and
+      ``_is_owned`` is answered from the per-thread stack.
+    """
+
+    __slots__ = ("_inner", "name", "rank", "multi", "key")
+
+    def __init__(self, inner, level: str, key=None):
+        spec = _lockspec.LEVEL_BY_NAME.get(level)
+        if spec is None:
+            raise ValueError(f"unknown lock level {level!r}; declare it in "
+                             f"repro.analysis.lockspec.LOCK_LEVELS")
+        self._inner = inner
+        self.name = level
+        self.rank = spec.rank
+        self.multi = spec.multi
+        self.key = key
+
+    def _describe(self):
+        key = f"[{self.key!r}]" if self.key is not None else ""
+        return f"{self.name}{key}(rank {self.rank})"
+
+    def _check_order(self):
+        stack = _witness_stack()
+        for held in stack:
+            if held is self:        # identity re-entry: RLock semantics
+                return
+        for held in stack:
+            if held.rank > self.rank:
+                raise LockOrderViolation(
+                    f"lock-order inversion in thread "
+                    f"{threading.current_thread().name!r}: acquiring "
+                    f"{self._describe()} while holding {held._describe()}; "
+                    f"held stack: "
+                    f"{[h._describe() for h in stack]}")
+            if held.rank == self.rank:
+                if self.multi != "sorted":
+                    raise LockOrderViolation(
+                        f"two locks of level {self.name!r} (multi=none) "
+                        f"held by thread "
+                        f"{threading.current_thread().name!r}: "
+                        f"{held._describe()} then {self._describe()}")
+                if held.key is None or self.key is None \
+                        or not held.key < self.key:
+                    raise LockOrderViolation(
+                        f"unsorted same-level acquisition of "
+                        f"{self.name!r} in thread "
+                        f"{threading.current_thread().name!r}: "
+                        f"{held._describe()} then {self._describe()} — "
+                        f"keys must be strictly ascending")
+
+    def acquire(self, blocking=True, timeout=-1):
+        if blocking:
+            self._check_order()
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            _witness_stack().append(self)
+        return ok
+
+    def release(self):
+        stack = _witness_stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i]
+                break
+        self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def _is_owned(self):
+        probe = getattr(self._inner, "_is_owned", None)
+        if probe is not None:
+            return probe()
+        return any(entry is self for entry in _witness_stack())
+
+    def __getattr__(self, name):
+        if name in ("_release_save", "_acquire_restore"):
+            # Withheld on purpose: threading.Condition must go through our
+            # acquire()/release() so the held stack stays balanced.
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+    def __repr__(self):
+        return f"<OrderedLock {self._describe()} wrapping {self._inner!r}>"
+
+
+class LockOrderWatchdog:
+    """Process-wide switchboard for the runtime witness."""
+
+    ENV_FLAG = "WTF_LOCK_WITNESS"
+
+    @staticmethod
+    def enabled() -> bool:
+        return _os.environ.get(LockOrderWatchdog.ENV_FLAG, "0") \
+            not in ("", "0")
+
+    @staticmethod
+    def held():
+        """Snapshot of the calling thread's witnessed held-lock stack."""
+        return tuple(_witness_stack())
+
+    @staticmethod
+    def assert_clean() -> None:
+        stack = _witness_stack()
+        if stack:
+            raise LockOrderViolation(
+                f"thread {threading.current_thread().name!r} still holds "
+                f"witnessed locks: {[h._describe() for h in stack]}")
+
+    @staticmethod
+    def is_witnessed(lock) -> bool:
+        return isinstance(lock, OrderedLock)
+
+
+def witness_lock(lock, level: str, key=None, enabled=None):
+    """Wrap ``lock`` as an :class:`OrderedLock` at declared ``level`` when
+    the witness is on; return ``lock`` unchanged (zero overhead) when off."""
+    if enabled is None:
+        enabled = LockOrderWatchdog.enabled()
+    if not enabled:
+        return lock
+    return OrderedLock(lock, level, key=key)

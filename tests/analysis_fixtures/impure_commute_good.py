@@ -1,0 +1,32 @@
+"""WTF004 fixture (fixed form): pure ops — copy the operand, mutate the
+copy, carry ``end`` through verbatim."""
+
+
+class CommutingOp:
+    def apply(self, value):
+        raise NotImplementedError
+
+
+class RegionData:
+    def __init__(self, entries, end, indirect=None):
+        self.entries = entries
+        self.end = end
+        self.indirect = indirect
+
+
+class ListAppend(CommutingOp):
+    def __init__(self, delta):
+        self.delta = delta
+
+    def apply(self, value):
+        cur = list(value) if value is not None else []
+        cur.append(self.delta)
+        return cur
+
+
+class CompactRegion(CommutingOp):
+    version_preserving = True
+
+    def apply(self, rd):
+        entries = tuple(dict.fromkeys(rd.entries))
+        return RegionData(entries, rd.end, rd.indirect)

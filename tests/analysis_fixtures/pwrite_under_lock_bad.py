@@ -1,0 +1,19 @@
+"""WTF002 fixture (bug form): the PR 7 append-lock bug — device I/O issued
+while holding the offset-reservation lock serializes every appender behind
+the disk."""
+import os
+import threading
+
+
+class BackingFile:
+    def __init__(self, fd):
+        self.lock = threading.Lock()
+        self._fd = fd
+        self.size = 0
+
+    def append(self, data):
+        with self.lock:
+            off = self.size
+            self.size += len(data)
+            os.pwrite(self._fd, data, off)   # blocking I/O under the lock
+        return off

@@ -1,0 +1,18 @@
+"""WTF002 fixture (fixed form): reserve the offset under the lock, write
+outside it — concurrent pwrites to disjoint ranges are safe."""
+import os
+import threading
+
+
+class BackingFile:
+    def __init__(self, fd):
+        self.lock = threading.Lock()
+        self._fd = fd
+        self.size = 0
+
+    def append(self, data):
+        with self.lock:
+            off = self.size
+            self.size += len(data)
+        os.pwrite(self._fd, data, off)
+        return off

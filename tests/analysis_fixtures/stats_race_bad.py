@@ -1,0 +1,29 @@
+"""WTF003 fixture (bug form): the PR 4 race — bare '+=' on shared counters
+from pool threads, both on a plain attribute and through a stats dataclass
+that should only move via AtomicStatsMixin.add()."""
+import threading
+from dataclasses import dataclass, field
+
+
+class AtomicStatsMixin:
+    def add(self, **deltas):
+        raise NotImplementedError
+
+
+@dataclass
+class ServerStats(AtomicStatsMixin):
+    requests: int = 0
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False, compare=False)
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = ServerStats()
+        self._rr = 0
+
+    def handle(self):
+        self._rr += 1                  # unlocked read-modify-write
+        self.stats.requests += 1       # bypasses AtomicStatsMixin.add()
+        return self._rr

@@ -1,0 +1,29 @@
+"""WTF003 fixture (fixed form): the cursor moves under the lock and the
+stats dataclass is mutated through add()."""
+import threading
+from dataclasses import dataclass, field
+
+
+class AtomicStatsMixin:
+    def add(self, **deltas):
+        raise NotImplementedError
+
+
+@dataclass
+class ServerStats(AtomicStatsMixin):
+    requests: int = 0
+    _stats_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False, compare=False)
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = ServerStats()
+        self._rr = 0
+
+    def handle(self):
+        with self._lock:
+            self._rr += 1
+        self.stats.add(requests=1)
+        return self._rr

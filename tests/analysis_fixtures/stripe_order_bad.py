@@ -1,0 +1,28 @@
+"""WTF001 fixture (bug form): stripe locks grabbed in arrival order and a
+WAL-before-stripe inversion — the deadlock shapes group commit must avoid.
+
+Never imported; parsed by tests/test_analysis.py through the analyzer.
+"""
+import threading
+
+
+class MiniKV:
+    N_STRIPES = 8
+
+    def __init__(self):
+        self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
+        self._wal_lock = threading.RLock()
+
+    def commit_batch(self, stripe_ids):
+        for sid in stripe_ids:             # arrival order, not sorted
+            self._stripes[sid].acquire()
+        try:
+            return len(stripe_ids)
+        finally:
+            for sid in reversed(stripe_ids):
+                self._stripes[sid].release()
+
+    def log_then_lock(self, sid):
+        with self._wal_lock:               # kv.wal is inner to kv.stripe
+            with self._stripes[sid]:
+                return sid

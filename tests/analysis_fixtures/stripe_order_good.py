@@ -1,0 +1,26 @@
+"""WTF001 fixture (fixed form): sorted stripe acquisition, WAL taken inside
+the stripes — matches the declared order, so the rule stays quiet."""
+import threading
+
+
+class MiniKV:
+    N_STRIPES = 8
+
+    def __init__(self):
+        self._stripes = [threading.RLock() for _ in range(self.N_STRIPES)]
+        self._wal_lock = threading.RLock()
+
+    def commit_batch(self, stripe_ids):
+        ordered = sorted(set(stripe_ids))
+        for sid in ordered:
+            self._stripes[sid].acquire()
+        try:
+            return len(ordered)
+        finally:
+            for sid in reversed(ordered):
+                self._stripes[sid].release()
+
+    def lock_then_log(self, sid):
+        with self._stripes[sid]:
+            with self._wal_lock:
+                return sid

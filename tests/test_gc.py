@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import Cluster, GarbageCollector
 from repro.core.inode import RegionData, region_key
+from repro.core.testing import LockOrderWatchdog
 
 
 def _fs_supports_sparse_files() -> bool:
@@ -182,6 +183,14 @@ def test_appends_racing_sparse_rewrite_lose_nothing(cluster):
 
     gc = GarbageCollector(cluster)
     gc.storage_gc_pass()                   # first scan (two-scan rule)
+    # The witness covers the storage locks: if the rewrite ever grabbed a
+    # backing-file lock above the directory lock (or inverted against the
+    # KV plane), the race below would raise instead of losing bytes.
+    assert LockOrderWatchdog.enabled()
+    srv = next(iter(cluster.servers.values()))
+    assert LockOrderWatchdog.is_witnessed(srv._files_lock)
+    assert all(LockOrderWatchdog.is_witnessed(bf.lock)
+               for bf in srv._files.values())
     stop = threading.Event()
     N, M = 3, 40
 
@@ -211,3 +220,4 @@ def test_appends_racing_sparse_rewrite_lose_nothing(cluster):
     expect = sorted(f"<{i}:{j:04d}>" for i in range(N) for j in range(M))
     assert recs == expect
     assert read_file(fs, "/churn") == b"new" * 30_000
+    LockOrderWatchdog.assert_clean()

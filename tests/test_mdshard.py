@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (Cluster, KVConflict, ShardedKV, TransactionAborted,
                         WarpKV)
-from repro.core.testing import make_flaky_kv
+from repro.core.testing import LockOrderWatchdog, make_flaky_kv
 
 N_SHARDS = 4
 
@@ -234,6 +234,11 @@ def test_concurrent_cross_shard_commits_no_deadlock(cluster):
     """Cross-shard committers + single-shard group commits running
     concurrently: global (shard, stripe) lock order means no deadlock and
     every write lands."""
+    # Witnessed stripes mean an out-of-(shard,stripe)-order grab raises at
+    # acquisition time rather than tripping the 60s deadlock timeout below.
+    assert LockOrderWatchdog.enabled()
+    assert all(LockOrderWatchdog.is_witnessed(s._stripes[0])
+               for s in cluster.kv.shards)
     cl0 = cluster.client()
     pa, pb = _paths_on_distinct_shards(cluster.kv)
     for p in (pa, pb):
@@ -277,6 +282,7 @@ def test_concurrent_cross_shard_commits_no_deadlock(cluster):
     vb = cl2.read(fd)
     cl2.close(fd)
     assert va == vb
+    LockOrderWatchdog.assert_clean()
 
 
 # ------------------------------------------------------- subscribe fan-in

@@ -5,6 +5,7 @@ import pytest
 
 from repro.core.errors import KVConflict, PreconditionFailed
 from repro.core.metadata import ListAppend, Transaction, WarpKV
+from repro.core.testing import LockOrderWatchdog
 
 
 def test_basic_put_get():
@@ -217,6 +218,11 @@ def test_group_commit_leader_handoff_under_contention():
     mutex.  Under contention some drains must batch more than one commit,
     every commit lands, and the wait/hold clocks tick."""
     kv = WarpKV()
+    # The lock-order witness turns any inversion in the handoff path into
+    # an immediate LockOrderViolation instead of a silent deadlock risk.
+    assert LockOrderWatchdog.enabled()
+    assert LockOrderWatchdog.is_witnessed(kv._wal_lock)
+    assert LockOrderWatchdog.is_witnessed(kv._stripes[0])
     N, M = 8, 50
 
     def worker(i):
@@ -235,6 +241,7 @@ def test_group_commit_leader_handoff_under_contention():
     assert len(kv.keys("s")) == N * M
     assert s["commit_hold_s"] > 0.0
     assert s["commit_wait_s"] >= 0.0
+    LockOrderWatchdog.assert_clean()
 
 
 def test_subscribe_attach_mid_stream_no_gap():
