@@ -34,8 +34,10 @@ def _gen_records(n: int, record_bytes: int, seed: int = 0) -> List[bytes]:
     return out
 
 
-def _key(rec: bytes) -> bytes:
-    return rec[:10]
+def _key(rec) -> bytes:
+    # Vectored reads return zero-copy buffers; sort keys must be bytes
+    # (memoryview has no ordering).
+    return bytes(rec[:10])
 
 
 def _bucket_of(key: bytes, n_buckets: int) -> int:

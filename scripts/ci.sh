@@ -40,8 +40,30 @@ echo "== tier-1: pytest =="
 # test_write_interleavings.py, test_fault_tolerance.py)
 python -m pytest -x -q
 
-echo "== smoke: read benchmark (vectored vs scalar) =="
-timeout "${READ_BENCH_TIMEOUT:-300}" python -m benchmarks.read_bench smoke
+echo "== smoke: read benchmark (vectored vs scalar, readahead, block cache) =="
+# the bench itself hard-asserts: hot block-cached re-reads cost ZERO
+# additional storage rounds, and all four readahead x block-cache configs
+# return byte-identical streams; the stanza below gates the data-plane
+# throughput story on the saved JSON (read_bench.json, uploaded by CI)
+timeout "${READ_BENCH_TIMEOUT:-600}" python -m benchmarks.read_bench smoke
+python - <<'PY'
+import json
+r = json.load(open("benchmarks/results/read_bench.json"))
+row = r["modes"]["seq"][0]            # 256 KiB sequential: the row where
+v, s = row["wtf_vec"], row["wtf"]     # vectoring genuinely batches
+# 10% noise floor: best-of-5 wall clocks at this scale are ~10ms and the
+# scalar floor jitters run-to-run under CI load; the regression this
+# guards (covering-retrieval inversion) measured vectored at 0.65x scalar
+assert v["throughput_mbs"] >= 0.9 * s["throughput_mbs"], (
+    f"vectored sequential read inverted vs scalar: "
+    f"{v['throughput_mbs']:.0f} < 0.9 * {s['throughput_mbs']:.0f} MB/s")
+assert s["readahead_hits"] > 0, "sequential scan produced no readahead hits"
+assert r["hot_reread"]["rounds_delta"] == 0, r["hot_reread"]
+assert r["config_isolation"]["identical"], r["config_isolation"]
+print(f"read_bench: vec {v['throughput_mbs']:.0f} vs scalar "
+      f"{s['throughput_mbs']:.0f} MB/s, {s['readahead_hits']} readahead "
+      f"hits, hot re-read 0 rounds, 4 configs byte-identical OK")
+PY
 
 echo "== smoke: write benchmark (batched vs scalar stores) =="
 timeout "${WRITE_BENCH_TIMEOUT:-300}" python -m benchmarks.write_bench smoke

@@ -70,12 +70,21 @@ LOCK_LEVELS: Tuple[LockLevel, ...] = (
               doc="LogConsumer commit-watermark condition"),
     LockLevel("cache.plan", 80,
               doc="PlanCache map (invalidated from WAL listeners)"),
+    LockLevel("cache.block", 85,
+              doc="BlockCache LRU map (invalidated from the same WAL "
+                  "listeners / plan-validation failures as cache.plan; "
+                  "taken after it on joint evictions)"),
     LockLevel("kv.space", 90,
               doc="WarpKV space-dict creation (leaf, under stripes)"),
     LockLevel("storage.files", 100,
               doc="StorageServer backing-file directory"),
     LockLevel("storage.backing", 110,
               doc="per-backing-file offset reservation / quiesce lock"),
+    LockLevel("storage.readahead", 115,
+              doc="per-server readahead buffer pool (leaf under "
+                  "storage.backing: sparse rewrite invalidates the pool "
+                  "while holding the backing-file lock, so the pool lock "
+                  "must never wrap a backing-file read)"),
     LockLevel("kv.service", 120,
               doc="modeled metadata service-time serialization (leaf; "
                   "sleeps by design)"),
@@ -98,6 +107,8 @@ STATIC_LOCK_MAP: Dict[Tuple[str, Optional[str], str], str] = {
     ("mdshard", None, "sub_lock"): "sub.fanin",
     ("wlog", "LogConsumer", "_cond"): "wlog.consumer",
     ("iort", "PlanCache", "_lock"): "cache.plan",
+    ("blockcache", "BlockCache", "_lock"): "cache.block",
+    ("storage", "_ReadaheadPool", "_lock"): "storage.readahead",
     ("storage", "StorageServer", "_files_lock"): "storage.files",
     ("storage", "_BackingFile", "lock"): "storage.backing",
     ("storage", "_BackingFile", "_idle"): "storage.backing",

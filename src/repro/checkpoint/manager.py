@@ -205,7 +205,10 @@ class CheckpointManager:
         finally:
             for f in handles:
                 f.close()
-        flat = {name: bytes_to_leaf(b"".join(ps), man["leaves"][name])
+        # Single-shard leaves keep the vectored read's zero-copy buffer
+        # all the way into np.frombuffer; only multi-shard leaves join.
+        flat = {name: bytes_to_leaf(ps[0] if len(ps) == 1 else b"".join(ps),
+                                    man["leaves"][name])
                 for name, ps in parts.items()}
         return unflatten_tree(flat, template)
 

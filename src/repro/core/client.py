@@ -36,6 +36,7 @@ from .client_runtime import (SEEK_CUR, SEEK_END, SEEK_SET,  # noqa: F401
                              basename_of, normalize_path, parent_of)
 from .errors import StorageError
 from .handle import WtfFile  # noqa: F401  (re-export)
+from .blockcache import DEFAULT_BLOCK_CACHE_BYTES, BlockCache
 from .inode import DEFAULT_REGION_SIZE, REGION_COMPACT_THRESHOLD
 from .iort import IoRuntime, PlanCache, run_with_failover
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
@@ -106,6 +107,19 @@ class WtfClient(PosixOps, SliceOps, ClientRuntime):
         self._plan_cache = (cluster.shared_plan_cache
                             if cluster.shared_plan_cache is not None
                             else PlanCache())
+        # Data-block cache (``blockcache.BlockCache``): hot re-reads skip
+        # the storage round entirely.  Same sharing and invalidation rule
+        # as the plan cache — cluster-shared on lease clusters, evicted
+        # jointly with the inode's plans when a commit (or lease
+        # revocation) invalidates them; ``Cluster(block_cache_bytes=0)``
+        # disables it.
+        if cluster.shared_block_cache is not None:
+            self._block_cache = cluster.shared_block_cache
+        elif cluster.block_cache_bytes > 0:
+            from .blockcache import BlockCache
+            self._block_cache = BlockCache(cluster.block_cache_bytes)
+        else:
+            self._block_cache = None
         # Resolved-region index (``slicing.ResolvedIndexCache``): when a
         # hot region's overlay list grows by k extents, its resolved form
         # is extended in O(k log n) instead of re-resolved over the whole
@@ -149,6 +163,8 @@ class Cluster:
                  write_behind: bool = False,
                  scatter_gather: bool = True,
                  resolved_index: bool = True,
+                 readahead: bool = True,
+                 block_cache_bytes: int = DEFAULT_BLOCK_CACHE_BYTES,
                  region_compact_threshold: Optional[int] =
                  REGION_COMPACT_THRESHOLD,
                  kv_group_commit: bool = True,
@@ -158,7 +174,7 @@ class Cluster:
                  storage_service_time: float = 0.0):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
-        from .storage import StorageServer
+        from .storage import DEFAULT_READAHEAD_POOL_BYTES, StorageServer
         import os
 
         # Knob validation up front: a bad threshold or an unachievable
@@ -205,6 +221,10 @@ class Cluster:
             raise ValueError(
                 f"storage_service_time must be >= 0, "
                 f"got {storage_service_time}")
+        if not isinstance(block_cache_bytes, int) or block_cache_bytes < 0:
+            raise ValueError(
+                f"block_cache_bytes must be an int >= 0 (0 disables the "
+                f"client data-block cache), got {block_cache_bytes!r}")
 
         # Metadata plane: ONE WarpKV by default — the exact single-store
         # fast path — or a ``mdshard.ShardedKV`` partitioning the keyspace
@@ -223,12 +243,22 @@ class Cluster:
         # per-shard WAL subscribe stream) and owns the cluster-shared
         # version-validated plan cache.
         self.lease_ttl = lease_ttl
+        # Data-plane read caching knobs: server-side readahead pools and
+        # the client block cache share the plan cache's invalidation rule
+        # (see ``blockcache``); each has an off position so benchmarks can
+        # isolate its contribution.
+        self.readahead = readahead
+        self.block_cache_bytes = block_cache_bytes
         if lease_ttl is not None:
             self.shared_plan_cache = PlanCache()
+            self.shared_block_cache = (BlockCache(block_cache_bytes)
+                                       if block_cache_bytes > 0 else None)
             self.lease_hub = LeaseHub(self.kv, ttl=lease_ttl,
-                                      plan_cache=self.shared_plan_cache)
+                                      plan_cache=self.shared_plan_cache,
+                                      block_cache=self.shared_block_cache)
         else:
             self.shared_plan_cache = None
+            self.shared_block_cache = None
             self.lease_hub = None
         # Metadata-plane fast-path knobs (all default on; each has an off
         # position so benchmarks/tests can compare like for like):
@@ -257,7 +287,10 @@ class Cluster:
             root = os.path.join(data_dir, f"server_{sid:03d}")
             srv = StorageServer(sid, root,
                                 num_backing_files=num_backing_files,
-                                service_time_s=storage_service_time)
+                                service_time_s=storage_service_time,
+                                readahead_pool_bytes=(
+                                    DEFAULT_READAHEAD_POOL_BYTES
+                                    if readahead else 0))
             self.servers[sid] = srv
             self.coordinator.register_server(sid, root)
         self._refresh_ring()
@@ -271,6 +304,12 @@ class Cluster:
                          else min(8, max(1, n_servers))),
             gap_override=fetch_gap_bytes,
             coalesce_override=store_coalesce_bytes)
+        if readahead:
+            # Readahead windows size themselves from the same EWMA cost
+            # model as adaptive coalescing (the bytes one round trip is
+            # worth); wire it now that the runtime exists.
+            for srv in self.servers.values():
+                srv.readahead_window = self.runtime.readahead_bytes
         self.scheduler = SliceScheduler(self, self.runtime)
         self.store_batching = store_batching
         # Write-behind (opt-in): clients defer slice stores into a

@@ -108,6 +108,8 @@ class ClientStats(AtomicStatsMixin):
     blocked_waits: int = 0           # data-plane waits the app blocked on
     plan_cache_hits: int = 0         # read plans served from the plan cache
     plan_cache_misses: int = 0       # read plans installed into the cache
+    block_cache_hits: int = 0        # extents served from the block cache
+    block_cache_misses: int = 0      # extents fetched then installed
     resolved_index_hits: int = 0     # overlays served by delta extension
     resolved_index_misses: int = 0   # overlays fully re-resolved + cached
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
@@ -154,7 +156,7 @@ def _iter_slice_pointers(obj: Any):
 
 def _digest(value: Any) -> Any:
     """Stable comparison token for an op's application-visible outcome."""
-    if isinstance(value, (bytes, bytearray)):
+    if isinstance(value, (bytes, bytearray, memoryview)):
         return ("bytes", hashlib.blake2b(bytes(value), digest_size=16).digest())
     if isinstance(value, tuple):
         return tuple(_digest(v) for v in value)

@@ -68,6 +68,12 @@ ADAPTIVE_SEED = 32 << 10
 ADAPTIVE_FLOOR = 4 << 10
 ADAPTIVE_CEILING = 256 << 10
 
+# Server readahead window clamps (see IoRuntime.readahead_bytes): deep
+# enough to cover several coalesced batches of a sequential stream, small
+# enough that a handful of concurrent streams fit one server's pool.
+READAHEAD_FLOOR = 128 << 10
+READAHEAD_CEILING = 4 << 20
+
 # EWMA blend weight for new observations (two-ish dozen rounds to converge).
 _EWMA_ALPHA = 0.15
 # Rounds at most this big estimate fixed per-round cost; rounds at least
@@ -461,6 +467,15 @@ class IoRuntime:
         if self._coalesce_override is not None:
             return self._coalesce_override
         return self._adaptive_bytes()
+
+    def readahead_bytes(self) -> int:
+        """Server readahead window: how far past a sequential reader's
+        last batch the storage server speculates.  A multiple of the
+        round-trip-worth estimate so a stream absorbs several coalesced
+        batches per speculative read, clamped to keep the per-server
+        buffer pool bounded."""
+        return max(READAHEAD_FLOOR,
+                   min(READAHEAD_CEILING, 8 * self._adaptive_bytes()))
 
     def snapshot(self) -> dict:
         """Adaptive-threshold accounting for ``Cluster.total_stats``."""

@@ -146,22 +146,41 @@ class SliceScheduler:
 
     # -------------------------------------------------------------- fetch
     def fetch_many(self, plans: Sequence[Sequence[Extent]],
-                   stats=None) -> List[bytes]:
-        """Fetch one ``bytes`` result per extent plan.
+                   stats=None, block_cache=None,
+                   inode_id=None) -> List[bytes]:
+        """Fetch one buffer result per extent plan (``bytes`` or a
+        zero-copy ``memoryview`` — callers that need ``bytes`` semantics,
+        e.g. the scalar read path, materialize at their boundary).
 
         Each plan is an ordered extent list (as produced by
         ``_plan_range``); zero extents are materialized locally and pointer
-        extents are coalesced and fetched across all plans at once.
+        extents are coalesced and fetched across all plans at once.  With
+        ``block_cache`` (and the owning ``inode_id``) supplied, cached
+        extents are filled before batching — a fully cached read issues
+        zero storage rounds — and fetched extents are inserted after.
         """
+        from .blockcache import block_key
+
+        use_cache = block_cache is not None and inode_id is not None
         chunks: List[List[Optional[bytes]]] = [
             [None] * len(plan) for plan in plans]
         tagged: List[tuple] = []
+        miss_keys = {} if use_cache else None
+        hits = 0
         for pi, plan in enumerate(plans):
             for ci, e in enumerate(plan):
                 if e.is_zero:
                     chunks[pi][ci] = b"\x00" * e.length
-                else:
-                    tagged.append((pi, ci, e, self._pick_replica(e.ptrs)))
+                    continue
+                if use_cache:
+                    key = block_key(e.ptrs[0])
+                    cached = block_cache.get(key)
+                    if cached is not None:
+                        chunks[pi][ci] = cached
+                        hits += 1
+                        continue
+                    miss_keys[(pi, ci)] = key
+                tagged.append((pi, ci, e, self._pick_replica(e.ptrs)))
 
         units = self._plan_units(plan_batches(tagged, self.max_gap))
         tasks = [IoTask("fetch", u.server_id, u.nbytes
@@ -175,14 +194,24 @@ class SliceScheduler:
             physical += n_bytes
             for pi, ci, data in parts:
                 chunks[pi][ci] = data
+                if use_cache:
+                    block_cache.put(miss_keys[(pi, ci)], data, inode_id)
         if stats is not None:
             stats.add(fetch_batches=rounds,
                       slices_coalesced=len(tagged) - rounds,
                       data_bytes_read=physical)
-        return [b"".join(c) for c in chunks]
+            if use_cache:
+                stats.add(block_cache_hits=hits,
+                          block_cache_misses=len(tagged))
+        # Single-extent plans (the common sequential case) pass the
+        # buffer through unjoined — no per-plan copy.
+        return [c[0] if len(c) == 1 else b"".join(c) for c in chunks]
 
-    def fetch(self, extents: Sequence[Extent], stats=None) -> bytes:
-        return self.fetch_many([extents], stats=stats)[0]
+    def fetch(self, extents: Sequence[Extent], stats=None,
+              block_cache=None, inode_id=None) -> bytes:
+        return self.fetch_many([extents], stats=stats,
+                               block_cache=block_cache,
+                               inode_id=inode_id)[0]
 
     # ----------------------------------------------------------- internals
     def _plan_units(self, batches: List[_FetchBatch]) -> List[Any]:
@@ -269,7 +298,10 @@ class SliceScheduler:
             pi, ci, e, ptr = batch.parts[0]
             return ([(pi, ci, self.cluster.fetch_slice(e.ptrs))], 1, e.length)
         try:
-            blob = self.cluster.fetch_slice((batch.covering,))
+            # memoryview so the per-part carving below aliases the blob
+            # instead of copying it (the covering-retrieval inversion that
+            # made vectored reads slower than scalar).
+            blob = memoryview(self.cluster.fetch_slice((batch.covering,)))
         except StorageError:
             # Degrade to per-extent fetches with full replica failover
             # (§2.9): the chosen replica's server died between planning and

@@ -63,6 +63,7 @@ class LeaseStats(AtomicStatsMixin):
     lease_expirations: int = 0       # lookups that found a dead-by-TTL lease
     lease_commit_skips: int = 0      # read-only commits served sans KV
     plan_invalidations: int = 0      # shared plan-cache entries dropped
+    block_invalidations: int = 0     # shared block-cache entries dropped
     _stats_lock: threading.Lock = field(default_factory=threading.Lock,
                                         repr=False, compare=False)
 
@@ -170,19 +171,22 @@ class LeaseHub:
     every registered client table, and piggybacks shared plan-cache
     eviction on the (per-shard, fanned-in) WAL subscribe stream."""
 
-    def __init__(self, kv, ttl: float, plan_cache=None):
+    def __init__(self, kv, ttl: float, plan_cache=None, block_cache=None):
         self.ttl = float(ttl)
         self.clock = time.monotonic      # swappable in tests (expiry)
         self.stats = LeaseStats()
         self._plan_cache = plan_cache
+        self._block_cache = block_cache
         self._tables: list[LeaseTable] = []
         self._tables_lock = witness_lock(threading.Lock(), "lease.tables")
         # Pre-apply barrier on every shard: correctness (see module doc).
         kv.add_invalidation_listener(self._invalidate)
         # WAL stream: cache hygiene.  Region mutations evict the shared
         # plan cache's entries for that inode (they could only fail their
-        # version validation anyway; eviction keeps the LRU useful).
-        if plan_cache is not None:
+        # version validation anyway; eviction keeps the LRU useful), and
+        # the shared data-block cache's blocks WITH them — plan and blocks
+        # always die together, the blockcache invalidation rule.
+        if plan_cache is not None or block_cache is not None:
             kv.subscribe(self._on_wal)
 
     def register(self, table: LeaseTable) -> None:
@@ -200,6 +204,11 @@ class LeaseHub:
     def _on_wal(self, space: str, key: Any, value: Any,
                 version: int) -> None:
         if space == "regions":
-            dropped = self._plan_cache.drop_inode(key[0])
-            if dropped:
-                self.stats.add(plan_invalidations=dropped)
+            if self._plan_cache is not None:
+                dropped = self._plan_cache.drop_inode(key[0])
+                if dropped:
+                    self.stats.add(plan_invalidations=dropped)
+            if self._block_cache is not None:
+                dropped = self._block_cache.drop_inode(key[0])
+                if dropped:
+                    self.stats.add(block_invalidations=dropped)

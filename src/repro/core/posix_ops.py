@@ -365,8 +365,8 @@ class PosixOps:
 
     def _op_readv(self, ctx: _Ctx, op: _Op, fd: int,
                   ranges: Tuple[Tuple[int, int], ...]) -> List[bytes]:
-        _, plans = self._clamped_plans(ctx, fd, ranges)
-        out = self._fetch_many(plans)
+        f, plans = self._clamped_plans(ctx, fd, ranges)
+        out = self._fetch_many(plans, inode_id=f.inode_id)
         self.stats.add(logical_bytes_read=sum(len(b) for b in out),
                        vectored_ops=1)
         return out

@@ -98,7 +98,9 @@ class SliceOps:
         extents = self._plan_range(ctx, ino, f.offset, size)
         data = None
         if want_data:
-            data = self._fetch(extents)
+            data = self._fetch(extents, inode_id=ino.inode_id)
+            if type(data) is not bytes:
+                data = bytes(data)     # user-facing yank payload
             self.stats.add(logical_bytes_read=size)
         f.offset += size
         extents = tuple(extents)
@@ -403,6 +405,15 @@ class SliceOps:
                    for rk, ver in versions):
                 self.stats.add(plan_cache_hits=1)
                 return [list(p) for p in plans]
+            # An invalidating commit moved a touched region's version:
+            # the inode's plans AND its cached data blocks die together
+            # (the shared invalidation rule — see ``blockcache``).  The
+            # stale blocks were unreachable anyway (new plans carry new
+            # pointers); eviction keeps both LRUs useful.
+            cache.drop_inode(ino.inode_id)
+            bc = getattr(self, "_block_cache", None)
+            if bc is not None:
+                bc.drop_inode(ino.inode_id)
         regions = sorted({
             r for off, ln in ranges
             for r, _, _, _ in split_by_regions(off, ln, ino.region_size)})
@@ -422,15 +433,20 @@ class SliceOps:
                     length: int) -> bytes:
         if length <= 0:
             return b""
-        return self._fetch(self._plan_range(ctx, ino, offset, length))
+        data = self._fetch(self._plan_range(ctx, ino, offset, length),
+                           inode_id=ino.inode_id)
+        # The scalar boundary: internal fetch paths hand around zero-copy
+        # buffers; scalar read/pread (and ``_dir_entries``) promise bytes.
+        return data if type(data) is bytes else bytes(data)
 
-    def _fetch(self, extents: Sequence[Extent]) -> bytes:
+    def _fetch(self, extents: Sequence[Extent], inode_id=None) -> bytes:
         """Dereference pointers through the batched scheduler (replica-
         failover aware, §2.9); pending write-behind extents are served from
         the buffer's memory (read-your-buffered-writes)."""
-        return self._fetch_many([extents])[0]
+        return self._fetch_many([extents], inode_id=inode_id)[0]
 
-    def _fetch_many(self, plans: Sequence[Sequence[Extent]]) -> List[bytes]:
+    def _fetch_many(self, plans: Sequence[Sequence[Extent]],
+                    inode_id=None) -> List[bytes]:
         """Dereference many plans in one scheduler pass: cross-plan
         coalescing plus per-server fan-out.
 
@@ -446,8 +462,10 @@ class SliceOps:
         if any(not e.is_zero and not extent_is_pending(e)
                for p in plans for e in p):
             self.stats.add(blocked_waits=1)
+        bc = self._block_cache
         if not self._wb.pending:
-            return self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+            return self.cluster.scheduler.fetch_many(
+                plans, stats=self.stats, block_cache=bc, inode_id=inode_id)
         parts: List[List[bytes]] = [[b""] * len(p) for p in plans]
         sched_plans: List[List[Extent]] = []
         slots: List[tuple] = []
@@ -459,8 +477,13 @@ class SliceOps:
                     sched_plans.append([e])
                     slots.append((pi, ci))
         if sched_plans:
+            # Pending extents above never reach the scheduler (served from
+            # the write-behind buffer), so they structurally bypass the
+            # block cache; committed extents in the same plan still use it.
             datas = self.cluster.scheduler.fetch_many(sched_plans,
-                                                      stats=self.stats)
+                                                      stats=self.stats,
+                                                      block_cache=bc,
+                                                      inode_id=inode_id)
             for (pi, ci), data in zip(slots, datas):
                 parts[pi][ci] = data
         return [b"".join(p) for p in parts]
@@ -673,7 +696,9 @@ class SliceOps:
                 continue
             # Slices are immutable, so fetching after the metadata commit
             # is safe; rounds issued from a worker run inline (iort).
-            out = self.cluster.scheduler.fetch_many(plans, stats=self.stats)
+            out = self.cluster.scheduler.fetch_many(
+                plans, stats=self.stats, block_cache=self._block_cache,
+                inode_id=inode_id)
             self.stats.add(logical_bytes_read=sum(len(b) for b in out),
                            vectored_ops=1)
             return out

@@ -17,6 +17,16 @@ extents, which yields a sparse file occupying space proportional to live
 bytes.  Offsets are preserved, so outstanding slice pointers stay valid.
 Files with the *most* garbage are collected first — they cost the least I/O
 and reclaim the most space.
+
+Readahead: each server can keep a bounded pool of speculative read buffers
+(``_ReadaheadPool``).  A per-backing-file detector watches retrieval rounds;
+once a file shows a sequential streak the server reads ahead of the stream
+(window sized by the runtime's EWMA cost model via ``readahead_window``)
+and later rounds are served from memory.  Safe because backing-file byte
+ranges are immutable once written: appends only ever extend the file, GC
+preserves live bytes at their offsets, and speculation is clamped to
+``_BackingFile.stable_size()`` so a buffer can never capture a reservation
+whose write is still in flight.
 """
 from __future__ import annotations
 
@@ -24,8 +34,9 @@ import itertools
 import os
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .errors import StorageError
 from .iort import AtomicStatsMixin
@@ -54,11 +65,18 @@ class StorageStats(AtomicStatsMixin):
     """
 
     bytes_written: int = 0
+    # Bytes actually read from the backing files (disk traffic): pool-hit
+    # retrievals do NOT count here — their bytes were counted once, at
+    # speculation time, under ``readahead_bytes`` as well.
     bytes_read: int = 0
     slices_created: int = 0
     slices_written: int = 0
     slices_read: int = 0
     read_rounds: int = 0
+    # Pointer retrievals served from the readahead pool / bytes read
+    # speculatively into it.
+    readahead_hits: int = 0
+    readahead_bytes: int = 0
     gc_bytes_reclaimed: int = 0
     gc_bytes_rewritten: int = 0
     # Seconds spent waiting to *reserve* an append offset.  The write
@@ -257,6 +275,16 @@ class _BackingFile:
             self._release()
         return off
 
+    def stable_size(self) -> int:
+        """Prefix of the file guaranteed torn-write free: every byte below
+        the first still-pending reservation is fully on disk (reservations
+        are pending from ``_reserve`` until the client's handoff release,
+        which happens after the write retires).  Readahead clamps here so
+        a speculative buffer can never capture bytes a concurrent appender
+        is still writing."""
+        with self.lock:
+            return self.pending[0][0] if self.pending else self.size
+
     def read(self, offset: int, length: int) -> bytes:
         # Positional read: no shared file-offset state between readers.
         return os.pread(self._fh.fileno(), length, offset)
@@ -278,13 +306,141 @@ class _BackingFile:
             self._fh.close()
 
 
+# Sequential detector: a round starting within this many bytes of the
+# previous round's end (either side — coalesced batches can overlap their
+# predecessor's tail) extends the streak.
+_SEQ_SLOP = 256 << 10
+# Rounds of in-order access before the server starts speculating.  Two
+# keeps one-shot scans (and the counter assertions of single-round tests)
+# readahead-free while real streams pay exactly one cold round.
+_SEQ_THRESHOLD = 2
+# Speculation window when no runtime cost model is wired in.
+_DEFAULT_READAHEAD_WINDOW = 512 << 10
+# Default per-server pool capacity (``Cluster(readahead=True)``): a few
+# concurrent streams' worth of windows.
+DEFAULT_READAHEAD_POOL_BYTES = 8 << 20
+
+
+class _ReadaheadPool:
+    """Bounded per-server pool of speculative read buffers.
+
+    ``observe`` feeds one retrieval round into a per-backing-file
+    sequential detector; once a file has streaked ``_SEQ_THRESHOLD``
+    in-order rounds it returns a ``(start, stop)`` range worth reading
+    ahead, and the server publishes the bytes with ``put``.  Later rounds
+    covered by a pooled buffer are served from memory via ``lookup``.
+    Buffers are keyed ``(backing_file, start)``, evicted LRU beyond
+    ``capacity`` bytes; GC's sparse rewrite calls ``drop_file`` so punched
+    garbage never lingers (pointer reads could never observe it anyway —
+    punched ranges are unreferenced — but the memory is dead weight).
+
+    Lock order: ``_lock`` is declared ``storage.readahead`` (rank 115), a
+    leaf *under* ``storage.backing`` — the rewrite invalidates the pool
+    while holding the backing-file lock.  Consequently nothing here may
+    touch a backing file: the server performs the speculative read outside
+    the pool lock and only then publishes the buffer.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._lock = witness_lock(threading.Lock(), "storage.readahead")
+        # global LRU of (file, start) -> immutable bytes
+        self._bufs: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()
+        # per-file index of pooled buffer starts (lookup scans one file's
+        # handful of windows, not the whole pool)
+        self._starts: Dict[str, Set[int]] = {}
+        self._nbytes = 0
+        # per-file detector state: name -> (last_end, streak, ra_end)
+        self._streams: Dict[str, Tuple[int, int, int]] = {}
+
+    def lookup(self, name: str, offset: int, length: int):
+        """Bytes for ``[offset, offset+length)`` if pooled, else None.
+        Returns the pooled ``bytes`` itself on an exact match, a zero-copy
+        ``memoryview`` slice otherwise."""
+        if length <= 0:
+            return None
+        with self._lock:
+            for start in self._starts.get(name, ()):
+                buf = self._bufs.get((name, start))
+                if (buf is not None and start <= offset
+                        and offset + length <= start + len(buf)):
+                    self._bufs.move_to_end((name, start))
+                    if start == offset and length == len(buf):
+                        return buf
+                    lo = offset - start
+                    return memoryview(buf)[lo:lo + length]
+        return None
+
+    def observe(self, name: str, offset: int, end: int,
+                window: int) -> Optional[Tuple[int, int]]:
+        """Feed one retrieval round ``[offset, end)`` into the detector;
+        returns the ``(start, stop)`` range worth speculating, or None.
+        ``ra_end`` (the pool's high-water mark for this stream) advances
+        in ``put`` — only bytes actually pooled count, so a clamped or
+        failed speculative read simply retries on a later round."""
+        with self._lock:
+            last_end, streak, ra_end = self._streams.get(name, (0, 0, 0))
+            if last_end - _SEQ_SLOP <= offset <= last_end + _SEQ_SLOP:
+                streak += 1
+            else:
+                streak, ra_end = 1, 0
+            new_end = max(end, last_end) if streak > 1 else end
+            want = None
+            if streak >= _SEQ_THRESHOLD and window > 0:
+                start = max(new_end, ra_end)
+                stop = new_end + window
+                if stop - start >= max(1, window // 2):
+                    want = (start, stop)
+            self._streams[name] = (new_end, streak, ra_end)
+            return want
+
+    def put(self, name: str, start: int, data: bytes) -> None:
+        n = len(data)
+        if n == 0 or n > self.capacity:
+            return
+        with self._lock:
+            key = (name, start)
+            old = self._bufs.pop(key, None)
+            if old is not None:
+                self._nbytes -= len(old)
+            self._bufs[key] = data
+            self._starts.setdefault(name, set()).add(start)
+            self._nbytes += n
+            st = self._streams.get(name)
+            if st is not None:
+                self._streams[name] = (st[0], st[1], max(st[2], start + n))
+            while self._nbytes > self.capacity:
+                (ename, estart), ebuf = self._bufs.popitem(last=False)
+                self._nbytes -= len(ebuf)
+                starts = self._starts.get(ename)
+                if starts is not None:
+                    starts.discard(estart)
+                    if not starts:
+                        del self._starts[ename]
+
+    def drop_file(self, name: str) -> None:
+        """Forget every buffer and the detector state for ``name`` (GC
+        sparse rewrite; called with the backing-file lock held)."""
+        with self._lock:
+            for start in self._starts.pop(name, ()):
+                buf = self._bufs.pop((name, start), None)
+                if buf is not None:
+                    self._nbytes -= len(buf)
+            self._streams.pop(name, None)
+
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._nbytes
+
+
 class StorageServer:
     """One data node.  Thread-safe; writes are real file I/O."""
 
     def __init__(self, server_id: int, root_dir: str,
                  num_backing_files: int = 8,
                  fail_injected: bool = False,
-                 service_time_s: float = 0.0):
+                 service_time_s: float = 0.0,
+                 readahead_pool_bytes: int = 0):
         self.server_id = server_id
         self.root_dir = root_dir
         self.num_backing_files = num_backing_files
@@ -299,6 +455,13 @@ class StorageServer:
         # every lock, so concurrent rounds genuinely overlap.
         self.service_time_s = service_time_s
         os.makedirs(root_dir, exist_ok=True)
+        # Speculative-read pool (off when 0 — direct constructions and the
+        # hdfs_like baseline stay readahead-free).  ``readahead_window``
+        # is wired post-construction by Cluster to the runtime's EWMA
+        # estimate (IoRuntime.readahead_bytes); until then a fixed window.
+        self._ra_pool = (_ReadaheadPool(readahead_pool_bytes)
+                         if readahead_pool_bytes > 0 else None)
+        self.readahead_window: Optional[Callable[[], int]] = None
         self._files: Dict[str, _BackingFile] = {}
         self._files_lock = witness_lock(threading.Lock(), "storage.files")
         # round-robin cursor for unhinted placement; itertools.count is a
@@ -381,7 +544,11 @@ class StorageServer:
                 bf.release_range(p.offset, p.length)
 
     def retrieve_slice(self, ptr: SlicePointer) -> bytes:
-        """Follow a pointer: open the named file, read, return (§2.2)."""
+        """Follow a pointer: open the named file, read, return (§2.2).
+
+        Returns a bytes-like buffer: ``bytes`` off disk, possibly a
+        zero-copy ``memoryview`` when served from the readahead pool.
+        """
         if not self.alive:
             raise StorageError(f"server {self.server_id} is down")
         if ptr.server_id != self.server_id:
@@ -389,12 +556,23 @@ class StorageServer:
                 f"pointer for server {ptr.server_id} sent to {self.server_id}")
         self._service_delay()
         bf = self._get_backing_file(ptr.backing_file)
-        data = bf.read(ptr.offset, ptr.length)
-        if len(data) != ptr.length:
-            raise StorageError(
-                f"short read: wanted {ptr.length} got {len(data)} "
-                f"from {ptr.backing_file}@{ptr.offset}")
-        self.stats.add(bytes_read=len(data), slices_read=1, read_rounds=1)
+        data = None
+        if self._ra_pool is not None:
+            data = self._ra_pool.lookup(ptr.backing_file, ptr.offset,
+                                        ptr.length)
+        if data is not None:
+            self.stats.add(slices_read=1, read_rounds=1, readahead_hits=1)
+        else:
+            data = bf.read(ptr.offset, ptr.length)
+            if len(data) != ptr.length:
+                raise StorageError(
+                    f"short read: wanted {ptr.length} got {len(data)} "
+                    f"from {ptr.backing_file}@{ptr.offset}")
+            self.stats.add(bytes_read=len(data), slices_read=1,
+                           read_rounds=1)
+        if self._ra_pool is not None:
+            self._maybe_readahead(bf, ptr.backing_file, ptr.offset,
+                                  ptr.offset + ptr.length)
         return data
 
     def retrieve_slices(self, ptrs: Sequence[SlicePointer]
@@ -417,9 +595,12 @@ class StorageServer:
         if not ptrs:
             return []
         self._service_delay()
+        pool = self._ra_pool
         total = sum(p.length for p in ptrs)
-        buf = memoryview(bytearray(total))
+        buf: Optional[memoryview] = None
         out: List[memoryview] = []
+        spans: Dict[str, Tuple[int, int]] = {}
+        hits = disk_bytes = 0
         off = 0
         for p in ptrs:
             if p.server_id != self.server_id:
@@ -427,17 +608,65 @@ class StorageServer:
                     f"pointer for server {p.server_id} sent to "
                     f"{self.server_id}")
             bf = self._get_backing_file(p.backing_file)
-            part = buf[off:off + p.length]
-            got = bf.read_into(part, p.offset) if p.length else 0
-            if got != p.length:
-                raise StorageError(
-                    f"short read: wanted {p.length} got {got} "
-                    f"from {p.backing_file}@{p.offset}")
+            part = pool.lookup(p.backing_file, p.offset, p.length) \
+                if pool is not None else None
+            if part is not None:
+                hits += 1
+            else:
+                if buf is None:
+                    buf = memoryview(bytearray(total))
+                part = buf[off:off + p.length]
+                got = bf.read_into(part, p.offset) if p.length else 0
+                if got != p.length:
+                    raise StorageError(
+                        f"short read: wanted {p.length} got {got} "
+                        f"from {p.backing_file}@{p.offset}")
+                disk_bytes += p.length
             out.append(part)
             off += p.length
-        self.stats.add(bytes_read=total, slices_read=len(ptrs),
-                       read_rounds=1)
+            if pool is not None and p.length:
+                lo, hi = spans.get(p.backing_file,
+                                   (p.offset, p.offset + p.length))
+                spans[p.backing_file] = (min(lo, p.offset),
+                                         max(hi, p.offset + p.length))
+        self.stats.add(bytes_read=disk_bytes, slices_read=len(ptrs),
+                       read_rounds=1, readahead_hits=hits)
+        # Feed the detector one span per backing file touched this round
+        # (coalesced batches arrive as one round; the detector tracks the
+        # stream, not individual pointers), then speculate if it streaks.
+        for name, (lo, hi) in spans.items():
+            self._maybe_readahead(self._get_backing_file(name), name,
+                                  lo, hi)
         return out
+
+    def _maybe_readahead(self, bf: _BackingFile, name: str,
+                         lo: int, hi: int) -> None:
+        """Feed ``[lo, hi)`` into the sequential detector and, on a
+        streak, read ahead of the stream into the pool.  The speculative
+        read happens outside every lock and is clamped to
+        ``stable_size()`` so it can never observe a torn append."""
+        pool = self._ra_pool
+        if pool is None:
+            return
+        window = (self.readahead_window() if self.readahead_window
+                  is not None else _DEFAULT_READAHEAD_WINDOW)
+        # Never speculate less than one observed round: pool lookups
+        # require full containment, so a stream of large covering reads
+        # against a smaller window would pool buffers that can never
+        # serve the next round — guaranteed misses.
+        window = max(window, hi - lo)
+        want = pool.observe(name, lo, hi, window)
+        if want is None:
+            return
+        start, stop = want
+        stop = min(stop, bf.stable_size())
+        if stop <= start:
+            return
+        data = bf.read(start, stop - start)
+        if data:
+            self.stats.add(bytes_read=len(data),
+                           readahead_bytes=len(data))
+            pool.put(name, start, data)
 
     # ----------------------------------------------------------- placement
     def _pick_backing_file(self, hint: Optional[int]) -> _BackingFile:
@@ -607,6 +836,11 @@ class StorageServer:
                 bf._fh = open(bf.path, "rb+", buffering=0)
                 new_real = os.stat(bf.path).st_blocks * 512
                 reclaimed = max(0, old_real - new_real)
+                if self._ra_pool is not None:
+                    # storage.backing (held) -> storage.readahead: the
+                    # declared descending edge; drops any buffer holding
+                    # pre-punch bytes of this file.
+                    self._ra_pool.drop_file(name)
                 return reclaimed, written
             finally:
                 bf._unblock_locked()

@@ -1,0 +1,275 @@
+"""Data-plane read caching: the client block cache and server readahead.
+
+The block cache (``core/blockcache``) is validated by the same
+touched-region KV versions as the plan cache — any commit that bumps a
+touched region's version invalidates plans AND cached blocks together —
+so these tests drive every invalidation edge: a concurrent writer, a
+lease revocation (shared-cache clusters), write-behind pending extents
+(structural bypass), and GC's sparse rewrite (server readahead pool).
+A seeded differential run pins the strongest claim: every cache/readahead
+configuration returns byte-identical data.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Cluster, GarbageCollector
+from repro.core.blockcache import BlockCache
+
+
+@pytest.fixture
+def cluster(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"))
+    yield c
+    c.close()
+
+
+def _mk(cl, path, data):
+    fd = cl.open(path, "w")
+    cl.write(fd, data)
+    cl.close(fd)
+
+
+def _read(cl, path):
+    fd = cl.open(path, "r")
+    try:
+        return cl.read(fd)
+    finally:
+        cl.close(fd)
+
+
+def _srv(cluster, key):
+    return sum(s[key] for s in cluster.total_stats()["servers"].values())
+
+
+# --------------------------------------------------------- hot re-reads
+def test_hot_reread_costs_zero_storage_rounds(cluster):
+    fs = cluster.client()
+    payload = np.random.RandomState(0).bytes(256 << 10)
+    _mk(fs, "/hot", payload)
+    fd = fs.open("/hot", "r")
+    assert fs.pread(fd, len(payload), 0) == payload   # fills the cache
+    rounds0 = _srv(cluster, "read_rounds")
+    assert fs.pread(fd, len(payload), 0) == payload
+    assert _srv(cluster, "read_rounds") == rounds0, \
+        "block-cached re-read issued storage rounds"
+    assert fs.stats.block_cache_hits > 0
+    fs.close(fd)
+
+
+def test_cache_disabled_rereads_hit_storage(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"),
+                block_cache_bytes=0)
+    try:
+        fs = c.client()
+        payload = b"z" * (64 << 10)
+        _mk(fs, "/nocache", payload)
+        fd = fs.open("/nocache", "r")
+        assert fs.pread(fd, len(payload), 0) == payload
+        rounds0 = _srv(c, "read_rounds")
+        assert fs.pread(fd, len(payload), 0) == payload
+        assert _srv(c, "read_rounds") > rounds0
+        assert fs.stats.block_cache_hits == 0
+        fs.close(fd)
+    finally:
+        c.close()
+
+
+# ------------------------------------------------------- invalidation
+def test_concurrent_writer_invalidates_cached_blocks(cluster):
+    ca, cb = cluster.client(), cluster.client()
+    payload = b"a" * (128 << 10)
+    _mk(ca, "/inv", payload)
+    fd = ca.open("/inv", "r")
+    assert ca.pread(fd, len(payload), 0) == payload   # A caches the block
+    wfd = cb.open("/inv", "rw")
+    cb.pwrite(wfd, b"B" * 4096, 0)                    # B overwrites
+    cb.close(wfd)
+    got = ca.pread(fd, len(payload), 0)
+    assert got == b"B" * 4096 + payload[4096:], \
+        "client A read stale cached bytes after a concurrent write"
+    ca.close(fd)
+
+
+def test_lease_revocation_evicts_shared_blocks(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"), lease_ttl=60.0)
+    try:
+        ca, cb = c.client(), c.client()
+        payload = b"l" * (64 << 10)
+        _mk(ca, "/lease", payload)
+        fd = ca.open("/lease", "r")
+        assert ca.pread(fd, len(payload), 0) == payload
+        assert c.shared_block_cache is not None
+        assert len(c.shared_block_cache) > 0
+        inv0 = c.lease_hub.stats.block_invalidations
+        wfd = cb.open("/lease", "rw")
+        cb.pwrite(wfd, b"W" * 1024, 0)
+        cb.close(wfd)
+        assert c.lease_hub.stats.block_invalidations > inv0, \
+            "invalidating commit did not evict shared cached blocks"
+        assert ca.pread(fd, len(payload), 0) == b"W" * 1024 + payload[1024:]
+        ca.close(fd)
+    finally:
+        c.close()
+
+
+def test_write_behind_pending_extents_bypass_cache(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"),
+                write_behind=True)
+    try:
+        fs = c.client()
+        payload = b"p" * (64 << 10)
+        _mk(fs, "/wb", payload)
+        fd = fs.open("/wb", "rw")
+        assert fs.pread(fd, len(payload), 0) == payload   # cached
+        with fs.transaction():
+            fs.pwrite(fd, b"N" * 8192, 0)
+            # still buffered (no store dispatched): the read must see the
+            # pending extent, not the cached pre-write block
+            assert fs.pread(fd, 8192, 0) == b"N" * 8192
+        assert fs.pread(fd, len(payload), 0) == \
+            b"N" * 8192 + payload[8192:]
+        fs.close(fd)
+    finally:
+        c.close()
+
+
+def test_gc_sparse_rewrite_drops_readahead_pool(cluster):
+    fs = cluster.client()
+    rng = np.random.RandomState(1)
+    alive, dead = rng.bytes(512 << 10), rng.bytes(512 << 10)
+    _mk(fs, "/alive", alive)
+    _mk(fs, "/dead", dead)
+    # warm the server readahead pool with a sequential scan of /alive
+    reader = cluster.client()
+    fd = reader.open("/alive", "r")
+    for off in range(0, len(alive), 64 << 10):
+        reader.pread(fd, 64 << 10, off)
+    reader.close(fd)
+    fs.unlink("/dead")
+    gc = GarbageCollector(cluster)
+    gc.storage_gc_pass()                  # two-scan rule: records garbage
+    gc.storage_gc_pass()                  # second pass punches holes
+    # the sparse rewrite swaps the backing fd and drops the readahead
+    # pool; live bytes must still read back exactly afterwards
+    fresh = cluster.client()
+    assert _read(fresh, "/alive") == alive, \
+        "readahead pool served stale bytes after GC sparse rewrite"
+
+
+# ---------------------------------------------------------- readahead
+def test_sequential_scan_hits_readahead(cluster):
+    fs = cluster.client()
+    payload = np.random.RandomState(2).bytes(1 << 20)
+    _mk(fs, "/seqscan", payload)
+    reader = cluster.client()
+    fd = reader.open("/seqscan", "r")
+    got = b"".join(reader.pread(fd, 64 << 10, off)
+                   for off in range(0, len(payload), 64 << 10))
+    reader.close(fd)
+    assert got == payload
+    assert _srv(cluster, "readahead_hits") > 0, \
+        "sequential scan never hit the readahead pool"
+
+
+def test_readahead_off_never_speculates(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path / "d"),
+                readahead=False)
+    try:
+        fs = c.client()
+        payload = np.random.RandomState(3).bytes(1 << 20)
+        _mk(fs, "/noraseq", payload)
+        reader = c.client()
+        fd = reader.open("/noraseq", "r")
+        got = b"".join(reader.pread(fd, 64 << 10, off)
+                       for off in range(0, len(payload), 64 << 10))
+        reader.close(fd)
+        assert got == payload
+        assert _srv(c, "readahead_hits") == 0
+        assert _srv(c, "readahead_bytes") == 0
+    finally:
+        c.close()
+
+
+# ------------------------------------------------ seeded differential
+def test_differential_cached_vs_uncached_byte_identical(tmp_path):
+    """Random interleaved writes/overwrites/reads on four configurations
+    (readahead x block cache) must return identical bytes throughout."""
+    configs = [("on-on", {}),
+               ("off-on", {"readahead": False}),
+               ("on-off", {"block_cache_bytes": 0}),
+               ("off-off", {"readahead": False, "block_cache_bytes": 0})]
+    clusters, clients = {}, {}
+    try:
+        for tag, kw in configs:
+            c = Cluster(n_servers=2, data_dir=str(tmp_path / tag), **kw)
+            clusters[tag] = c
+            clients[tag] = [c.client(), c.client()]
+        rng = np.random.RandomState(42)
+        size = 256 << 10
+        base = rng.bytes(size)
+        for tag, _ in configs:
+            _mk(clients[tag][0], "/diff", base)
+        for step in range(30):
+            op = rng.randint(3)
+            off = int(rng.randint(0, size - 4096))
+            if op == 0:                       # overwrite from writer client
+                blob = rng.bytes(4096)
+                for tag, _ in configs:
+                    w = clients[tag][1]
+                    fd = w.open("/diff", "rw")
+                    w.pwrite(fd, blob, off)
+                    w.close(fd)
+            elif op == 1:                     # scalar read from reader
+                n = int(rng.randint(1, 64 << 10))
+                outs = set()
+                for tag, _ in configs:
+                    r = clients[tag][0]
+                    fd = r.open("/diff", "r")
+                    outs.add(bytes(r.pread(fd, n, off)))
+                    r.close(fd)
+                assert len(outs) == 1, f"divergence at step {step} (pread)"
+            else:                             # vectored read from reader
+                ranges = [(int(rng.randint(0, size - 4096)), 4096)
+                          for _ in range(4)]
+                outs = set()
+                for tag, _ in configs:
+                    r = clients[tag][0]
+                    fd = r.open("/diff", "r")
+                    outs.add(b"|".join(bytes(p)
+                                       for p in r.readv(fd, ranges)))
+                    r.close(fd)
+                assert len(outs) == 1, f"divergence at step {step} (readv)"
+        finals = {tag: _read(clients[tag][0], "/diff")
+                  for tag, _ in configs}
+        assert len(set(finals.values())) == 1
+    finally:
+        for c in clusters.values():
+            c.close()
+
+
+# ------------------------------------------------------- knobs & unit
+def test_block_cache_bytes_validation(tmp_path):
+    with pytest.raises(ValueError):
+        Cluster(n_servers=1, data_dir=str(tmp_path / "a"),
+                block_cache_bytes=-1)
+    with pytest.raises(ValueError):
+        Cluster(n_servers=1, data_dir=str(tmp_path / "b"),
+                block_cache_bytes=1.5)
+
+
+def test_blockcache_lru_unit():
+    bc = BlockCache(1024)                 # max_entry = 256
+    k = lambda i: (0, "f", i * 256, 256)
+    for i in range(4):
+        bc.put(k(i), bytes([i]) * 256, inode_id=7)
+    assert bc.nbytes() == 1024 and len(bc) == 4
+    assert bc.get(k(0)) == b"\x00" * 256  # touch: 0 becomes most-recent
+    bc.put(k(4), b"\x04" * 256, inode_id=7)
+    assert bc.get(k(1)) is None, "LRU victim should be the untouched key"
+    assert bc.get(k(0)) is not None
+    bc.put((0, "f", 9999, 512), b"x" * 512, inode_id=7)
+    assert bc.get((0, "f", 9999, 512)) is None, \
+        "oversized entries must not enter the cache"
+    dropped = bc.drop_inode(7)
+    assert dropped == len([x for x in (0, 2, 3, 4)])
+    assert len(bc) == 0 and bc.nbytes() == 0
