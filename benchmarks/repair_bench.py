@@ -1,0 +1,130 @@
+"""Chaos benchmark: kill 1 of N servers mid-workload, prove zero data loss
+and measure time-to-full-replication (§2.9 + the repair plane).
+
+The scenario is the paper's availability claim made falsifiable:
+
+  1. a sort-style record workload writes files across the cluster
+     (replication=2, 4 servers);
+  2. ONE server is killed silently — no coordinator notification, exactly
+     a node death — while the workload is still writing;
+  3. the remaining writes and a full read-back run against the degraded
+     cluster (failover + health tracker route around the corpse);
+  4. the repair daemon re-replicates everything the dead server held and
+     ``verify()`` scans region metadata until every visible extent is back
+     at full replication — that wall-clock is ``time_to_full_replication_s``;
+  5. every file is byte-compared against the expected contents:
+     ``data_loss`` is the number of files that differ (must be 0), and the
+     health/hedge/repair counters from ``Cluster.total_stats()`` land in
+     the JSON payload for the CI chaos gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.repair import RepairDaemon
+from repro.core.testing import kill_server
+
+from .common import Scale, Timer, fmt_bytes, save_result, wtf_cluster
+
+REPLICATION = 2
+KILL_SID = 1          # any server: placement spreads every workload over all
+
+
+def _record(i: int, record_bytes: int) -> bytes:
+    return (b"%010d" % i) * (record_bytes // 10) + b"x" * (record_bytes % 10)
+
+
+def run(scale: Scale) -> dict:
+    # The failure domain needs spare capacity: ensure >= 4 servers so
+    # killing one still leaves enough ring successors for 2 replicas.
+    if scale.n_servers < 4:
+        scale = dataclasses.replace(scale, n_servers=4)
+    n_records = max(8, scale.total_bytes // scale.record_bytes // 8)
+    record_bytes = scale.record_bytes
+    timer = Timer()
+    with wtf_cluster(scale, replication=REPLICATION) as c:
+        cl = c.client()
+        expected = {}
+
+        def write(i: int) -> None:
+            data = _record(i, record_bytes)
+            path = f"/rec/{i:06d}"
+            with cl.open_file(path, "w") as f:
+                f.write(data)
+            expected[path] = data
+
+        cl.mkdir("/rec")
+        half = n_records // 2
+        with timer.lap("write_before_kill"):
+            for i in range(half):
+                write(i)
+        # --- the chaos event: silent node death mid-workload -------------
+        kill_server(c, KILL_SID)
+        with timer.lap("write_after_kill"):
+            for i in range(half, n_records):
+                write(i)
+        with timer.lap("read_degraded"):
+            degraded_loss = 0
+            for path, data in expected.items():
+                with cl.open_file(path, "r") as f:
+                    if f.read() != data:
+                        degraded_loss += 1
+        # --- repair: tickets first, then scan until verify is clean ------
+        daemon = RepairDaemon(c)
+        pre = daemon.verify()
+        t0 = time.perf_counter()
+        with timer.lap("repair"):
+            daemon.repair_pass(full_scan=False)      # fresh-damage tickets
+            passes = 1
+            while not daemon.verify()["replication_restored"]:
+                daemon.repair_pass(full_scan=True)   # pre-queue damage
+                passes += 1
+                if passes > 10:
+                    break
+        time_to_full = time.perf_counter() - t0
+        post = daemon.verify()
+        # --- acceptance: byte-identical read-back of every file ----------
+        with timer.lap("read_after_repair"):
+            data_loss = 0
+            cl2 = c.client()                         # cold caches
+            for path, data in expected.items():
+                with cl2.open_file(path, "r") as f:
+                    if f.read() != data:
+                        data_loss += 1
+        stats = c.total_stats()
+        payload = {
+            "benchmark": "repair_bench",
+            "n_servers": scale.n_servers,
+            "replication": REPLICATION,
+            "killed_server": KILL_SID,
+            "n_records": n_records,
+            "record_bytes": record_bytes,
+            "data_loss": data_loss,
+            "degraded_read_loss": degraded_loss,
+            "replication_restored": post["replication_restored"],
+            "time_to_full_replication_s": time_to_full,
+            "repair_passes": passes,
+            "extents_before": pre,
+            "extents_after": post,
+            "laps_s": timer.laps,
+            "io_health": stats["io_health"],
+            "repair": stats["repair"],
+            "degraded_stores": stats["degraded_stores"],
+        }
+    save_result("repair_bench", payload)
+    print(f"  wrote {n_records} x {fmt_bytes(record_bytes)} records, "
+          f"killed server {KILL_SID} mid-workload")
+    print(f"  degraded reads: {degraded_loss} mismatches; "
+          f"under-replicated before repair: {pre['under_replicated']}")
+    print(f"  repair: {payload['repair']['replicas_created']} replicas "
+          f"re-created ({fmt_bytes(payload['repair']['bytes_recopied'])}) "
+          f"in {passes} pass(es), "
+          f"time_to_full_replication={time_to_full:.3f}s")
+    print(f"  data_loss={data_loss} "
+          f"replication_restored={post['replication_restored']}")
+    if data_loss or not post["replication_restored"]:
+        raise AssertionError(
+            f"chaos gate failed: data_loss={data_loss}, "
+            f"replication_restored={post['replication_restored']}")
+    return payload

@@ -43,6 +43,9 @@ BENCHES = {
     "pipeline_overlap": ("async I/O runtime (sync vs async prefetch "
                          "overlap, plan-cache re-reads)",
                          "benchmarks.pipeline_bench", "run_overlap"),
+    "repair": ("§2.9 failure domain (kill 1 of N mid-workload: zero data "
+               "loss, time-to-full-replication)",
+               "benchmarks.repair_bench"),
 }
 
 

@@ -117,4 +117,23 @@ echo "== smoke: streaming multi-producer log (wlog) =="
 # leaves wlog_bench.json for CI to upload as a build artifact
 timeout "${WLOG_BENCH_TIMEOUT:-300}" python -m benchmarks.wlog_bench smoke
 
+echo "== chaos smoke: kill 1 of N mid-workload, repair to full replication =="
+# the §2.9 failure-domain gate: a silent server kill mid-sort-workload
+# must lose ZERO bytes (every file byte-compared pre- and post-repair) and
+# the repair plane must restore full replication (post-repair region scan);
+# leaves repair_bench.json for CI to upload as a build artifact
+timeout "${REPAIR_BENCH_TIMEOUT:-300}" python -m benchmarks.run --scale smoke --only repair
+python - <<'PY'
+import json
+r = json.load(open("benchmarks/results/repair_bench.json"))
+assert r["data_loss"] == 0, f"chaos smoke lost data: {r['data_loss']} file(s)"
+assert r["degraded_read_loss"] == 0, r["degraded_read_loss"]
+assert r["replication_restored"] is True, r["extents_after"]
+assert r["repair"]["replicas_created"] > 0, r["repair"]
+print(f"repair_bench: data_loss=0, replication restored in "
+      f"{r['time_to_full_replication_s']:.3f}s "
+      f"({r['repair']['replicas_created']} replicas re-created, "
+      f"{r['io_health']['servers_skipped']} dead-server probes skipped) OK")
+PY
+
 echo "CI OK"

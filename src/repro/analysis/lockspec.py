@@ -53,6 +53,11 @@ class LockLevel:
 #: consumer watermark, plan-cache invalidation) run under the WAL lock;
 #: storage locks never nest inside metadata-plane commits the other way.
 LOCK_LEVELS: Tuple[LockLevel, ...] = (
+    LockLevel("repair.queue", 5,
+              doc="RepairQueue ticket map (outermost: the repair daemon "
+                  "may hold it only before touching any metadata/storage "
+                  "lock; drain() copies tickets out and releases before "
+                  "processing)"),
     LockLevel("kv.commit_queue", 10,
               doc="WarpKV group-commit queue mutex (taken alone, briefly)"),
     LockLevel("kv.stripe", 20, multi="sorted",
@@ -88,6 +93,10 @@ LOCK_LEVELS: Tuple[LockLevel, ...] = (
     LockLevel("kv.service", 120,
               doc="modeled metadata service-time serialization (leaf; "
                   "sleeps by design)"),
+    LockLevel("iort.health", 125,
+              doc="HealthTracker circuit/EWMA state (innermost leaf: "
+                  "consulted from failover walks deep inside data-plane "
+                  "rounds; nothing blocks or nests under it)"),
 )
 
 LEVEL_BY_NAME: Dict[str, LockLevel] = {lv.name: lv for lv in LOCK_LEVELS}
@@ -107,6 +116,8 @@ STATIC_LOCK_MAP: Dict[Tuple[str, Optional[str], str], str] = {
     ("mdshard", None, "sub_lock"): "sub.fanin",
     ("wlog", "LogConsumer", "_cond"): "wlog.consumer",
     ("iort", "PlanCache", "_lock"): "cache.plan",
+    ("iort", "HealthTracker", "_lock"): "iort.health",
+    ("repair", "RepairQueue", "_lock"): "repair.queue",
     ("blockcache", "BlockCache", "_lock"): "cache.block",
     ("storage", "_ReadaheadPool", "_lock"): "storage.readahead",
     ("storage", "StorageServer", "_files_lock"): "storage.files",

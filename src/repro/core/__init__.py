@@ -10,14 +10,16 @@ from .client import (SEEK_CUR, SEEK_END, SEEK_SET, Cluster, WtfClient,
                      WtfTransaction, normalize_path)
 from .client_runtime import ClientStats
 from .coordinator import ReplicatedCoordinator
-from .errors import (AlreadyExists, BadFileDescriptor, InvalidOffset,
-                     IsADirectory, KVConflict, NoQuorum, NotADirectory,
-                     NotFound, NotOpenForWriting, PreconditionFailed,
-                     StorageError, TransactionAborted, WtfError)
+from .errors import (AlreadyExists, BadFileDescriptor, DeadlineExceeded,
+                     DegradedRead, InvalidOffset, IsADirectory, KVConflict,
+                     NoQuorum, NotADirectory, NotFound, NotOpenForWriting,
+                     PreconditionFailed, ReplicaExhausted, StorageError,
+                     TransactionAborted, WtfError)
 from .gc import GarbageCollector
 from .handle import WtfFile
 from .inode import DEFAULT_REGION_SIZE, Inode, RegionData
-from .iort import IoFuture, IoRuntime, IoTask, PlanCache
+from .iort import HealthTracker, IoFuture, IoRuntime, IoTask, PlanCache
+from .repair import RepairDaemon, RepairQueue, RepairStats, RepairTicket
 from .iosched import SliceScheduler
 from .wbuf import PendingPtr, WriteBehindBuffer
 from .wsched import StoreRequest, WriteScheduler
@@ -49,6 +51,9 @@ __all__ = [
     "WtfError", "TransactionAborted", "KVConflict", "PreconditionFailed",
     "NotFound", "AlreadyExists", "NotADirectory", "IsADirectory",
     "BadFileDescriptor", "NotOpenForWriting", "InvalidOffset",
-    "StorageError", "NoQuorum",
+    "StorageError", "DegradedRead", "ReplicaExhausted", "DeadlineExceeded",
+    "NoQuorum",
+    "HealthTracker",
+    "RepairDaemon", "RepairQueue", "RepairStats", "RepairTicket",
     "CommutingOp", "ListAppend", "Transaction",
 ]

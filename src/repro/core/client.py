@@ -38,7 +38,8 @@ from .errors import StorageError
 from .handle import WtfFile  # noqa: F401  (re-export)
 from .blockcache import DEFAULT_BLOCK_CACHE_BYTES, BlockCache
 from .inode import DEFAULT_REGION_SIZE, REGION_COMPACT_THRESHOLD
-from .iort import IoRuntime, PlanCache, run_with_failover
+from .iort import HealthTracker, IoRuntime, PlanCache, run_with_failover
+from .repair import RepairQueue, RepairStats, RepairTicket
 from .iosched import DEFAULT_MAX_GAP, SliceScheduler
 from .lease import LeaseHub, LeaseTable
 from .mdshard import ShardedKV
@@ -171,7 +172,11 @@ class Cluster:
                  n_meta_shards: int = 1,
                  lease_ttl: Optional[float] = None,
                  kv_service_time: float = 0.0,
-                 storage_service_time: float = 0.0):
+                 storage_service_time: float = 0.0,
+                 io_deadline_s: Optional[float] = None,
+                 min_read_replicas: int = 1,
+                 strict_replication: bool = False,
+                 health_seed: int = 0):
         from .coordinator import ReplicatedCoordinator
         from .placement import HashRing
         from .storage import DEFAULT_READAHEAD_POOL_BYTES, StorageServer
@@ -225,6 +230,14 @@ class Cluster:
             raise ValueError(
                 f"block_cache_bytes must be an int >= 0 (0 disables the "
                 f"client data-block cache), got {block_cache_bytes!r}")
+        if io_deadline_s is not None and io_deadline_s <= 0:
+            raise ValueError(
+                f"io_deadline_s must be > 0 (or None to disable per-round "
+                f"deadlines), got {io_deadline_s}")
+        if not 1 <= min_read_replicas <= replication:
+            raise ValueError(
+                f"min_read_replicas must be in [1, replication="
+                f"{replication}], got {min_read_replicas}")
 
         # Metadata plane: ONE WarpKV by default — the exact single-store
         # fast path — or a ``mdshard.ShardedKV`` partitioning the keyspace
@@ -322,6 +335,29 @@ class Cluster:
         self.write_behind = write_behind
         self.wsched = WriteScheduler(self, self.runtime)
         self.degraded_stores = 0     # replica sets that came up short (§2.9)
+        # Failure domain (§2.9 + the repair plane):
+        #   health    — per-server circuit breaker + latency EWMA consulted
+        #               by every failover walk, so dead servers are skipped
+        #               up front instead of paying a failed round each time;
+        #   io_deadline_s — per-replica-round budget; with it set, slow
+        #               rounds get ONE hedged retry on the next replica
+        #               before the deadline abandons them;
+        #   min_read_replicas — reads that find fewer live replicas raise
+        #               typed ``DegradedRead`` instead of silently serving;
+        #   strict_replication — writes that achieve fewer than
+        #               ``replication`` replicas raise instead of degrading
+        #               (either way a repair ticket is queued first);
+        #   repair_queue/repair_stats — cluster-owned so degrade sites can
+        #               file tickets and ``total_stats`` reports them even
+        #               before any ``repair.RepairDaemon`` is attached.
+        self.io_deadline_s = io_deadline_s
+        self.min_read_replicas = min_read_replicas
+        self.strict_replication = strict_replication
+        self.health = HealthTracker(seed=health_seed)
+        self.repair_stats = RepairStats()
+        self.repair_queue = RepairQueue(self.repair_stats)
+        self._repair_daemon: Optional[Any] = None
+        self._closed = False
         self._root_client = WtfClient(self, client_id=0)
         self._root_client.mkfs()
 
@@ -347,6 +383,9 @@ class Cluster:
     def recover_server(self, server_id: int) -> None:
         self.servers[server_id].recover()
         self.coordinator.recover_server(server_id)
+        # Forget the circuit-breaker history: a recovered server serves
+        # immediately instead of waiting out its pre-crash backoff.
+        self.health.reset(server_id)
         self._refresh_ring()
 
     def client(self) -> WtfClient:
@@ -369,17 +408,30 @@ class Cluster:
         for sid in candidates:
             if len(ptrs) == want:
                 break
-            srv = self.servers[sid]
+            srv = self.servers.get(sid)
+            if srv is None or not srv.alive or not self.health.allow(sid):
+                continue
+            t0 = time.perf_counter()
             try:
                 ptrs.append(srv.create_slice(data, locality_hint=hint))
             except StorageError:
+                self.health.record_failure(sid)
                 self._on_server_error(sid)
+            else:
+                self.health.record_success(sid, time.perf_counter() - t0)
         if not ptrs:
             raise StorageError("no storage server could accept the slice")
         if len(ptrs) < want:
             # Under-replicated, not failed: the write stays available, but
-            # the shortfall must never be silent (§2.9).
+            # the shortfall must never be silent (§2.9) — count it AND file
+            # a repair ticket carrying the extent identity, so the repair
+            # plane can re-replicate without a full metadata scan.
             self.note_degraded_stores(1)
+            self.enqueue_repair(placement_key, ptrs=ptrs)
+            if self.strict_replication:
+                raise StorageError(
+                    f"strict_replication: achieved {len(ptrs)}/{want} "
+                    f"replicas for {placement_key!r}")
         return tuple(ptrs)
 
     def store_slices(self, requests: Sequence[StoreRequest],
@@ -418,6 +470,22 @@ class Cluster:
         with self._lock:
             self.degraded_stores += n
 
+    def enqueue_repair(self, placement_key: Any,
+                       ptrs: Optional[Sequence[SlicePointer]] = None,
+                       reason: str = "degraded-store") -> None:
+        """File a repair ticket for a store that came up short.  The
+        placement key carries the (inode, region) identity; keys the
+        parser does not recognize are counted and left to the periodic
+        under-replication scan."""
+        self.repair_queue.put_from_placement(placement_key, ptrs, reason)
+
+    def note_failed_retrieve(self, inode_id: int) -> None:
+        """File a repair ticket for a read that had to fail over past a
+        dead replica: the read path knows the inode but not which region
+        the extent belongs to, so the ticket covers the whole inode."""
+        self.repair_queue.put(RepairTicket(inode_id=inode_id,
+                                           reason="failed-retrieve"))
+
     def fetch_slice(self, ptrs: Sequence[SlicePointer]) -> bytes:
         """Read any replica; fail over across them via the runtime's
         unified candidate walk (§2.9)."""
@@ -451,6 +519,9 @@ class Cluster:
             s["append_lock_wait_s"] for s in agg["servers"].values())
         agg["degraded_stores"] = self.degraded_stores
         agg["io_runtime"] = self.runtime.snapshot()
+        agg["io_health"] = self.health.snapshot()
+        agg["repair"] = self.repair_stats.snapshot()
+        agg["repair"]["tickets_pending"] = len(self.repair_queue)
         # Sharded metadata plane: per-shard KVStats plus the 2PC
         # coordinator's counters (each snapshot is atomic, like the
         # ``io_runtime`` section; the top-level "kv" stays the aggregate).
@@ -471,8 +542,16 @@ class Cluster:
             self.degraded_stores = 0
 
     def close(self) -> None:
-        # Drain the runtime first: every in-flight async future resolves
-        # and all pool threads exit before the servers go away.
+        """Idempotent teardown: repair daemon first (it drives the runtime
+        and the servers), then the runtime (every in-flight async future
+        resolves and all pool threads exit), then the servers."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        daemon = self._repair_daemon
+        if daemon is not None:
+            daemon.stop()
         self.runtime.close()
         for s in self.servers.values():
             s.close()

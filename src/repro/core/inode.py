@@ -162,6 +162,54 @@ class CompactRegion(CommutingOp):
                 len(rd.entries) - len(compacted))
 
 
+class ReplaceExtentPtrs(CommutingOp):
+    """Repair-plane replica-set swap (§2.9 healing, ``core.repair``).
+
+    ``mapping`` takes an entry's exact pointer tuple to its repaired
+    replacement — surviving replicas first (in their original order, so the
+    canonical first pointer stays stable whenever replica 0 survived, and
+    the PR 9 block-cache key with it), freshly re-replicated pointers
+    appended.  Committed as a commuting op so repair NEVER conflicts with
+    concurrent appenders: no read dependency, no precondition, and entries
+    the mapping misses (compacted or truncated away between the repair scan
+    and this commit) are simply left alone for the next scan.
+
+    NOT ``version_preserving``: replica sets are observable to read
+    planners, so the version bump is exactly what invalidates
+    version-validated cached plans that still point at the dead replica.
+    """
+
+    __slots__ = ("mapping",)
+
+    def __init__(self, mapping):
+        self.mapping = dict(mapping)
+
+    def apply(self, value):
+        rd = value
+        if rd is None:
+            return value, 0
+        swapped = 0
+        entries = []
+        for e in rd.entries:
+            new_ptrs = self.mapping.get(e.ptrs)
+            if new_ptrs is None:
+                entries.append(e)
+            else:
+                entries.append(Extent(e.offset, e.length, new_ptrs))
+                swapped += 1
+        indirect = rd.indirect
+        if indirect is not None:
+            new_ptrs = self.mapping.get(indirect.ptrs)
+            if new_ptrs is not None:
+                indirect = Extent(indirect.offset, indirect.length, new_ptrs)
+                swapped += 1
+        if swapped == 0:
+            # Returning the operand untouched engages WarpKV's no-op-merge
+            # rule: nothing is written, nothing is bumped.
+            return value, 0
+        return RegionData(tuple(entries), rd.end, indirect), swapped
+
+
 class ClearRegion(CommutingOp):
     """Commit-time region wipe (truncate-to-zero).
 

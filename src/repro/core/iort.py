@@ -51,13 +51,16 @@ directions share, and the pieces the overlap needs:
 """
 from __future__ import annotations
 
+import itertools
+import queue as _queue
 import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .errors import StorageError
+from .errors import DeadlineExceeded, ReplicaExhausted, StorageError
+from .placement import stable_hash
 from .testing import witness_lock
 
 # Seed/floor/ceiling for the adaptive thresholds.  The seed matches the old
@@ -76,6 +79,18 @@ READAHEAD_CEILING = 4 << 20
 
 # EWMA blend weight for new observations (two-ish dozen rounds to converge).
 _EWMA_ALPHA = 0.15
+
+# Health-tracker policy (see HealthTracker): a server is circuit-broken
+# after this many consecutive failures, backs off exponentially from the
+# base up to the cap (plus deterministic seeded jitter, so a fleet of
+# clients never probes in lockstep), and a hedged retry fires when a round
+# runs past this multiple of the server's EWMA latency.
+HEALTH_FAILURE_THRESHOLD = 3
+HEALTH_BACKOFF_BASE_S = 0.05
+HEALTH_BACKOFF_CAP_S = 5.0
+HEALTH_JITTER_FRAC = 0.25
+HEDGE_EWMA_MULTIPLIER = 4.0
+HEDGE_MIN_S = 0.001
 # Rounds at most this big estimate fixed per-round cost; rounds at least
 # this big estimate bandwidth.  In between they update neither cleanly.
 _SMALL_ROUND_BYTES = 4 << 10
@@ -171,6 +186,169 @@ class IoFuture:
         self._fut.add_done_callback(lambda _f: fn(self))
 
 
+class _ServerHealth:
+    """Per-server circuit state (mutated only under HealthTracker._lock)."""
+
+    __slots__ = ("consecutive_failures", "ewma_latency_s", "open_until",
+                 "backoff_exp", "probing", "failures_total", "opens")
+
+    def __init__(self):
+        self.consecutive_failures = 0
+        self.ewma_latency_s: Optional[float] = None
+        self.open_until = 0.0          # monotonic time the circuit re-arms
+        self.backoff_exp = 0           # consecutive re-opens (backoff power)
+        self.probing = False           # one half-open probe in flight
+        self.failures_total = 0
+        self.opens = 0
+
+
+class HealthTracker:
+    """Per-server failure memory behind the §2.9 candidate walk.
+
+    The stateless walk re-probed every dead server on every round — one
+    wasted timeout per round per corpse.  This tracker gives the walk
+    memory, as a classic circuit breaker:
+
+      * **closed** — fewer than ``failure_threshold`` consecutive failures:
+        the server is tried normally.  Successes record an EWMA of round
+        latency (feeds the hedge threshold) and reset the failure count.
+      * **open** — at the threshold the circuit opens for an exponentially
+        growing backoff (base × 2^n, capped) plus *deterministic seeded
+        jitter* — ``stable_hash(seed, sid, opens)`` spreads a fleet's
+        probes without making any test run nondeterministic.  While open,
+        ``allow`` says no and the walk skips the server up front.
+      * **half-open** — once the backoff elapses, exactly ONE caller is
+        admitted as a probe; success closes the circuit (and resets the
+        backoff exponent), failure re-opens it with a doubled backoff.
+
+    ``reset`` (wired to ``Cluster.recover_server``) clears a server's
+    state when an operator declares it healthy.  All state lives under the
+    ``iort.health`` lock (ranked in ``analysis.lockspec``); nothing blocks
+    under it.  Counters surface via ``snapshot()`` in ``total_stats()``.
+    """
+
+    def __init__(self, seed: int = 0,
+                 failure_threshold: int = HEALTH_FAILURE_THRESHOLD,
+                 backoff_base_s: float = HEALTH_BACKOFF_BASE_S,
+                 backoff_cap_s: float = HEALTH_BACKOFF_CAP_S,
+                 clock: Callable[[], float] = time.monotonic):
+        self._lock = witness_lock(threading.Lock(), "iort.health")
+        self._seed = seed
+        self._threshold = max(1, failure_threshold)
+        self._backoff_base_s = backoff_base_s
+        self._backoff_cap_s = backoff_cap_s
+        self._clock = clock
+        self._servers: Dict[int, _ServerHealth] = {}
+        # Walk-level counters (guarded by the same lock).
+        self._skips = 0
+        self._probes = 0
+        self._hedged_rounds = 0
+        self._deadline_timeouts = 0
+
+    def _state(self, sid: int) -> _ServerHealth:
+        st = self._servers.get(sid)
+        if st is None:
+            st = self._servers[sid] = _ServerHealth()
+        return st
+
+    def _jitter(self, sid: int, n: int) -> float:
+        """Deterministic jitter fraction in [0, 1): seeded, per (server,
+        re-open count), stable across runs and threads."""
+        return (stable_hash(self._seed, sid, n, salt="health")
+                % 10_000) / 10_000.0
+
+    def allow(self, sid: int) -> bool:
+        """May the walk try ``sid`` right now?  Grants the single half-open
+        probe token when an open circuit's backoff has elapsed."""
+        with self._lock:
+            st = self._servers.get(sid)
+            if st is None or st.consecutive_failures < self._threshold:
+                return True
+            if st.probing:
+                self._skips += 1
+                return False
+            if self._clock() >= st.open_until:
+                st.probing = True
+                self._probes += 1
+                return True
+            self._skips += 1
+            return False
+
+    def record_success(self, sid: int, seconds: float) -> None:
+        with self._lock:
+            st = self._state(sid)
+            st.consecutive_failures = 0
+            st.backoff_exp = 0
+            st.probing = False
+            st.open_until = 0.0
+            if seconds > 0:
+                prev = st.ewma_latency_s
+                st.ewma_latency_s = (
+                    seconds if prev is None
+                    else prev + _EWMA_ALPHA * (seconds - prev))
+
+    def record_failure(self, sid: int) -> None:
+        with self._lock:
+            st = self._state(sid)
+            st.failures_total += 1
+            st.consecutive_failures += 1
+            st.probing = False
+            if st.consecutive_failures < self._threshold:
+                return
+            backoff = min(self._backoff_cap_s,
+                          self._backoff_base_s * (2 ** st.backoff_exp))
+            backoff *= 1.0 + HEALTH_JITTER_FRAC * self._jitter(sid, st.opens)
+            st.open_until = self._clock() + backoff
+            st.backoff_exp += 1
+            st.opens += 1
+
+    def reset(self, sid: int) -> None:
+        """Operator-declared recovery: forget the server's failure state."""
+        with self._lock:
+            self._servers.pop(sid, None)
+
+    def hedge_threshold_s(self, sid: int, deadline_s: float) -> float:
+        """When to fire the hedged retry for a round on ``sid``: a multiple
+        of the server's EWMA latency (a healthy round should be long done),
+        clamped into (HEDGE_MIN_S, deadline)."""
+        with self._lock:
+            st = self._servers.get(sid)
+            ewma = st.ewma_latency_s if st is not None else None
+        if ewma is None:
+            return deadline_s / 2
+        return max(HEDGE_MIN_S, min(deadline_s, ewma * HEDGE_EWMA_MULTIPLIER))
+
+    def note_hedge(self) -> None:
+        with self._lock:
+            self._hedged_rounds += 1
+
+    def note_deadline_timeout(self) -> None:
+        with self._lock:
+            self._deadline_timeouts += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            servers = {
+                sid: {
+                    "consecutive_failures": st.consecutive_failures,
+                    "failures_total": st.failures_total,
+                    "circuit_open": (st.consecutive_failures
+                                     >= self._threshold),
+                    "opens": st.opens,
+                    "ewma_latency_s": st.ewma_latency_s,
+                }
+                for sid, st in self._servers.items()}
+            return {
+                "servers_skipped": self._skips,
+                "half_open_probes": self._probes,
+                "hedged_rounds": self._hedged_rounds,
+                "deadline_timeouts": self._deadline_timeouts,
+                "circuit_opens": sum(st.opens
+                                     for st in self._servers.values()),
+                "servers": servers,
+            }
+
+
 def run_with_failover(cluster, candidates: Sequence[Tuple[int, Any]],
                       attempt: Callable[[Any, Any], Any],
                       release: Optional[Callable[[int], None]] = None,
@@ -178,30 +356,170 @@ def run_with_failover(cluster, candidates: Sequence[Tuple[int, Any]],
                                                    Any]] = None) -> Any:
     """The one §2.9 candidate-walk failover loop, shared by both directions.
 
-    Walks ``(server_id, payload)`` candidates in order: dead or missing
-    servers are skipped; ``attempt(server, payload)`` returning is success;
-    a ``StorageError`` marks the server failed with the coordinator
+    Walks ``(server_id, payload)`` candidates in order: dead, missing, or
+    circuit-broken servers (the cluster's ``HealthTracker``) are skipped up
+    front; ``attempt(server, payload)`` returning is success (recorded into
+    the server's health EWMA); a ``StorageError`` bumps the server's
+    failure count, marks it failed with the coordinator
     (``cluster._on_server_error``), optionally ``release``s any claim the
     caller took on it, and moves on.  When every candidate is exhausted,
-    ``exhausted(last_error)`` decides the outcome (default: raise).
+    ``exhausted(last_error)`` decides the outcome (default: raise
+    ``ReplicaExhausted`` — a ``StorageError`` subclass, so existing
+    degraded-path handlers keep working).
+
+    With ``Cluster(io_deadline_s=...)`` set, rounds run with a per-round
+    deadline and one hedged retry (``_run_with_deadline``): a round that
+    outlives the health-EWMA-derived hedge threshold stops gating the walk.
     """
+    health = getattr(cluster, "health", None)
+    deadline = getattr(cluster, "io_deadline_s", None)
+    if deadline is not None and health is not None:
+        return _run_with_deadline(cluster, candidates, attempt, release,
+                                  exhausted, health, deadline)
     last: Optional[Exception] = None
     for sid, payload in candidates:
         srv = cluster.servers.get(sid)
-        if srv is None or not srv.alive:
+        if srv is None or not srv.alive or \
+                (health is not None and not health.allow(sid)):
             if release is not None:
                 release(sid)
             continue
+        t0 = time.perf_counter()
         try:
-            return attempt(srv, payload)
+            result = attempt(srv, payload)
         except StorageError as e:
             last = e
+            if health is not None:
+                health.record_failure(sid)
             if release is not None:
                 release(sid)
             cluster._on_server_error(sid)
+            continue
+        if health is not None:
+            health.record_success(sid, time.perf_counter() - t0)
+        return result
     if exhausted is not None:
         return exhausted(last)
-    raise StorageError(f"all replicas unavailable: {last}")
+    raise ReplicaExhausted(f"all replicas unavailable: {last}")
+
+
+def _run_with_deadline(cluster, candidates, attempt, release, exhausted,
+                       health: HealthTracker, deadline: float) -> Any:
+    """Deadline + hedged variant of the candidate walk.
+
+    Attempts run on the runtime's dedicated hedge pool (never the shared
+    round pool — a walk frequently *runs on* a round-pool worker, and
+    blocking there on work only that pool could run is the classic
+    self-deadlock).  The walk waits on a completion queue with three
+    timers:
+
+      * **hedge** — the first time a round outlives the server's
+        health-EWMA-derived hedge threshold, ONE hedged retry is launched
+        on the next candidate; first success wins, the loser is abandoned
+        (reads are idempotent; an abandoned store's slices are unreferenced
+        garbage the §2.8 collector reclaims).
+      * **deadline** — a round older than ``io_deadline_s`` is abandoned
+        and counted as a failure against the server's health (it ate a
+        full timeout) without being declared dead to the coordinator —
+        slow is not dead.
+      * **exhaustion** — no replicas in flight and no candidates left:
+        the caller's ``exhausted`` policy (default ``ReplicaExhausted``).
+    """
+    it = iter(candidates)
+    results: "_queue.SimpleQueue" = _queue.SimpleQueue()
+    tokens = itertools.count()
+    inflight: Dict[int, Tuple[int, float]] = {}   # token -> (sid, start)
+    last: Optional[Exception] = None
+    hedged = False
+
+    def next_live():
+        for sid, payload in it:
+            srv = cluster.servers.get(sid)
+            if srv is None or not srv.alive or not health.allow(sid):
+                if release is not None:
+                    release(sid)
+                continue
+            return sid, payload, srv
+        return None
+
+    def launch(sid, payload, srv) -> None:
+        tok = next(tokens)
+        inflight[tok] = (sid, time.perf_counter())
+
+        def body():
+            try:
+                results.put((tok, True, attempt(srv, payload)))
+            except BaseException as e:   # noqa: BLE001 — relayed to caller
+                results.put((tok, False, e))
+
+        cluster.runtime.hedge_submit(body)
+
+    def exhaust():
+        if exhausted is not None:
+            return exhausted(last)
+        raise ReplicaExhausted(f"all replicas unavailable: {last}")
+
+    first = next_live()
+    if first is None:
+        return exhaust()
+    launch(*first)
+    while True:
+        now = time.perf_counter()
+        timers = [t0 + deadline for (_sid, t0) in inflight.values()]
+        if not hedged and len(inflight) == 1:
+            (h_sid, h_t0), = inflight.values()
+            timers.append(h_t0 + health.hedge_threshold_s(h_sid, deadline))
+        try:
+            tok, ok, val = results.get(
+                timeout=max(0.0, min(timers) - now))
+        except _queue.Empty:
+            now = time.perf_counter()
+            if not hedged and len(inflight) == 1:
+                (h_sid, h_t0), = inflight.values()
+                if now >= h_t0 + health.hedge_threshold_s(h_sid, deadline):
+                    hedged = True        # one hedge per walk, fired or not
+                    nxt = next_live()
+                    if nxt is not None:
+                        health.note_hedge()
+                        launch(*nxt)
+                        continue
+            expired = [tok for tok, (_sid, t0) in inflight.items()
+                       if now >= t0 + deadline]
+            for tok in expired:
+                sid, _t0 = inflight.pop(tok)
+                health.record_failure(sid)
+                health.note_deadline_timeout()
+                if release is not None:
+                    release(sid)
+                last = DeadlineExceeded(
+                    f"round on server {sid} exceeded io_deadline_s="
+                    f"{deadline}")
+            if not inflight:
+                nxt = next_live()
+                if nxt is None:
+                    return exhaust()
+                launch(*nxt)
+            continue
+        entry = inflight.pop(tok, None)
+        if entry is None:
+            continue                     # abandoned attempt resolved late
+        sid, t0 = entry
+        if ok:
+            health.record_success(sid, time.perf_counter() - t0)
+            return val
+        if isinstance(val, StorageError):
+            last = val
+            health.record_failure(sid)
+            if release is not None:
+                release(sid)
+            cluster._on_server_error(sid)
+            if not inflight:
+                nxt = next_live()
+                if nxt is None:
+                    return exhaust()
+                launch(*nxt)
+            continue
+        raise val                        # non-StorageError: programming bug
 
 
 class PlanCache:
@@ -289,6 +607,15 @@ class IoRuntime:
                  coalesce_override: Optional[int] = None):
         self._max_workers = max(1, max_workers)
         self._pool: Optional[ThreadPoolExecutor] = None
+        # Dedicated pool for deadline/hedged replica attempts (created on
+        # first use; only clusters with ``io_deadline_s`` set ever pay for
+        # it).  Separate from the round pool on purpose: the failover walk
+        # usually RUNS on a round-pool worker, and a worker blocking on
+        # work only its own pool can execute is the self-deadlock
+        # ``run_tasks``'s help-drain exists to avoid.  Hedge tasks are leaf
+        # storage calls that never re-enter either pool, so sizing is just
+        # capacity: two attempts (primary + hedge) per concurrent walk.
+        self._hedge_pool: Optional[ThreadPoolExecutor] = None
         self._pool_lock = threading.Lock()
         self._in_worker = threading.local()
         self._closed = False
@@ -322,6 +649,23 @@ class IoRuntime:
                     thread_name_prefix="wtf-iort")
         return self._pool
 
+    def _hedge_pool_get(self) -> ThreadPoolExecutor:
+        pool = self._hedge_pool
+        if pool is not None:
+            return pool
+        with self._pool_lock:
+            if self._closed:
+                raise RuntimeError("I/O runtime is closed")
+            if self._hedge_pool is None:
+                self._hedge_pool = ThreadPoolExecutor(
+                    max_workers=2 * self._max_workers + 2,
+                    thread_name_prefix="wtf-hedge")
+        return self._hedge_pool
+
+    def hedge_submit(self, fn: Callable[[], Any]) -> None:
+        """Run one deadline-governed replica attempt on the hedge pool."""
+        self._hedge_pool_get().submit(fn)
+
     def in_worker(self) -> bool:
         """True when called from one of the runtime's own pool threads."""
         return getattr(self._in_worker, "active", False)
@@ -331,14 +675,22 @@ class IoRuntime:
         completes, its future resolves, and all pool threads exit — no
         in-flight future is ever abandoned.  The executor stays visible
         while draining so in-flight ops that try to fan out degrade to
-        inline execution (``run_tasks``) instead of erroring."""
+        inline execution (``run_tasks``) instead of erroring.  Abandoned
+        hedge attempts (already timed out and failed over past) are the
+        one exception: their threads are joined here too, after the round
+        pool drains, so a sleeping slow replica can't leak a thread."""
         with self._pool_lock:
             self._closed = True
             pool = self._pool
+            hedge = self._hedge_pool
         if pool is not None:
             pool.shutdown(wait=True)
             with self._pool_lock:
                 self._pool = None
+        if hedge is not None:
+            hedge.shutdown(wait=True)
+            with self._pool_lock:
+                self._hedge_pool = None
 
     # ------------------------------------------------------------ execution
     def _execute(self, task: IoTask, fn: Callable[[IoTask], Any]) -> Any:

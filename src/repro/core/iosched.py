@@ -39,7 +39,7 @@ from __future__ import annotations
 
 from typing import Any, List, Optional, Sequence, Tuple
 
-from .errors import StorageError
+from .errors import DegradedRead, ReplicaExhausted, StorageError
 from .iort import IoTask, run_with_failover
 from .slicing import Extent, SlicePointer
 
@@ -180,7 +180,8 @@ class SliceScheduler:
                         hits += 1
                         continue
                     miss_keys[(pi, ci)] = key
-                tagged.append((pi, ci, e, self._pick_replica(e.ptrs)))
+                tagged.append((pi, ci, e,
+                               self._pick_replica(e.ptrs, inode_id)))
 
         units = self._plan_units(plan_batches(tagged, self.max_gap))
         tasks = [IoTask("fetch", u.server_id, u.nbytes
@@ -283,14 +284,35 @@ class SliceScheduler:
                 out.append((pi, ci, blob[lo:lo + ptr.length]))
         return (out, 1, total)
 
-    def _pick_replica(self, ptrs: Tuple[SlicePointer, ...]) -> SlicePointer:
+    def _pick_replica(self, ptrs: Tuple[SlicePointer, ...],
+                      inode_id=None) -> SlicePointer:
         """Prefer a replica on a live server so coalescing groups fetches
-        onto servers that can actually answer them."""
-        for p in ptrs:
-            srv = self.cluster.servers.get(p.server_id)
-            if srv is not None and srv.alive:
-                return p
-        return ptrs[0]
+        onto servers that can actually answer them — and enforce the
+        read-side failure policy (§2.9 + repair plane):
+
+        * zero live replicas → typed ``ReplicaExhausted`` now, instead of
+          a doomed round followed by a generic ``StorageError``;
+        * fewer live replicas than ``Cluster(min_read_replicas)`` → typed
+          ``DegradedRead`` (a policy refusal: the bytes are readable, the
+          redundancy floor is not met);
+        * any dead replica on a replicated extent files a failed-retrieve
+          repair ticket for the owning inode, so reads — not just writes —
+          feed the repair plane.
+        """
+        cluster = self.cluster
+        live = [p for p in ptrs
+                if (srv := cluster.servers.get(p.server_id)) is not None
+                and srv.alive]
+        if len(live) < len(ptrs) and inode_id is not None and len(ptrs) > 1:
+            cluster.note_failed_retrieve(inode_id)
+        if not live:
+            raise ReplicaExhausted(
+                f"no live replica among {len(ptrs)} for this extent")
+        floor = getattr(cluster, "min_read_replicas", 1)
+        if len(live) < floor:
+            raise DegradedRead(
+                f"{len(live)} live replica(s) < min_read_replicas={floor}")
+        return live[0]
 
     def _run_batch_payload(self, batch: _FetchBatch) -> tuple:
         """Issue one batch; returns (parts, rounds, physical_bytes)."""

@@ -24,6 +24,7 @@ call.  Clients capture ``cluster.kv`` at construction — install ``FlakyKV``
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Iterable, Optional, Set
 
 from .errors import KVConflict, StorageError
@@ -40,13 +41,25 @@ class FlakyStorageServer:
     also crashes the underlying server (it stays down until
     ``inner.recover()``), modelling a node death rather than a transient
     refusal.  Thread-safe: the write scheduler hits servers from a pool.
+
+    Latency injection (deterministic, for deadline/hedge testing): with
+    ``slow_every_n=k``, every k-th intercepted call sleeps ``delay_s``
+    before executing — call numbering shared with ``fail_on``, so a test
+    can make the SAME call slow once and fail the next time.  The sleep
+    happens outside the proxy's lock (other calls proceed while one call
+    is slow — and the blocking call would otherwise serialize the pool).
     """
 
     _LOCAL_ATTRS = frozenset(
-        {"_inner", "_fail_on", "_crash", "_lock", "calls", "injected"})
+        {"_inner", "_fail_on", "_crash", "_lock", "calls", "injected",
+         "_slow_every_n", "_delay_s", "delayed"})
 
     def __init__(self, inner, fail_on: Dict[str, Iterable[int]],
-                 crash: bool = False):
+                 crash: bool = False,
+                 slow_every_n: Optional[int] = None,
+                 delay_s: float = 0.0):
+        if slow_every_n is not None and slow_every_n < 1:
+            raise ValueError(f"slow_every_n must be >= 1, got {slow_every_n}")
         self._inner = inner
         self._fail_on: Dict[str, Set[int]] = {
             op: set(ns) for op, ns in fail_on.items()}
@@ -55,16 +68,25 @@ class FlakyStorageServer:
                 raise ValueError(f"cannot inject failures into {op!r}")
         self._crash = crash
         self._lock = threading.Lock()
+        self._slow_every_n = slow_every_n
+        self._delay_s = delay_s
         self.calls: Dict[str, int] = {op: 0 for op in _FAILABLE_SERVER_OPS}
         self.injected: int = 0
+        self.delayed: int = 0
 
     def _maybe_fail(self, op: str) -> None:
         with self._lock:
             self.calls[op] += 1
             n = self.calls[op]
             hit = n in self._fail_on.get(op, ())
+            slow = (self._slow_every_n is not None
+                    and n % self._slow_every_n == 0)
             if hit:
                 self.injected += 1
+            if slow:
+                self.delayed += 1
+        if slow:
+            time.sleep(self._delay_s)
         if hit:
             if self._crash:
                 self._inner.crash()
@@ -104,12 +126,31 @@ class FlakyStorageServer:
 
 def make_flaky_server(cluster, server_id: int,
                       fail_on: Dict[str, Iterable[int]],
-                      crash: bool = False) -> FlakyStorageServer:
+                      crash: bool = False,
+                      slow_every_n: Optional[int] = None,
+                      delay_s: float = 0.0) -> FlakyStorageServer:
     """Wrap ``cluster.servers[server_id]`` in place; returns the wrapper."""
     flaky = FlakyStorageServer(cluster.servers[server_id], fail_on,
-                               crash=crash)
+                               crash=crash, slow_every_n=slow_every_n,
+                               delay_s=delay_s)
     cluster.servers[server_id] = flaky
     return flaky
+
+
+def kill_server(cluster, server_id: int) -> None:
+    """Silent node death: the server stops serving but NOTHING tells the
+    coordinator — unlike ``Cluster.fail_server``, which is an orderly
+    administrative removal (coordinator notified, ring refreshed).  Clients
+    discover the corpse the way real ones do: failed rounds feed the
+    failover walk and the health tracker's circuit breaker."""
+    cluster.servers[server_id].crash()
+
+
+def restart_server(cluster, server_id: int) -> None:
+    """Bring a killed server back: storage recovers (slices intact — crash
+    loses the process, not the disk), the coordinator re-admits it, and its
+    circuit-breaker history is forgotten so it serves immediately."""
+    cluster.recover_server(server_id)
 
 
 class FlakyKV:

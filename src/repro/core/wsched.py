@@ -216,14 +216,25 @@ class WriteScheduler:
             if not replicas:
                 raise StorageError(
                     "no storage server could accept the slice batch")
-            if len(replicas) < want:
+            short = len(replicas) < want
+            if short:
                 # per-request unit, matching the scalar pipeline: every
                 # slice in the short group is under-replicated
                 degraded += len(g.requests)
             for i, req in enumerate(g.requests):
                 out[req.key] = tuple(rep[i] for rep in replicas)
+                if short:
+                    # File a repair ticket per short request: the placement
+                    # key names the (inode, region), which is everything
+                    # the repair plane needs to re-replicate it later.
+                    cluster.enqueue_repair(req.placement_key,
+                                           ptrs=out[req.key])
         if degraded:
             cluster.note_degraded_stores(degraded)
+            if getattr(cluster, "strict_replication", False):
+                raise StorageError(
+                    f"strict_replication: {degraded} slice(s) achieved "
+                    f"fewer than {want} replicas")
         if stats is not None:
             stats.add(store_batches=rounds,
                       slices_store_coalesced=coalesced,

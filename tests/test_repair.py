@@ -1,0 +1,484 @@
+"""Failure domain: health-tracked failover, deadlines/hedging, typed
+degraded errors, and the background repair plane (§2.9 + ``core.repair``).
+
+Three layers under test:
+
+  * ``iort.HealthTracker`` — the circuit breaker the candidate walk
+    consults (unit-level, with a fake clock: no real sleeping);
+  * the degrade paths — typed ``DegradedRead``/``ReplicaExhausted``
+    errors, repair tickets filed at degrade time, ``strict_replication``;
+  * ``repair.RepairDaemon`` — re-replication after a silent server kill,
+    including byte-identity of hot re-reads through the shared block/plan
+    caches once the canonical pointer has moved.
+"""
+import pytest
+
+from repro.core import (Cluster, DeadlineExceeded, DegradedRead,
+                        HealthTracker, RepairDaemon, ReplicaExhausted,
+                        StorageError)
+from repro.core.iort import (HEALTH_FAILURE_THRESHOLD, HEALTH_JITTER_FRAC,
+                             HEDGE_EWMA_MULTIPLIER)
+from repro.core.repair import RepairTicket, ticket_from_placement
+from repro.core.testing import kill_server, make_flaky_server, restart_server
+
+
+# ------------------------------------------------------------ health tracker
+class FakeClock:
+    def __init__(self):
+        self.t = 1000.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_health_closed_until_threshold():
+    clk = FakeClock()
+    h = HealthTracker(clock=clk)
+    for _ in range(HEALTH_FAILURE_THRESHOLD - 1):
+        h.record_failure(7)
+        assert h.allow(7)
+    h.record_failure(7)
+    assert not h.allow(7)                    # circuit open
+    assert h.snapshot()["servers"][7]["circuit_open"]
+
+
+def test_health_success_closes_circuit_and_resets_backoff():
+    clk = FakeClock()
+    h = HealthTracker(clock=clk, backoff_base_s=1.0)
+    for _ in range(HEALTH_FAILURE_THRESHOLD):
+        h.record_failure(1)
+    assert not h.allow(1)
+    clk.t += 10.0                            # backoff elapsed: probe token
+    assert h.allow(1)                        # the single half-open probe
+    h.record_success(1, 0.001)
+    assert h.allow(1) and h.allow(1)         # fully closed again
+    snap = h.snapshot()["servers"][1]
+    assert snap["consecutive_failures"] == 0
+    assert not snap["circuit_open"]
+
+
+def test_health_half_open_admits_exactly_one_probe():
+    clk = FakeClock()
+    h = HealthTracker(clock=clk, backoff_base_s=1.0)
+    for _ in range(HEALTH_FAILURE_THRESHOLD):
+        h.record_failure(2)
+    clk.t += 100.0
+    assert h.allow(2)                        # probe token granted
+    assert not h.allow(2)                    # second caller still refused
+    h.record_failure(2)                      # probe failed: re-open
+    assert not h.allow(2)
+    assert h.snapshot()["half_open_probes"] == 1
+
+
+def test_health_backoff_grows_exponentially_with_jitter():
+    clk = FakeClock()
+    h = HealthTracker(seed=42, clock=clk, backoff_base_s=1.0,
+                      backoff_cap_s=1000.0)
+    opens = []
+    for _ in range(HEALTH_FAILURE_THRESHOLD):
+        h.record_failure(3)                  # trip the breaker
+    for _ in range(3):
+        st = h._servers[3]
+        opens.append(st.open_until - clk.t)
+        clk.t = st.open_until + 0.001        # serve out the backoff
+        assert h.allow(3)                    # probe...
+        h.record_failure(3)                  # ...which fails: re-open
+    # base 1, 2, 4 seconds, each inflated by at most the jitter fraction.
+    for i, base in enumerate((1.0, 2.0, 4.0)):
+        assert base <= opens[i] <= base * (1.0 + HEALTH_JITTER_FRAC)
+    assert opens[0] < opens[1] < opens[2]
+
+
+def test_health_jitter_is_deterministic_per_seed():
+    a, b = HealthTracker(seed=7), HealthTracker(seed=7)
+    c = HealthTracker(seed=8)
+    pairs = [(sid, n) for sid in range(4) for n in range(4)]
+    assert [a._jitter(s, n) for s, n in pairs] == \
+           [b._jitter(s, n) for s, n in pairs]
+    assert [a._jitter(s, n) for s, n in pairs] != \
+           [c._jitter(s, n) for s, n in pairs]
+    assert all(0.0 <= a._jitter(s, n) < 1.0 for s, n in pairs)
+
+
+def test_health_reset_forgets_server():
+    h = HealthTracker()
+    for _ in range(HEALTH_FAILURE_THRESHOLD):
+        h.record_failure(5)
+    assert not h.allow(5)
+    h.reset(5)
+    assert h.allow(5)
+    assert 5 not in h.snapshot()["servers"]
+
+
+def test_hedge_threshold_tracks_ewma():
+    h = HealthTracker()
+    assert h.hedge_threshold_s(0, 1.0) == 0.5      # no EWMA: deadline / 2
+    h.record_success(0, 0.010)
+    assert h.hedge_threshold_s(0, 1.0) == pytest.approx(
+        0.010 * HEDGE_EWMA_MULTIPLIER)
+    h.record_success(0, 10.0)                      # slow server...
+    assert h.hedge_threshold_s(0, 1.0) == 1.0      # ...clamped to deadline
+
+
+# --------------------------------------------------------------- clusters
+@pytest.fixture()
+def cluster(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024)
+    yield c
+    c.close()
+
+
+def write_file(c, path, payload):
+    cl = c.client()
+    with cl.open_file(path, "w") as f:
+        f.write(payload)
+    return cl
+
+
+def read_file(cl, path):
+    with cl.open_file(path, "r") as f:
+        return f.read()
+
+
+def test_failover_skips_circuit_open_servers(cluster):
+    payload = b"q" * 40_000
+    cl = write_file(cluster, "/a", payload)
+    victim = None
+    cl2 = cluster.client()
+    # Trip some server's breaker via real failed rounds: kill one silently
+    # and read until its failures cross the threshold.
+    kill_server(cluster, 0)
+    for _ in range(HEALTH_FAILURE_THRESHOLD + 1):
+        assert read_file(cl2, "/a") == payload
+    snap = cluster.health.snapshot()
+    # Reads route around the corpse via live-replica picking, so server 0
+    # may or may not have accrued failures — but every server that did is
+    # now skipped up front by the walk.
+    for sid, st in snap["servers"].items():
+        if st["circuit_open"]:
+            victim = sid
+            assert not cluster.health.allow(sid)
+    # Either way the walk keeps serving.
+    assert read_file(cl2, "/a") == payload
+    if victim is not None:
+        cluster.health.reset(victim)
+
+
+def test_degraded_read_typed_errors(tmp_path):
+    c = Cluster(n_servers=3, data_dir=str(tmp_path), replication=2,
+                min_read_replicas=2, region_size=64 * 1024)
+    try:
+        payload = b"z" * 30_000
+        cl = write_file(c, "/f", payload)
+        assert read_file(cl, "/f") == payload
+        kill_server(c, 0)
+        kill_server(c, 1)
+        kill_server(c, 2)
+        # All replicas dead: the strongest signal, and it IS a DegradedRead
+        # and a StorageError (handlers written against either still work).
+        with pytest.raises(ReplicaExhausted):
+            read_file(c.client(), "/f")
+        assert issubclass(ReplicaExhausted, DegradedRead)
+        assert issubclass(DegradedRead, StorageError)
+        assert issubclass(DeadlineExceeded, StorageError)
+        restart_server(c, 0)
+        restart_server(c, 1)
+        restart_server(c, 2)
+        # One dead replica out of two, with min_read_replicas=2: a policy
+        # refusal even though the bytes are still readable.
+        stats = c.total_stats()
+        kill = next(sid for sid, st in stats["servers"].items()
+                    if st["slices_written"] > 0)
+        kill_server(c, kill)
+        with pytest.raises(DegradedRead):
+            read_file(c.client(), "/f")
+    finally:
+        c.close()
+
+
+def test_degraded_store_files_repair_ticket(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024)
+    try:
+        kill_server(c, 1)
+        write_file(c, "/d", b"d" * 20_000)
+        assert c.degraded_stores > 0
+        snap = c.repair_stats.snapshot()
+        assert snap["tickets_enqueued"] > 0
+        # The ticket carries the extent identity (inode + region), not just
+        # a "something degraded somewhere" counter.
+        tickets = c.repair_queue.drain()
+        assert tickets and all(t.region_idx is not None for t in tickets)
+    finally:
+        c.close()
+
+
+def test_strict_replication_raises_on_shortfall(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                strict_replication=True, region_size=64 * 1024)
+    try:
+        write_file(c, "/ok", b"k" * 10_000)      # both servers up: fine
+        kill_server(c, 1)
+        with pytest.raises(StorageError):
+            write_file(c, "/bad", b"b" * 10_000)
+        assert len(c.repair_queue) > 0           # ticket filed before raise
+    finally:
+        c.close()
+
+
+def test_ticket_parsing():
+    t = ticket_from_placement(("region", 12, 3), reason="degraded-store")
+    assert t == RepairTicket(12, 3, None, "degraded-store")
+    t = ticket_from_placement(("gc-spill", 5, 0))
+    assert (t.inode_id, t.region_idx) == (5, 0)
+    assert ticket_from_placement(("something", "else")) is None
+
+
+def test_knob_validation(tmp_path):
+    with pytest.raises(ValueError):
+        Cluster(n_servers=2, data_dir=str(tmp_path), io_deadline_s=0)
+    with pytest.raises(ValueError):
+        Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                min_read_replicas=3)
+    with pytest.raises(ValueError):
+        Cluster(n_servers=2, data_dir=str(tmp_path), min_read_replicas=0)
+
+
+# --------------------------------------------------------- deadline / hedge
+def test_deadline_hedged_retry_beats_slow_server(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                io_deadline_s=2.0, region_size=64 * 1024,
+                block_cache_bytes=0)
+    try:
+        payload = b"h" * 8_000
+        cl = write_file(c, "/h", payload)
+        # Teach the EWMA what fast looks like, then make one server slow:
+        # every retrieve on it stalls well past the hedge threshold.
+        for _ in range(3):
+            assert read_file(cl, "/h") == payload
+        slow_sid = next(sid for sid, st in c.total_stats()["servers"].items()
+                        if st["slices_read"] > 0)
+        make_flaky_server(c, slow_sid, {}, slow_every_n=1, delay_s=0.6)
+        cl2 = c.client()
+        assert read_file(cl2, "/h") == payload   # hedge to the fast replica
+        snap = c.health.snapshot()
+        assert snap["hedged_rounds"] >= 1
+        assert snap["deadline_timeouts"] == 0    # hedge won, no timeout
+    finally:
+        c.close()
+
+
+def test_deadline_timeout_recorded_not_fatal(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=2,
+                io_deadline_s=0.2, region_size=64 * 1024,
+                block_cache_bytes=0)
+    try:
+        payload = b"t" * 8_000
+        cl = write_file(c, "/t", payload)
+        for _ in range(3):
+            assert read_file(cl, "/t") == payload
+        # EVERY replica slow beyond the deadline: the hedge cannot save the
+        # round, both attempts are abandoned, and the walk exhausts with a
+        # typed error whose cause chain is the deadline.
+        for sid in list(c.servers):
+            make_flaky_server(c, sid, {}, slow_every_n=1, delay_s=0.5)
+        with pytest.raises(ReplicaExhausted):
+            read_file(c.client(), "/t")
+        snap = c.health.snapshot()
+        assert snap["deadline_timeouts"] >= 1
+        # Slow is not dead: neither server was reported to the coordinator.
+        assert all(c.servers[sid].alive for sid in c.servers)
+    finally:
+        c.close()
+
+
+def test_latency_injection_is_deterministic(tmp_path):
+    c = Cluster(n_servers=1, data_dir=str(tmp_path), block_cache_bytes=0)
+    try:
+        flaky = make_flaky_server(c, 0, {}, slow_every_n=3, delay_s=0.0)
+        cl = write_file(c, "/s", b"s" * 1000)
+        for _ in range(5):
+            read_file(cl, "/s")
+        # Call numbering is per-op (shared with ``fail_on``): every 3rd
+        # call of each intercepted op sleeps, nothing else does.
+        assert sum(flaky.calls.values()) > 0
+        assert flaky.delayed == sum(n // 3 for n in flaky.calls.values())
+    finally:
+        c.close()
+
+
+def test_latency_injection_validates_knob(tmp_path):
+    c = Cluster(n_servers=1, data_dir=str(tmp_path))
+    try:
+        with pytest.raises(ValueError):
+            make_flaky_server(c, 0, {}, slow_every_n=0)
+    finally:
+        c.close()
+
+
+# ------------------------------------------------------------- repair plane
+def test_repair_restores_replication_after_kill(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024)
+    try:
+        files = {f"/r{i}": bytes([i]) * 25_000 for i in range(6)}
+        cl = c.client()
+        for path, payload in files.items():
+            with cl.open_file(path, "w") as f:
+                f.write(payload)
+        kill_server(c, 2)
+        daemon = RepairDaemon(c)
+        before = daemon.verify()
+        assert not before["replication_restored"]
+        assert before["lost"] == 0               # replication saved the data
+        daemon.repair_pass(full_scan=True)
+        after = daemon.verify()
+        assert after["replication_restored"], after
+        assert after["lost"] == 0
+        assert c.repair_stats.snapshot()["replicas_created"] > 0
+        # Byte-identity after repair, from a fresh client (no stale caches).
+        cl2 = c.client()
+        for path, payload in files.items():
+            with cl2.open_file(path, "r") as f:
+                assert f.read() == payload, path
+        # And the repaired sets survive the original server staying dead
+        # while ANOTHER server (one of the repair targets) restarts.
+        restart_server(c, 2)
+        assert daemon.verify()["replication_restored"]
+    finally:
+        c.close()
+
+
+def test_repair_ticket_path_without_full_scan(tmp_path):
+    """Reads that fail over past a dead replica file an inode-wide ticket,
+    and the ticket path alone (no periodic scan) restores replication."""
+    c = Cluster(n_servers=3, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024, block_cache_bytes=0)
+    try:
+        cl = c.client()
+        payload = b"tk" * 10_000
+        with cl.open_file("/tk", "w") as f:
+            f.write(payload)
+        kill_server(c, 0)
+        with cl.open_file("/tk", "r") as f:      # succeeds via failover...
+            assert f.read() == payload
+        # ...but if a replica was on the corpse, a ticket was filed.
+        tickets = [t for t in c.repair_queue.drain()]
+        for t in tickets:                        # put them back
+            c.repair_queue.put(t)
+        daemon = RepairDaemon(c)
+        summary = daemon.repair_pass(full_scan=False)
+        if tickets:
+            assert summary["tickets"] > 0
+            # The ticketed inode is fully re-replicated by the ticket path
+            # alone — no metadata-wide scan needed for fresh damage.
+            for t in tickets:
+                for key in daemon._walk_regions():
+                    if key[0] != t.inode_id:
+                        continue
+                    rd = c.kv.get("regions", key)
+                    for e in rd.entries:
+                        live = [p for p in e.ptrs
+                                if c.servers[p.server_id].alive]
+                        assert len(live) >= 2, (key, e)
+        # Other inodes (e.g. directory data never read) are the periodic
+        # scan's job — after one full scan the whole store is healed.
+        daemon.repair_pass(full_scan=True)
+        assert daemon.verify()["replication_restored"]
+    finally:
+        c.close()
+
+
+def test_repair_preserves_hot_cache_reads(tmp_path):
+    """After a crash + re-replication, hot re-reads through the SHARED
+    block cache and plan cache (lease cluster) stay byte-identical — the
+    canonical-pointer rule: stable when replica 0 survived, inode dropped
+    from the shared caches when it did not."""
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024, lease_ttl=30.0)
+    try:
+        files = {f"/hc{i}": bytes([64 + i]) * 30_000 for i in range(6)}
+        cl = c.client()
+        for path, payload in files.items():
+            with cl.open_file(path, "w") as f:
+                f.write(payload)
+        # Warm the shared caches.
+        for path, payload in files.items():
+            with cl.open_file(path, "r") as f:
+                assert f.read() == payload
+        assert len(c.shared_block_cache) > 0
+        kill_server(c, 1)
+        daemon = RepairDaemon(c)
+        daemon.repair_pass(full_scan=True)
+        assert daemon.verify()["replication_restored"]
+        # Hot re-reads through the same client and caches: byte-identical.
+        for path, payload in files.items():
+            with cl.open_file(path, "r") as f:
+                assert f.read() == payload, path
+        # Now lose a repair target too — surviving copies still serve.
+        stats = c.repair_stats.snapshot()
+        assert stats["extents_repaired"] > 0
+    finally:
+        c.close()
+
+
+def test_repair_daemon_background_thread(tmp_path):
+    c = Cluster(n_servers=4, data_dir=str(tmp_path), replication=2,
+                region_size=64 * 1024)
+    try:
+        cl = c.client()
+        with cl.open_file("/bg", "w") as f:
+            f.write(b"bg" * 10_000)
+        daemon = RepairDaemon(c, scan_every=1).start(interval_s=0.01)
+        kill_server(c, 0)
+        deadline_verify = RepairDaemon(c)
+        for _ in range(300):
+            if deadline_verify.verify()["replication_restored"]:
+                break
+            import time
+            time.sleep(0.01)
+        assert deadline_verify.verify()["replication_restored"]
+        daemon.stop()
+        daemon.stop()                            # idempotent
+    finally:
+        c.close()
+
+
+def test_subtract_interval():
+    from repro.core.repair import _subtract_interval
+    assert _subtract_interval([(0, 10)], 3, 5) == [(0, 3), (5, 10)]
+    assert _subtract_interval([(0, 10)], 0, 10) == []
+    assert _subtract_interval([(0, 4), (6, 10)], 2, 8) == [(0, 2), (8, 10)]
+    assert _subtract_interval([(0, 4)], 8, 9) == [(0, 4)]
+    assert _subtract_interval([], 0, 5) == []
+
+
+def test_unreplicated_loss_is_detected_and_counted(tmp_path):
+    """With replication=1 a server kill IS data loss: repair has no source
+    copy, ``unrepairable`` counts the visible extents, and verify reports
+    them as lost instead of pretending the scan was clean."""
+    c = Cluster(n_servers=2, data_dir=str(tmp_path), replication=1,
+                region_size=64 * 1024)
+    try:
+        cl = c.client()
+        for i in range(8):                       # lands on both servers
+            with cl.open_file(f"/u{i}", "w") as f:
+                f.write(bytes([i]) * 5_000)
+        kill_server(c, 0)
+        daemon = RepairDaemon(c)
+        daemon.repair_pass(full_scan=True)
+        v = daemon.verify()
+        assert v["lost"] > 0
+        assert not v["replication_restored"]
+        assert c.repair_stats.snapshot()["unrepairable"] > 0
+    finally:
+        c.close()
+
+
+def test_cluster_close_is_idempotent(tmp_path):
+    c = Cluster(n_servers=2, data_dir=str(tmp_path))
+    daemon = RepairDaemon(c).start(interval_s=0.01)
+    c.close()
+    c.close()                                    # second close: no-op
+    assert daemon._thread is None                # daemon was stopped
